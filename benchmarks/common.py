@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: CSV emit + paper-value validation."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def check(name: str, got: float, paper: float, tol: float) -> str:
+    rel = abs(got - paper) / abs(paper) if paper else float("inf")
+    status = "OK" if rel <= tol else "DIVERGES"
+    return (f"{name}: ours={got:.3f} paper={paper:.3f} "
+            f"rel_err={rel:.1%} [{status}]")
+
+
+def timeit(fn, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6

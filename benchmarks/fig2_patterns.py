@@ -1,0 +1,47 @@
+"""Paper Fig. 2: expert-selection patterns (Consecutive Layers /
+Consecutive Tokens) — measured on the calibrated trace process and
+checked against the paper's reported bands for Mixtral 8x7B:
+
+  * Consecutive Tokens: P(>=1 of top-2 repeats from t-1) in 40-60%/layer
+  * Consecutive Layers: ~44% same-id overlap with the previous layer
+  * run persistence: ~23% (t-2) / ~18% (t-3+) among repeating tokens
+  * baseline: chance overlap for E=8, K=2 is already 46.4% — reported so
+    the stickiness the cache exploits is visible above chance.
+"""
+from __future__ import annotations
+
+from math import comb
+
+from repro.core import TraceConfig, synthetic_trace, trace_stats
+from .common import emit
+
+
+def chance_overlap(E: int, K: int) -> float:
+    return 1.0 - comb(E - K, K) / comb(E, K)
+
+
+def main() -> None:
+    print("=== Fig. 2: router selection patterns ===")
+    for name, E, stick in (("mixtral-8x7b", 8, 0.10), ("phi35-moe", 16, 0.50)):
+        tc = TraceConfig(num_tokens=2000, num_layers=32, num_experts=E,
+                         stickiness=stick)
+        s = trace_stats(synthetic_trace(tc))
+        ch = chance_overlap(E, 2)
+        emit(f"{name}.consec_token_repeat", s["consec_token_repeat_mean"] * 1e6,
+             f"range=[{s['consec_token_repeat_min']:.3f},"
+             f"{s['consec_token_repeat_max']:.3f}] paper_band=[0.40,0.60] "
+             f"chance={ch:.3f}")
+        emit(f"{name}.consec_layer_repeat", s["consec_layer_repeat"] * 1e6,
+             "paper~0.44 (mixtral)")
+        emit(f"{name}.persist_t2|repeat", s["persist_t2_given_repeat"] * 1e6,
+             "paper~0.23 (mixtral)")
+        emit(f"{name}.persist_t3|repeat", s["persist_t3_given_repeat"] * 1e6,
+             "paper~0.18 (mixtral)")
+        if name == "mixtral-8x7b":
+            assert 0.40 <= s["consec_token_repeat_min"] and \
+                s["consec_token_repeat_max"] <= 0.65
+            assert 0.35 <= s["consec_layer_repeat"] <= 0.60
+
+
+if __name__ == "__main__":
+    main()

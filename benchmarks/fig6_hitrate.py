@@ -1,0 +1,90 @@
+"""Paper Fig. 6: expert-cache hit rates by configuration and eviction
+policy (LRU vs FIFO vs static-random + its closed form), for both models.
+
+Two modes: calibrated synthetic traces (default, matches the paper's
+measured router statistics) and --live, which captures real router
+decisions from a reduced repro model.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.config import CacheConfig
+from repro.core import (NumpyCache, TraceConfig, random_policy_hit_probs,
+                        synthetic_trace)
+from repro.core.costmodel import PAPER_TIMINGS
+from repro.core.simulator import best_cache_config
+from .common import emit
+
+TRACES = {
+    "mixtral-8x7b": TraceConfig(num_tokens=1500, num_layers=32, num_experts=8),
+    "phi35-moe": TraceConfig(num_tokens=1500, num_layers=32, num_experts=16,
+                             stickiness=0.50),
+}
+
+
+def run_policy(trace, ccfg: CacheConfig, num_experts: int):
+    c = NumpyCache(ccfg, num_experts=num_experts, seed=3)
+    anyh = both = 0
+    T, L, K = trace.shape
+    for t in range(T):
+        for l in range(L):
+            h = c.access(l, trace[t, l])
+            anyh += any(h)
+            both += all(h)
+    return anyh / (T * L), both / (T * L)
+
+
+def live_trace(steps: int = 200):
+    import jax
+    from repro.config import get_config, reduced
+    from repro.core.router_trace import capture_trace
+    from repro.models import init_params
+    cfg = reduced(get_config("mixtral-8x7b"))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (1, steps), 0, cfg.vocab_size)
+    return capture_trace(cfg, params, toks), cfg.moe.num_experts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--live", action="store_true",
+                    help="capture router trace from a live reduced model")
+    args, _ = ap.parse_known_args()
+
+    print("=== Fig. 6: hit rates by cache config x policy ===")
+    for name, tm in PAPER_TIMINGS.items():
+        trace = synthetic_trace(TRACES[name])
+        E = tm.num_experts
+        for m, ccfg in best_cache_config(tm).items():
+            tag = f"{name}.(N={ccfg.num_indexes},M={m})"
+            lru_any, lru_both = run_policy(
+                trace, CacheConfig(ccfg.num_indexes, m, "lru"), E)
+            fifo_any, _ = run_policy(
+                trace, CacheConfig(ccfg.num_indexes, m, "fifo"), E)
+            rnd_any, rnd_both = run_policy(
+                trace, CacheConfig(ccfg.num_indexes, m, "random"), E)
+            cf_any, cf_both = random_policy_hit_probs(E, m)
+            # coverage-weighted closed form (layers >= N always miss)
+            cov = min(ccfg.num_indexes, 32) / 32
+            emit(f"{tag}.lru_any", lru_any * 1e6,
+                 f"fifo={fifo_any:.3f} random={rnd_any:.3f} "
+                 f"closed_form={cf_any*cov:.3f} both_lru={lru_both:.3f}")
+            assert lru_any >= fifo_any - 0.02, "paper: LRU >= FIFO"
+            assert lru_any >= rnd_any - 0.02, "paper: LRU beats random"
+
+    if args.live:
+        trace, E = live_trace()
+        lru_any, _ = run_policy(
+            trace, CacheConfig(trace.shape[1], 2, "lru"), E)
+        rnd_any, _ = run_policy(
+            trace, CacheConfig(trace.shape[1], 2, "random"), E)
+        emit("live.mixtral_reduced.lru_any", lru_any * 1e6,
+             f"random={rnd_any:.3f} (untrained router: near-chance reuse)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Roofline report: reads results/dryrun/*.json (written by the dry-run)
+and renders the per-(arch x shape x mesh) three-term roofline table for
+EXPERIMENTS.md — compute / memory / collective seconds, dominant term,
+MODEL_FLOPS ratio, and a what-would-move-it note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+NOTES = {
+    ("memory", "train"): "raise arithmetic intensity: fuse/bf16 score "
+                         "traffic, larger matmul tiles, less remat recompute",
+    ("memory", "prefill"): "KV/score traffic dominates: bigger flash chunk, "
+                           "bf16 intermediates",
+    ("memory", "decode"): "weight+KV streaming bound (expected at batch<=128"
+                          "): raise batch or quantize weights/KV",
+    ("collective", "train"): "shrink ZeRO gathers (overlap with compute, "
+                             "quantized collectives) or reshard",
+    ("collective", "prefill"): "reshard attention/MoE boundary to cut "
+                               "all-to-all/all-gather volume",
+    ("collective", "decode"): "per-layer weight gathers dominate: cache "
+                              "hot weights (EP cache) or widen TP",
+    ("compute", "train"): "near roofline: tune remat policy / MXU tiling",
+    ("compute", "prefill"): "near roofline: tune flash chunking",
+    ("compute", "decode"): "compute-bound decode is unusual; check "
+                           "wasted expert compute",
+}
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        rows.append(d)
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    """Render the roofline table as markdown (EXPERIMENTS.md appendix)."""
+    rows = load(mesh)
+    out = [f"**Mesh {mesh}** (per-device terms, TPU v5e peaks; "
+           "mem = raw / TPU-adjusted GB):\n",
+           "| arch | shape | compute_s | memory_s | collective_s | bound | "
+           "MF/HLO | GB/dev | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("skipped"):
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | — | "
+                       f"— | skipped: full-attention long-context |")
+            continue
+        if not d.get("ok"):
+            out.append(f"| {d['arch']} | {d['shape']} | FAILED "
+                       f"{d.get('error','?')[:40]} |")
+            continue
+        r = d["roofline_s"]
+        m = d["memory"]
+        adj = m.get("tpu_adjusted_peak_gb", m["peak_per_device_gb"])
+        note = NOTES.get((d["bottleneck"], kind_of(d["shape"])), "")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute']:.2e} | "
+            f"{r['memory']:.2e} | {r['collective']:.2e} | "
+            f"{d['bottleneck']} | {d['useful_flops_ratio']:.3f} | "
+            f"{m['peak_per_device_gb']:.1f}/{adj:.1f} | {note[:46]} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import sys
+    if "--markdown" in sys.argv:
+        for mesh in ("16x16", "2x16x16"):
+            print(markdown_table(mesh))
+            print()
+        return
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            print(f"(no dry-run results for {mesh} yet)")
+            continue
+        print(f"\n=== Roofline: mesh {mesh} "
+              f"(v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI) ===")
+        hdr = (f"{'arch':<26s}{'shape':<12s}{'comp_s':>10s}{'mem_s':>10s}"
+               f"{'coll_s':>10s}{'bound':>7s}{'MF/HLO':>7s}{'GB/dev':>8s} ok")
+        print(hdr)
+        for d in rows:
+            if d.get("skipped"):
+                print(f"{d['arch']:<26s}{d['shape']:<12s}"
+                      f"{'— skipped (full-attention long-context)':>44s}")
+                continue
+            if not d.get("ok"):
+                print(f"{d['arch']:<26s}{d['shape']:<12s}  FAILED: "
+                      f"{d.get('error', '?')[:60]}")
+                continue
+            r = d["roofline_s"]
+            print(f"{d['arch']:<26s}{d['shape']:<12s}"
+                  f"{r['compute']:>10.3e}{r['memory']:>10.3e}"
+                  f"{r['collective']:>10.3e}{d['bottleneck'][:6]:>7s}"
+                  f"{d['useful_flops_ratio']:>7.3f}"
+                  f"{d['memory']['peak_per_device_gb']:>8.2f}  "
+                  f"{'Y' if d['ok'] else 'N'}")
+        if mesh == "16x16":
+            print("\nper-cell bottleneck notes:")
+            for d in rows:
+                if d.get("skipped") or not d.get("ok"):
+                    continue
+                note = NOTES.get((d["bottleneck"], kind_of(d["shape"])), "")
+                print(f"  {d['arch']} x {d['shape']}: {d['bottleneck']}-bound"
+                      f" -> {note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark entry point: one section per paper table/figure + kernels +
+the dry-run roofline summary. Prints ``name,us_per_call,derived`` CSV rows
+plus validation lines against the paper's reported numbers.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from . import (fig2_patterns, fig5_throughput, fig6_hitrate,
+                   kernels_micro, table1_compute_comm, table5_energy)
+    sections = [table1_compute_comm, fig2_patterns, fig5_throughput,
+                fig6_hitrate, table5_energy, kernels_micro]
+    if not args.skip_roofline:
+        from . import roofline
+        sections.append(roofline)
+
+    failures = 0
+    for mod in sections:
+        print(f"\n########## {mod.__name__} ##########")
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 — report all sections
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        print(f"\n{failures} benchmark section(s) failed", file=sys.stderr)
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Train a ~100M-param MoE LM for a few hundred steps on the full stack:
+sort-based dispatch MoE, AdamW+ZeRO path, remat, async checkpointing.
+
+    PYTHONPATH=src python examples/train_moe.py [--steps 300]
+
+A ~100M config of the qwen3-moe family (16 experts, top-2). Loss should
+drop well below the uniform baseline ln(vocab)≈8.0 within a few hundred
+steps; MoE aux loss stays near 1.0 (balanced routing).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.config import MoEConfig, OptimizerConfig, ShapeConfig, get_config
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.optim import init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    args = ap.parse_args()
+
+    base = get_config("qwen3-moe-30b-a3b")
+    cfg = dataclasses.replace(
+        base, num_layers=6, d_model=512, num_heads=8, num_kv_heads=4,
+        head_dim=64, vocab_size=4096, max_seq_len=args.seq,
+        moe=MoEConfig(num_experts=16, top_k=2, d_ff=512))
+    print(f"[train_moe] params={cfg.param_count()/1e6:.1f}M "
+          f"active={cfg.param_count(active_only=True)/1e6:.1f}M")
+
+    shape = ShapeConfig("ex", args.seq, args.batch, "train")
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    data = SyntheticLM(cfg, shape)
+    step = jax.jit(make_train_step(cfg, ocfg), donate_argnums=(0, 1))
+    mgr = CheckpointManager("/tmp/repro_moe_ckpt", keep=2)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, m = step(params, opt, batch)
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d} loss={float(m['loss']):.4f} "
+                  f"xent={float(m['xent']):.4f} aux={float(m['aux']):.3f}",
+                  flush=True)
+        if (i + 1) % 100 == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt})
+    mgr.wait()
+    dt = time.time() - t0
+    print(f"[train_moe] {args.steps} steps in {dt:.0f}s "
+          f"({args.steps*args.batch*args.seq/dt:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

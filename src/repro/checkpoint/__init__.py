@@ -1,0 +1,5 @@
+from .ckpt import (CheckpointManager, load_checkpoint, save_checkpoint,
+                   reshard_tree)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "reshard_tree"]

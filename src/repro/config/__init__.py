@@ -1,0 +1,9 @@
+from .base import (CacheConfig, ModelConfig, MoEConfig, OptimizerConfig,
+                   RuntimeConfig, SHAPES, ShapeConfig, SSMConfig, reduced)
+from .registry import get_config, list_archs, register
+
+__all__ = [
+    "CacheConfig", "ModelConfig", "MoEConfig", "OptimizerConfig",
+    "RuntimeConfig", "SHAPES", "ShapeConfig", "SSMConfig", "reduced",
+    "get_config", "list_archs", "register",
+]

@@ -1,0 +1,49 @@
+"""Architecture registry: maps ``--arch`` ids to ModelConfig factories."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from .base import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+# All modules under repro.configs that register an architecture.
+_CONFIG_MODULES = [
+    "gemma3_4b",
+    "smollm_360m",
+    "qwen2_72b",
+    "mistral_nemo_12b",
+    "qwen3_moe_30b_a3b",
+    "llama4_maverick_400b_a17b",
+    "seamless_m4t_large_v2",
+    "jamba_v0_1_52b",
+    "qwen2_vl_7b",
+    "mamba2_370m",
+    "mixtral_8x7b",
+    "phi35_moe",
+]
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def _ensure_loaded() -> None:
+    for mod in _CONFIG_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

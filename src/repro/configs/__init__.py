@@ -1,0 +1,2 @@
+# Architecture configs. Each module registers itself with
+# repro.config.registry; use repro.config.get_config("<arch-id>").

@@ -1,0 +1,125 @@
+"""The paper's expert cache: N-index, M-way set-associative, pure JAX.
+
+One cache *set* (index) per MoE layer 0..N-1; M expert-weight slots per
+set (paper §III-B: S = mem/expert_bytes slots total, N = floor(S/M)).
+State is three small arrays, so every operation is branchless and
+jit/scan-compatible — the cache lives inside the serving step:
+
+  tags  [N, M] int32 — resident expert id per slot, -1 = empty
+  age   [N, M] int32 — last-access clock (LRU) / insertion clock (FIFO)
+  clock []     int32 — global access counter
+
+Policies (paper §IV-D):
+  lru    — refresh age on hit and insert; evict min-age way.
+  fifo   — age set on insert only; evict min-age way.
+  random — the paper's static-random baseline: a fixed random expert set is
+           pinned at init and never replaced (hit rates then follow the
+           closed-form equations of §IV-D, which tests verify exactly).
+
+Layers >= N are beyond cache coverage (paper's "layer Z"): accesses miss
+and inserts are suppressed — handled branchlessly so the layer index may
+be a traced scan counter.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CacheConfig
+
+
+class CacheState(NamedTuple):
+    tags: jax.Array
+    age: jax.Array
+    clock: jax.Array
+
+    @property
+    def num_indexes(self) -> int:
+        return self.tags.shape[0]
+
+    @property
+    def num_ways(self) -> int:
+        return self.tags.shape[1]
+
+
+def init_cache_state(ccfg: CacheConfig, num_experts: int = 0,
+                     key=None) -> CacheState:
+    tags = jnp.full((ccfg.num_indexes, ccfg.num_ways), -1, jnp.int32)
+    if ccfg.policy == "random":
+        assert key is not None and num_experts > 0, \
+            "static-random policy needs a key and the expert count"
+        # pin M distinct random experts per set, fixed forever
+        def pick(k):
+            return jax.random.permutation(k, num_experts)[:ccfg.num_ways]
+        tags = jax.vmap(pick)(jax.random.split(key, ccfg.num_indexes)).astype(jnp.int32)
+    age = jnp.zeros((ccfg.num_indexes, ccfg.num_ways), jnp.int32)
+    return CacheState(tags=tags, age=age, clock=jnp.zeros((), jnp.int32))
+
+
+def lookup(state: CacheState, layer: jax.Array, experts: jax.Array
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Read-only probe. experts: [A] -> (hit [A] bool, way [A] int32)."""
+    n = state.num_indexes
+    row = jnp.where(layer < n, layer, 0)
+    tags_l = jax.lax.dynamic_index_in_dim(state.tags, row, 0, keepdims=False)
+    eq = tags_l[None, :] == experts[:, None]            # [A, M]
+    hit = eq.any(axis=1) & (layer < n) & (experts[:, None] >= 0).any(axis=1)
+    way = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    return hit, way
+
+
+def access(state: CacheState, layer: jax.Array, experts: jax.Array,
+           policy: str) -> Tuple[CacheState, jax.Array, jax.Array]:
+    """Probe + update for one layer's required experts (sequential
+    semantics over ``experts``, matching a hardware cache servicing the
+    router's picks in order).
+
+    experts: [A] int32 (may contain duplicates; dup hits refresh age once
+    more, as in the paper's implementation). Returns (new state,
+    hit [A] bool — hit *before* any insertion this call, way [A] int32 —
+    the slot each expert resides in afterwards; for `random` policy missed
+    experts get way=-1 since nothing is inserted).
+    """
+    n, m = state.num_indexes, state.num_ways
+    covered = layer < n
+    row = jnp.where(covered, layer, 0)
+
+    def step(carry, e):
+        tags, age, clock = carry
+        tags_l = jax.lax.dynamic_index_in_dim(tags, row, 0, keepdims=False)
+        age_l = jax.lax.dynamic_index_in_dim(age, row, 0, keepdims=False)
+        eq = tags_l == e
+        hit = eq.any() & covered
+        hit_way = jnp.argmax(eq).astype(jnp.int32)
+
+        if policy == "random":
+            way = jnp.where(hit, hit_way, -1)
+            return (tags, age, clock), (hit, way)
+
+        # victim: empty slots win (score -1), else least-recently-used/inserted
+        victim_score = jnp.where(tags_l < 0, -1, age_l)
+        victim = jnp.argmin(victim_score).astype(jnp.int32)
+        way = jnp.where(hit, hit_way, victim)
+
+        do_write = covered & (e >= 0)
+        new_tag = jnp.where(do_write, e, tags_l[way])
+        # LRU refreshes age on hit and insert; FIFO only stamps on insert.
+        refresh = (do_write & ~hit) if policy == "fifo" else do_write
+        new_age = jnp.where(refresh, clock, age_l[way])
+
+        tags_l = tags_l.at[way].set(new_tag)
+        age_l = age_l.at[way].set(new_age)
+        tags = jax.lax.dynamic_update_index_in_dim(tags, tags_l, row, 0)
+        age = jax.lax.dynamic_update_index_in_dim(age, age_l, row, 0)
+        return (tags, age, clock + 1), (hit, jnp.where(do_write, way, -1))
+
+    (tags, age, clock), (hits, ways) = jax.lax.scan(
+        step, (state.tags, state.age, state.clock), experts)
+    return CacheState(tags, age, clock), hits, ways
+
+
+def slot_id(layer: jax.Array, way: jax.Array, num_ways: int) -> jax.Array:
+    """Flat slot index into the [N*M, ...] cache weight buffer."""
+    return layer * num_ways + way

@@ -1,0 +1,271 @@
+"""Two-tier collaborative MoE execution — the paper's workflow (Fig. 4).
+
+Per MoE layer of a decode step:
+
+  (1) cache check    — probe the set-associative cache for the router's
+                       top-k experts (repro.core.cache, inside the jit).
+  (2) execute        — hit experts compute from the *device tier* (the
+                       [N*M, ...] cache slot buffer in fast memory); missed
+                       experts compute from the *host tier* (full expert
+                       table, host memory space on real hardware).
+  (3) post-fetch     — missed experts' weights are written into their
+                       assigned cache slots. The write feeds only *future*
+                       steps (no data path to this layer's output), so XLA
+                       overlaps the copy with downstream compute — the TPU
+                       analogue of the paper's second copy engine / dual
+                       CUDA streams.
+
+All state (CacheState + slot buffer) threads functionally through the
+serving step; donate both so the updates are in-place on device.
+
+TPU note: on real hardware ``host`` lives in pinned host memory
+(``jax.device_put(..., TransferToMemoryKind("pinned_host"))``); on this CPU
+container both tiers are ordinary buffers and the *cost model*
+(repro.core.costmodel) carries the performance semantics.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CacheConfig, ModelConfig
+from . import cache as cache_lib
+
+Params = Dict[str, jax.Array]
+
+
+class ExpertTiers(NamedTuple):
+    """The two memory tiers for one model's MoE expert weights.
+
+    host_*: [L_moe, E, ...] — the full expert table (slow tier).
+    slot_*: [N*M, ...]      — the device cache slot buffer (fast tier).
+    state : CacheState      — tags/age/clock.
+    """
+    host_w1: jax.Array     # [L, E, D, F]
+    host_w3: jax.Array
+    host_w2: jax.Array     # [L, E, F, D]
+    slot_w1: jax.Array     # [N*M, D, F]
+    slot_w3: jax.Array
+    slot_w2: jax.Array     # [N*M, F, D]
+    state: cache_lib.CacheState
+
+
+def offload_host_tier(tiers: ExpertTiers, device=None) -> ExpertTiers:
+    """Place the host-tier expert table in the `pinned_host` memory space.
+
+    This is the literal JAX expression of the paper's slow tier: the full
+    expert table leaves accelerator HBM; hit-path reads touch only the
+    HBM-resident slot buffers, miss-path reads stream over the host link.
+    (Works on CPU and TPU backends; on TPU this is host DRAM over PCIe.)
+    """
+    import jax
+    from jax.sharding import SingleDeviceSharding
+    dev = device or jax.devices()[0]
+    s = SingleDeviceSharding(dev, memory_kind="pinned_host")
+    return tiers._replace(
+        host_w1=jax.device_put(tiers.host_w1, s),
+        host_w3=jax.device_put(tiers.host_w3, s),
+        host_w2=jax.device_put(tiers.host_w2, s),
+    )
+
+
+def init_tiers(host_w1, host_w3, host_w2, ccfg: CacheConfig,
+               num_experts: int = 0, key=None) -> ExpertTiers:
+    S = ccfg.num_slots
+    D, F = host_w1.shape[-2], host_w1.shape[-1]
+    state = cache_lib.init_cache_state(ccfg, num_experts, key)
+    tiers = ExpertTiers(
+        host_w1=host_w1, host_w3=host_w3, host_w2=host_w2,
+        slot_w1=jnp.zeros((S, D, F), host_w1.dtype),
+        slot_w3=jnp.zeros((S, D, F), host_w3.dtype),
+        slot_w2=jnp.zeros((S, F, D), host_w2.dtype),
+        state=state,
+    )
+    if ccfg.policy == "random":
+        # static placement: preload the pinned experts once
+        tiers = _preload_static(tiers, ccfg)
+    return tiers
+
+
+def _preload_static(tiers: ExpertTiers, ccfg: CacheConfig) -> ExpertTiers:
+    n, m = ccfg.num_indexes, ccfg.num_ways
+    layers = jnp.repeat(jnp.arange(n), m)
+    experts = tiers.state.tags.reshape(-1)
+    w1 = tiers.host_w1[layers, experts]
+    w3 = tiers.host_w3[layers, experts]
+    w2 = tiers.host_w2[layers, experts]
+    return tiers._replace(slot_w1=w1, slot_w3=w3, slot_w2=w2)
+
+
+def _ffn_one(w1, w3, w2, x):
+    """SwiGLU expert FFN for one token row x: [D]."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def collaborative_moe(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
+                      top_i: jax.Array, top_w: jax.Array, ccfg: CacheConfig
+                      ) -> Tuple[jax.Array, ExpertTiers, Dict[str, jax.Array]]:
+    """Execute one MoE layer for a decode micro-batch through the tiers.
+
+    x: [T, D]; top_i/top_w: [T, K]. layer: traced scalar (the scan
+    counter). Returns (y [T, D], updated tiers, stats).
+    """
+    T, K = top_i.shape
+    A = T * K
+    flat_e = top_i.reshape(-1)
+
+    # (1) cache check + bookkeeping update (tags/age; sequential semantics)
+    new_state, hits, ways = cache_lib.access(tiers.state, layer, flat_e,
+                                             ccfg.policy)
+    slots = cache_lib.slot_id(layer, jnp.maximum(ways, 0), ccfg.num_ways)
+    slots = jnp.where(ways >= 0, slots, 0)
+
+    # (2) execute: hit experts read the device slot buffer, missed experts
+    # read the host tier. Both paths are dense gathers so the program stays
+    # branchless; `hits` selects per assignment.
+    tok = jnp.repeat(jnp.arange(T), K)
+    xa = x[tok]                                            # [A, D]
+    w1_dev = tiers.slot_w1[slots]
+    w3_dev = tiers.slot_w3[slots]
+    w2_dev = tiers.slot_w2[slots]
+    w1_host = tiers.host_w1[layer, flat_e]
+    w3_host = tiers.host_w3[layer, flat_e]
+    w2_host = tiers.host_w2[layer, flat_e]
+
+    y_dev = jax.vmap(_ffn_one)(w1_dev, w3_dev, w2_dev, xa)      # GPU path
+    y_host = jax.vmap(_ffn_one)(w1_host, w3_host, w2_host, xa)  # CPU path
+    ya = jnp.where(hits[:, None], y_dev, y_host)
+    ya = ya * top_w.reshape(-1)[:, None].astype(ya.dtype)
+    y = jnp.zeros_like(x).at[tok].add(ya)
+
+    # (3) post-fetch: write missed experts' weights into their slots.
+    # Output `y` does not depend on these writes -> async-schedulable.
+    do_fetch = (~hits) & (ways >= 0)
+
+    def fetch(carry, inp):
+        s_w1, s_w3, s_w2 = carry
+        slot, e, do = inp
+        src1 = tiers.host_w1[layer, e]
+        src3 = tiers.host_w3[layer, e]
+        src2 = tiers.host_w2[layer, e]
+        upd = lambda buf, src: jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(do, src, buf[slot]), slot, 0)
+        return (upd(s_w1, src1), upd(s_w3, src3), upd(s_w2, src2)), None
+
+    (s_w1, s_w3, s_w2), _ = jax.lax.scan(
+        fetch, (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2),
+        (slots, flat_e, do_fetch))
+
+    stats = {
+        "hits": hits.sum(),
+        "accesses": jnp.asarray(A, jnp.int32),
+        "host_flops_assignments": (~hits).sum(),
+        "fetched_experts": do_fetch.sum(),
+    }
+    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
+                           state=new_state)
+    return y, tiers, stats
+
+
+def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
+                                x: jax.Array, top_i: jax.Array,
+                                top_w: jax.Array, ccfg: CacheConfig
+                                ) -> Tuple[jax.Array, ExpertTiers,
+                                           Dict[str, jax.Array]]:
+    """The paper's workflow with *literal* memory-space semantics.
+
+    Requires ``offload_host_tier(tiers)`` first (host weights in the
+    ``pinned_host`` space). Then, inside one jitted step:
+      * miss-path expert FFNs execute under ``compute_on("device_host")``
+        reading host-space weights — the paper's CPU compute;
+      * the activation rows cross to host and the results cross back —
+        the paper's 0.11 ms activation round-trip;
+      * post-fetch gathers missed experts' weights host-side and
+        device_puts them into the cache slot buffers — the paper's
+        asynchronous PCIe weight copy (XLA schedules it off the output's
+        critical path exactly as in the default implementation).
+
+    Same numerics as :func:`collaborative_moe` (tested); use this variant
+    on hardware where the host tier genuinely does not fit HBM.
+    """
+    from jax.experimental.compute_on import compute_on
+    from jax.sharding import SingleDeviceSharding
+
+    # single-device serving path (the paper's setting); must run under
+    # jit — memory-space transfers are compile-time placements
+    dev = jax.devices()[0]
+    host_s = SingleDeviceSharding(dev, memory_kind="pinned_host")
+    dev_s = SingleDeviceSharding(dev, memory_kind="device")
+
+    T, K = top_i.shape
+    A = T * K
+    flat_e = top_i.reshape(-1)
+    new_state, hits, ways = cache_lib.access(tiers.state, layer, flat_e,
+                                             ccfg.policy)
+    slots = cache_lib.slot_id(layer, jnp.maximum(ways, 0), ccfg.num_ways)
+    slots = jnp.where(ways >= 0, slots, 0)
+    tok = jnp.repeat(jnp.arange(T), K)
+    xa = x[tok]
+
+    # device path (cache hits): reads only the HBM slot buffers
+    y_dev = jax.vmap(_ffn_one)(tiers.slot_w1[slots], tiers.slot_w3[slots],
+                               tiers.slot_w2[slots], xa)
+
+    # host path (misses): activations cross to host, FFN runs there
+    @compute_on("device_host")
+    @jax.jit
+    def host_path(hw1, hw3, hw2, xh, eh, lh):
+        # two-step indexing: mixed-space index broadcasting inside
+        # compute_on trips XLA; dynamic layer slice + row gather doesn't
+        w1 = jax.lax.dynamic_index_in_dim(hw1, lh, 0, keepdims=False)[eh]
+        w3 = jax.lax.dynamic_index_in_dim(hw3, lh, 0, keepdims=False)[eh]
+        w2 = jax.lax.dynamic_index_in_dim(hw2, lh, 0, keepdims=False)[eh]
+        return jax.vmap(_ffn_one)(w1, w3, w2, xh)
+
+    xa_h = jax.device_put(xa, host_s)
+    e_h = jax.device_put(flat_e, host_s)
+    l_h = jax.device_put(layer, host_s)
+    y_host = jax.device_put(
+        host_path(tiers.host_w1, tiers.host_w3, tiers.host_w2,
+                  xa_h, e_h, l_h), dev_s)
+
+    ya = jnp.where(hits[:, None], y_dev, y_host)
+    ya = ya * top_w.reshape(-1)[:, None].astype(ya.dtype)
+    y = jnp.zeros_like(x).at[tok].add(ya)
+
+    # post-fetch: host-side gather of the missed experts, then the
+    # explicit host->device copy into the cache slots
+    do_fetch = (~hits) & (ways >= 0)
+
+    @compute_on("device_host")
+    @jax.jit
+    def host_gather(hw, eh, lh):
+        return jax.lax.dynamic_index_in_dim(hw, lh, 0, keepdims=False)[eh]
+
+    src1 = jax.device_put(host_gather(tiers.host_w1, e_h, l_h), dev_s)
+    src3 = jax.device_put(host_gather(tiers.host_w3, e_h, l_h), dev_s)
+    src2 = jax.device_put(host_gather(tiers.host_w2, e_h, l_h), dev_s)
+
+    def fetch(carry, inp):
+        s_w1, s_w3, s_w2 = carry
+        slot, do, a1, a3, a2 = inp
+        upd = lambda buf, src: jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(do, src, buf[slot]), slot, 0)
+        return (upd(s_w1, a1), upd(s_w3, a3), upd(s_w2, a2)), None
+
+    (s_w1, s_w3, s_w2), _ = jax.lax.scan(
+        fetch, (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2),
+        (slots, do_fetch, src1, src3, src2))
+
+    stats = {
+        "hits": hits.sum(),
+        "accesses": jnp.asarray(A, jnp.int32),
+        "host_flops_assignments": (~hits).sum(),
+        "fetched_experts": do_fetch.sum(),
+    }
+    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
+                           state=new_state)
+    return y, tiers, stats

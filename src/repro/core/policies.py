@@ -1,0 +1,82 @@
+"""Numpy twin of the JAX expert cache, for trace-scale simulation.
+
+Semantics are bit-identical to repro.core.cache (property tests replay
+random traces through both). Used by the discrete-event simulator, which
+feeds it millions of router decisions — far cheaper here than under jit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import CacheConfig
+
+
+@dataclass
+class NumpyCache:
+    ccfg: CacheConfig
+    num_experts: int = 0
+    seed: int = 0
+    tags: np.ndarray = field(init=False)
+    age: np.ndarray = field(init=False)
+    clock: int = field(init=False, default=0)
+    hits: int = field(init=False, default=0)
+    accesses: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        n, m = self.ccfg.num_indexes, self.ccfg.num_ways
+        self.tags = np.full((n, m), -1, np.int64)
+        self.age = np.zeros((n, m), np.int64)
+        if self.ccfg.policy == "random":
+            rng = np.random.default_rng(self.seed)
+            assert self.num_experts >= m
+            for i in range(n):
+                self.tags[i] = rng.permutation(self.num_experts)[:m]
+
+    def access(self, layer: int, experts) -> List[bool]:
+        """Sequentially service one layer's expert picks; returns hit flags."""
+        out = []
+        n, m = self.tags.shape
+        covered = layer < n
+        for e in experts:
+            self.accesses += 1
+            if not covered or e < 0:
+                out.append(False)
+                continue
+            row_t, row_a = self.tags[layer], self.age[layer]
+            ways = np.nonzero(row_t == e)[0]
+            hit = ways.size > 0
+            out.append(bool(hit))
+            self.hits += int(hit)
+            if self.ccfg.policy == "random":
+                continue
+            if hit:
+                way = ways[0]
+                if self.ccfg.policy == "lru":
+                    row_a[way] = self.clock
+            else:
+                empty = np.nonzero(row_t < 0)[0]
+                way = empty[0] if empty.size else int(np.argmin(row_a))
+                row_t[way] = e
+                row_a[way] = self.clock
+            self.clock += 1
+        return out
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.accesses, 1)
+
+
+def random_policy_hit_probs(num_experts: int, num_ways: int,
+                            top_k: int = 2) -> Tuple[float, float]:
+    """Paper §IV-D closed forms for the static-random cache (top-2):
+
+    P(>=1 of 2 experts hit) = 1 - (n-M)/n * (n-M-1)/(n-1)
+    P(both hit)             = M/n * (M-1)/(n-1)
+    """
+    n, M = num_experts, num_ways
+    p_any = 1.0 - ((n - M) / n) * ((n - M - 1) / (n - 1))
+    p_both = (M / n) * ((M - 1) / (n - 1))
+    return p_any, p_both

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with an
+# ops.py jit wrapper and a ref.py pure-jnp oracle (validated in interpret
+# mode on CPU; see tests/test_kernels_*.py):
+#   moe_gmm/          grouped expert matmul + fused SwiGLU gate
+#   decode_attention/ flash-decode over long KV caches
+#   ssd_scan/         Mamba2 SSD chunked scan (state held in VMEM)

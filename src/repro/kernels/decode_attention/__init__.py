@@ -1,0 +1,5 @@
+from .decode_attention import flash_decode
+from .ops import decode_attention
+from . import ref
+
+__all__ = ["flash_decode", "decode_attention", "ref"]

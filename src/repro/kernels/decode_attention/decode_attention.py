@@ -1,0 +1,98 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Decode attention at 32k-500k context is purely HBM-bandwidth-bound on the
+KV cache stream. The kernel tiles the sequence axis; grid is
+
+  (B, Hk, S/bs)   with the S axis innermost (sequential),
+
+keeping per-(batch, kv-head) online-softmax state (m, l, acc) in VMEM
+scratch across S steps — the classic flash-decode single-pass scheme. The
+q block [group, hd] stays resident; each step streams one [bs, hd] K tile
+and V tile through VMEM. Position/window masking is computed from the
+grid coordinate with an iota, so arbitrary cache fill levels work.
+
+Block choice: bs=512 rows of (hd=128) bf16 = 128 KiB per K/V tile; with
+double buffering ~512 KiB VMEM — far under budget, and wide enough that
+the HBM stream hits peak bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bs: int, n_s: int, window: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)              # [group, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bs, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    scale = q.shape[-1] ** -0.5
+    s = jnp.dot(q * scale, k.T,
+                preferred_element_type=jnp.float32)   # [group, bs]
+    j = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = j <= pos
+    if window > 0:
+        valid &= j > pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [group, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+                 *, window: int = -1, bs: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """q: [B, H, hd]; k/v: [B, S, Hk, hd]; pos: [1] int32 -> [B, H, hd]."""
+    B, H, hd = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    group = H // Hk
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    n_s = S // bs
+    qg = q.reshape(B, Hk, group, hd)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bs=bs, n_s=n_s, window=window),
+        grid=(B, Hk, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # pos
+            pl.BlockSpec((1, 1, group, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, group, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, hd)

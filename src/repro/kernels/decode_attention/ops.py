@@ -1,0 +1,19 @@
+"""Jitted wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import flash_decode
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("window",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, window: int = -1) -> jax.Array:
+    """q: [B, H, hd]; k/v: [B, S, Hk, hd]; pos: scalar int32."""
+    return flash_decode(q, k, v, jnp.reshape(pos, (1,)), window=window,
+                        interpret=INTERPRET)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash-decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, window: int = -1) -> jax.Array:
+    """One-token GQA attention over a KV cache.
+
+    q: [B, H, hd]; k/v: [B, S, Hk, hd]; pos: scalar — entries j <= pos are
+    valid (the new token's kv is assumed already written at slot pos).
+    window > 0 additionally masks j < pos - window + 1. Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    group = H // Hk
+    qg = q.reshape(B, Hk, group, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32))
+    j = jnp.arange(S)
+    valid = j <= pos
+    if window > 0:
+        valid &= j > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .moe_gmm import gmm, swiglu_gmm
+from .ops import grouped_matmul, moe_ffn
+from . import ref
+
+__all__ = ["gmm", "swiglu_gmm", "grouped_matmul", "moe_ffn", "ref"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the grouped expert matmul kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped matmul: x [E, C, D] @ w [E, D, F] -> [E, C, F] (fp32 acc)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_gmm_ref(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
+    """Fused gate: silu(x@w1) * (x@w3), grouped. [E,C,D]x[E,D,F] -> [E,C,F]."""
+    a = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w1.astype(jnp.float32))
+    b = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w3.astype(jnp.float32))
+    return (jax.nn.silu(a) * b).astype(x.dtype)
+
+
+def moe_ffn_ref(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                w2: jax.Array) -> jax.Array:
+    """Full grouped SwiGLU expert FFN. [E,C,D] -> [E,C,D]."""
+    h = swiglu_gmm_ref(x, w1, w3)
+    return gmm_ref(h, w2)

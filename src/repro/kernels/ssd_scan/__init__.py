@@ -1,0 +1,5 @@
+from .ssd_scan import ssd_scan
+from .ops import ssd_chunked_kernel
+from . import ref
+
+__all__ = ["ssd_scan", "ssd_chunked_kernel", "ref"]

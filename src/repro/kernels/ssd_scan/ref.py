@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (one chunk)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(a_cs: jax.Array, x: jax.Array, B: jax.Array, C: jax.Array,
+                  h_in: jax.Array):
+    """One SSD chunk, one head group.
+
+    a_cs: [Q] cumulative log-decay; x: [Q, hp] (already dt-scaled);
+    B, C: [Q, ds]; h_in: [ds, hp] incoming state.
+    Returns (y [Q, hp], h_out [ds, hp]).
+    """
+    Q = a_cs.shape[0]
+    scores = (C @ B.T).astype(jnp.float32)                     # [Q, Q]
+    diff = a_cs[:, None] - a_cs[None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    y = (scores * L) @ x.astype(jnp.float32)                   # intra
+    y = y + jnp.exp(a_cs)[:, None] * (C.astype(jnp.float32) @
+                                      h_in.astype(jnp.float32))
+    decay_end = jnp.exp(a_cs[-1] - a_cs)
+    h_out = jnp.exp(a_cs[-1]) * h_in.astype(jnp.float32) + \
+        (B * decay_end[:, None]).astype(jnp.float32).T @ x.astype(jnp.float32)
+    return y.astype(x.dtype), h_out.astype(jnp.float32)
+
+
+def ssd_multi_chunk_ref(a: jax.Array, x: jax.Array, B: jax.Array,
+                        C: jax.Array, h0: jax.Array):
+    """Sequential chunks for a single head: a [Nc, Q], x [Nc, Q, hp],
+    B/C [Nc, Q, ds], h0 [ds, hp] -> (y [Nc, Q, hp], h [ds, hp])."""
+    h = h0
+    ys = []
+    for c in range(a.shape[0]):
+        a_cs = jnp.cumsum(a[c])
+        y, h = ssd_chunk_ref(a_cs, x[c], B[c], C[c], h)
+        ys.append(y)
+    return jnp.stack(ys), h

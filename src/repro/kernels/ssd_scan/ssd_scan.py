@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (state-space duality).
+
+Fuses, per (batch, head) and per chunk:
+  * the intra-chunk quadratic term (scores ∘ decay) @ x  — MXU matmuls,
+  * the inter-chunk state contribution C @ h,
+  * the state update h' = exp(A_chunk) h + (B ∘ decay)^T x,
+
+with the running state h [ds, hp] held in VMEM scratch across the chunk
+grid axis — the recurrence never round-trips HBM, which is the entire
+point: the XLA fallback carries h through a lax.scan whose per-chunk
+state store/load dominates the layer's HBM traffic at long sequence.
+
+Grid: (B*nh, S/Q) with the chunk axis innermost/sequential. Blocks:
+a [1,Q], x [1,Q,hp], Bm/Cm [1,Q,ds] stream per chunk; scratch h is
+[ds, hp] f32 (128x64 = 32 KiB — negligible VMEM).
+
+Alignment: Q (chunk) is 128-multiple; hp=64 and ds=128 are the mamba2
+defaults and MXU-friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+                *, n_chunks: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0, 0].astype(jnp.float32)              # [Q]
+    x = x_ref[0, 0].astype(jnp.float32)              # [Q, hp]
+    Bm = b_ref[0, 0].astype(jnp.float32)             # [Q, ds]
+    Cm = c_ref[0, 0].astype(jnp.float32)             # [Q, ds]
+    Q = a.shape[0]
+
+    a_cs = jnp.cumsum(a)                             # [Q]
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
+    diff = a_cs[:, None] - a_cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    y = jnp.dot(scores * L, x, preferred_element_type=jnp.float32)
+    h = h_ref[...]
+    y = y + jnp.exp(a_cs)[:, None] * jnp.dot(
+        Cm, h, preferred_element_type=jnp.float32)
+
+    decay_end = jnp.exp(a_cs[-1] - a_cs)             # [Q]
+    h_ref[...] = jnp.exp(a_cs[-1]) * h + jnp.dot(
+        (Bm * decay_end[:, None]).T, x, preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _flush():
+        hout_ref[0] = h_ref[...]
+
+
+def ssd_scan(a: jax.Array, x: jax.Array, Bm: jax.Array, Cm: jax.Array,
+             *, chunk: int = 128, interpret: bool = False):
+    """a: [G, S] log-decays; x: [G, S, hp] (dt-scaled); Bm/Cm: [G, S, ds]
+    with G = batch*heads folded. Returns (y [G, S, hp], h [G, ds, hp])."""
+    G, S = a.shape
+    hp, ds = x.shape[-1], Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    n = S // Q
+    ac = a.reshape(G, n, Q)
+    xc = x.reshape(G, n, Q, hp)
+    bc = Bm.reshape(G, n, Q, ds)
+    cc = Cm.reshape(G, n, Q, ds)
+    y, h = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=n),
+        grid=(G, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, 1, Q, hp), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda g, c: (g, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, hp), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, ds, hp), lambda g, c: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, n, Q, hp), x.dtype),
+            jax.ShapeDtypeStruct((G, ds, hp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((ds, hp), jnp.float32)],
+        interpret=interpret,
+    )(ac, xc, bc, cc)
+    return y.reshape(G, S, hp), h

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the right step function against abstract,
+sharding-annotated inputs, compiles it, and records:
+  * memory_analysis()  — per-device argument/output/temp bytes (fits HBM?)
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * collective traffic — parsed from the optimized HLO, per-device wire
+    bytes per collective kind (ring-cost convention)
+  * the three roofline terms vs TPU v5e peaks + MODEL_FLOPS ratio
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen2-72b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs-file cells.txt]
+
+Results append to results/dryrun/<arch>__<shape>__<mesh>.json. `--all`
+spawns one subprocess per cell (isolation against compiler OOM/crash).
+"""
+import argparse
+import json
+import math
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Gradient-accumulation per arch for train_4k (batch 256): activation-heavy
+# cells that exceed 16 GB/device at full batch — the standard production
+# lever. Values chosen from the measured per-device activation footprints.
+TRAIN_MICROBATCHES = {
+    "llama4-maverick-400b-a17b": 8,
+    "jamba-v0.1-52b": 16,
+    "gemma3-4b": 2,
+    "qwen2-72b": 2,
+}
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(.*?\)|\S+)\s*(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute|ragged-all-to-all)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _types_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(segment):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device wire bytes by collective kind (ring convention)."""
+    out = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in line.split("=")[0]:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        result_bytes = _types_bytes(lhs)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            im = _IOTA_RE.search(line)
+            if im:
+                g = int(im.group(2))
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2 * result_bytes * (g - 1) / g
+        elif kind == "all-gather":
+            wire = result_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = result_bytes * (g - 1)          # result is the shard
+        elif kind in ("all-to-all", "ragged-all-to-all"):
+            wire = result_bytes * (g - 1) / g
+        else:                                       # collective-permute
+            wire = result_bytes
+        rec = out.setdefault(kind, {"count": 0, "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["wire_bytes"] += wire
+    return out
+
+
+def _shape_census(hlo: str):
+    import collections
+    sizes = collections.Counter()
+    for m in _TYPE_RE.finditer(hlo):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES or not dims:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        sizes[(dt, dims)] = n * DTYPE_BYTES[dt]
+    return sizes
+
+
+def _f32_normalization_bytes(hlo: str) -> int:
+    """Bytes of f32 tensors that have an identically-shaped bf16 twin —
+    the signature of XLA:CPU's bf16 emulation copies (>=256 MiB only)."""
+    sizes = _shape_census(hlo)
+    total = 0
+    for (dt, dims), b in sizes.items():
+        if dt == "f32" and b >= 2 ** 28 and ("bf16", dims) in sizes:
+            total += b
+    return total
+
+
+def _largest_tensors(hlo: str, top: int = 8):
+    sizes = _shape_census(hlo)
+    out = []
+    for (dt, dims), b in sorted(sizes.items(), key=lambda kv: -kv[1])[:top]:
+        out.append({"type": f"{dt}[{dims}]", "gib": round(b / 2 ** 30, 3)})
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import SHAPES, OptimizerConfig, get_config
+    from repro.core.costmodel import (TPU_HBM_BW, TPU_ICI_BW_PER_LINK,
+                                      TPU_PEAK_FLOPS_BF16)
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as model_lib
+    from repro.optim import make_train_step
+    from repro.sharding import set_current_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    res = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+           "ok": False}
+
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        res["skipped"] = "long-context cell on a full-attention arch (DESIGN.md)"
+        res["ok"] = True      # a noted skip, not a failure
+        return res
+
+    set_current_mesh(mesh)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            # TP-only bf16 weights must fit HBM next to activations;
+            # past ~12 GB/device switch the compute weights to FSDP
+            # (gathered per scanned layer group) — llama4-400B territory.
+            tp = mesh.shape.get("model", 1)
+            # TP-only bf16 weights + transient grads both scale with this;
+            # past ~3 GB/device FSDP the compute weights (gathered per
+            # scanned group) so weight+grad residency stays O(P/chips).
+            profile = "serve" if cfg.param_count() * 2 / tp > 3e9 else "train"
+            res["param_profile"] = profile
+            params = S.abstract_params(cfg, mesh, profile)[0]
+            opt = S.abstract_opt_state(cfg, mesh, params)
+            batch = S.batch_specs(cfg, shape, mesh, "train")
+            micro = TRAIN_MICROBATCHES.get(arch, 1)
+            res["microbatches"] = micro
+            step = make_train_step(cfg, OptimizerConfig(), microbatches=micro)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            params = S.abstract_params(cfg, mesh, "serve")[0]
+            batch = S.batch_specs(cfg, shape, mesh, "prefill")
+            fn = lambda p, b: model_lib.prefill(p, b, cfg)
+            lowered = jax.jit(fn).lower(params, batch)
+        else:
+            params = S.abstract_params(cfg, mesh, "serve")[0]
+            state = S.abstract_state(cfg, shape, mesh)
+            batch = S.batch_specs(cfg, shape, mesh, "decode")
+            fn = lambda p, st, b: model_lib.decode_step(p, st, b, cfg)
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(params, state, batch)
+        res["lower_s"] = round(time.time() - t0, 1)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        res["compile_s"] = round(time.time() - t1, 1)
+
+    ma = compiled.memory_analysis()
+    hlo_text_early = compiled.as_text()
+    if ma is not None:
+        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        # XLA:CPU float-normalization materializes f32 twins of bf16
+        # loop-carried buffers (stacks, caches). Real TPUs execute bf16
+        # natively; estimate the inflation by pairing f32 shapes with
+        # their bf16 twins and report a TPU-adjusted peak.
+        f32_twin = _f32_normalization_bytes(hlo_text_early)
+        res["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_gb": round(peak / 2 ** 30, 3),
+            "cpu_f32_normalization_gb": round(f32_twin / 2 ** 30, 3),
+            "tpu_adjusted_peak_gb": round((peak - f32_twin) / 2 ** 30, 3),
+        }
+        res["largest_tensors"] = _largest_tensors(hlo_text_early)
+    # NOTE: raw cost_analysis() counts while-loop (lax.scan) bodies ONCE —
+    # verified empirically — so we run our own trip-count-aware analyzer.
+    from repro.launch.hlo_analysis import analyze
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    costs = analyze(hlo_text)
+    flops_dev = costs.flops
+    bytes_dev = costs.bytes
+    colls = costs.coll
+    wire_dev = sum(v["wire_bytes"] for v in colls.values())
+    res["raw_cost_analysis"] = {"flops": float(ca.get("flops", 0.0)),
+                                "bytes": float(ca.get("bytes accessed", 0.0))}
+
+    mf = S.model_flops(cfg, shape)
+    res.update({
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collectives": colls,
+        "collective_wire_bytes_per_device": wire_dev,
+        "model_flops_global": mf,
+        "useful_flops_ratio": round(mf / max(flops_dev * chips, 1.0), 4),
+        "roofline_s": {
+            "compute": flops_dev / TPU_PEAK_FLOPS_BF16,
+            "memory": bytes_dev / TPU_HBM_BW,
+            "collective": wire_dev / TPU_ICI_BW_PER_LINK,
+        },
+    })
+    terms = res["roofline_s"]
+    res["bottleneck"] = max(terms, key=terms.get)
+    res["ok"] = True
+    return res
+
+
+def cell_list():
+    from repro.config import SHAPES, get_config, list_archs
+    cells = []
+    for arch in list_archs():
+        if arch in ("mixtral-8x7b", "phi35-moe"):
+            continue                       # paper models: bench/smoke only
+        for shape in SHAPES:
+            cells.append((arch, shape))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = 0
+        for arch, shape in cell_list():
+            mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+            out = RESULTS_DIR / f"{arch}__{shape}__{mesh_tag}.json"
+            if out.exists() and not args.force:
+                print(f"[skip] {out.name} exists", flush=True)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            print(f"[run ] {arch} x {shape} ({mesh_tag})", flush=True)
+            rc = subprocess.run(cmd).returncode
+            failures += rc != 0
+        print(f"--all done, {failures} subprocess failures", flush=True)
+        return
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    out = RESULTS_DIR / f"{args.arch}__{args.shape}__{mesh_tag}.json"
+    try:
+        res = run_cell(args.arch, args.shape, args.multi_pod)
+    except Exception as e:  # noqa: BLE001 — recorded, cell marked failed
+        res = {"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    out.write_text(json.dumps(res, indent=2))
+    print(json.dumps({k: v for k, v in res.items() if k != "traceback"},
+                     indent=2), flush=True)
+    sys.exit(0 if res.get("ok") or "skipped" in res else 1)
+
+
+if __name__ == "__main__":
+    main()

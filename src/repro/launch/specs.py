@@ -1,0 +1,146 @@
+"""Abstract input/parameter/state specs for lowering (no allocation).
+
+Everything returns ShapeDtypeStructs carrying NamedShardings, the pattern
+the dry-run lowers against. Batch is sharded over ("pod","data") when
+divisible; decode caches shard sequence over "model" (and over the batch
+axes too when the cell's batch can't cover them, e.g. long_500k's B=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, OptimizerConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.optim.adamw import init_opt_state
+from repro.sharding.ctx import _filter_spec, batch_axes
+from repro.sharding.partition import opt_state_spec, param_specs_for, spec_for
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, _filter_spec(spec, mesh)))
+
+
+def _batch_ax(mesh: Mesh, b: int):
+    axes = batch_axes(mesh)
+    n = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    return axes if (n > 1 and b % n == 0) else None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                mode: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    S = shape.seq_len if mode != "decode" else 1
+    ba = _batch_ax(mesh, B)
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, (ba, None))}
+    if mode == "train":
+        out["labels"] = _sds((B, S), jnp.int32, mesh, (ba, None))
+    if cfg.family == "audio" and mode != "decode":
+        out["frames"] = _sds((B, S, cfg.frontend_embed_dim), jnp.bfloat16,
+                             mesh, (ba, None, None))
+    if cfg.family == "vlm" and mode != "decode":
+        out["patches"] = _sds((B, 64, cfg.frontend_embed_dim), jnp.bfloat16,
+                              mesh, (ba, None, None))
+        out["positions"] = _sds((3, B, S), jnp.int32, mesh, (None, ba, None))
+    return out
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, profile: str = "train"):
+    """(ShapeDtypeStruct params pytree, spec pytree).
+
+    profile "train": TP compute sharding. profile "serve": additionally
+    FSDP-shard each weight's largest free dim over "data" (weights are
+    gathered per scanned layer; decode HBM then holds 1/(data*model) of
+    the weights plus one layer's gather).
+    """
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs_for(shapes, mesh)
+    if profile == "serve":
+        specs = jax.tree.map(
+            lambda sp, sh: opt_state_spec(sp, sh.shape, mesh), specs, shapes)
+    params = jax.tree.map(
+        lambda sh, sp: _sds(sh.shape, sh.dtype, mesh, tuple(sp)), shapes, specs)
+    return params, specs
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh, params_abs):
+    shapes = jax.eval_shape(init_opt_state, params_abs)
+    pspecs = param_specs_for(
+        jax.eval_shape(lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0))),
+        mesh)
+
+    def spec_like(leaf_shapes, _):
+        return jax.tree.map(
+            lambda sh, sp: _sds(sh.shape, sh.dtype, mesh,
+                                tuple(opt_state_spec(sp, sh.shape, mesh))),
+            leaf_shapes, pspecs)
+
+    from repro.optim.adamw import AdamWState
+    return AdamWState(
+        step=_sds((), jnp.int32, mesh, ()),
+        mu=spec_like(shapes.mu, None),
+        nu=spec_like(shapes.nu, None),
+        master=spec_like(shapes.master, None),
+    )
+
+
+def _state_spec_for(path_names: Tuple[str, ...], shape: Tuple[int, ...],
+                    mesh: Mesh, batch: int):
+    ba = _batch_ax(mesh, batch)
+    leaf = path_names[-1]
+    nd = len(shape)
+    model_ok = lambda d: mesh.shape.get("model", 1) > 1 and d % mesh.shape["model"] == 0
+    if leaf in ("k", "v") and nd >= 4:
+        # [*, B, S, hk, hd]: batch over data axes; sequence over model
+        spec = [None] * nd
+        spec[nd - 4] = ba
+        if ba is None:
+            both = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+            n = math.prod(mesh.shape[a] for a in both)
+            if shape[nd - 3] % n == 0:
+                spec[nd - 3] = both
+        elif model_ok(shape[nd - 3]):
+            spec[nd - 3] = "model"
+        return P(*spec)
+    if leaf == "ssd" and nd >= 4:
+        spec = [None] * nd
+        spec[nd - 4] = ba
+        if model_ok(shape[nd - 3]):
+            spec[nd - 3] = "model"
+        return P(*spec)
+    if leaf == "conv" and nd >= 3:
+        spec = [None] * nd
+        spec[nd - 3] = ba
+        if model_ok(shape[nd - 1]):
+            spec[nd - 1] = "model"
+        return P(*spec)
+    return P()
+
+
+def abstract_state(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Decode-state ShapeDtypeStructs for the serve_step dry-run."""
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: model_lib.init_state(cfg, B, S))
+    from repro.sharding.partition import _path_names
+
+    def mk(path, sh):
+        spec = _state_spec_for(_path_names(path), sh.shape, mesh, B)
+        return _sds(sh.shape, sh.dtype, mesh, tuple(spec))
+
+    return jax.tree_util.tree_map_with_path(mk, shapes)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The 6·N·D / 2·N·D convention (N = active params, D = tokens)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token per seq

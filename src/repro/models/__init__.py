@@ -1,0 +1,3 @@
+from .model import decode_step, init_params, init_state, loss_fn, prefill
+
+__all__ = ["decode_step", "init_params", "init_state", "loss_fn", "prefill"]

@@ -1,0 +1,298 @@
+"""GQA attention: chunked-flash prefill, cached decode, cross-attention.
+
+Design notes
+------------
+* Prefill/train uses a pure-XLA *chunked flash* formulation: ``lax.scan``
+  over KV chunks with online-softmax running statistics. Peak memory is
+  O(S * chunk) instead of O(S^2), which is what makes the 32k-prefill cells
+  compile within HBM. The Pallas TPU kernel (kernels/decode_attention) is a
+  drop-in replacement for the decode einsum path on real hardware.
+* Decode (q_len == 1) uses exact einsum attention over the cache capacity
+  with a position mask; scores are [B, H, 1, S] which is small. The cache
+  is updated in place at ``pos`` via dynamic_update_slice (donated buffer).
+* Sliding windows are dynamic scalars so that layers with different window
+  sizes can share one scanned HLO body (-1 == global).
+* GQA: q heads H, kv heads Hk, group = H // Hk via reshape to
+  [B, S, Hk, group, hd] — no materialized repeat of K/V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from .layers import _dense_init, apply_mrope, apply_rope
+
+Params = Dict[str, jax.Array]
+
+NEG_INF = -1e30
+
+
+def attn_params(key, d_model: int, num_heads: int, num_kv_heads: int,
+                head_dim: int, qkv_bias: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, num_heads * head_dim)),
+        "wk": _dense_init(ks[1], (d_model, num_kv_heads * head_dim)),
+        "wv": _dense_init(ks[2], (d_model, num_kv_heads * head_dim)),
+        "wo": _dense_init(ks[3], (num_heads * head_dim, d_model)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), jnp.bfloat16)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg):
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+# --------------------------------------------------------------------------
+# Chunked-flash full-sequence attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def _mask_for(Sq: int, chunk: int, c_start, window, causal: bool):
+    q_pos = jnp.arange(Sq)
+    k_pos = c_start + jnp.arange(chunk)
+    dist = q_pos[:, None] - k_pos[None, :]               # [Sq, chunk]
+    mask = jnp.ones((Sq, chunk), bool)
+    if causal:
+        mask &= dist >= 0
+    win = jnp.asarray(window, jnp.int32)
+    mask &= jnp.where(win > 0, dist < win, True)
+    return mask
+
+
+def _rep(x, group):
+    x = jnp.repeat(x, group, axis=2)
+    return constrain(x, ("pod", "data"), None, "model", None)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: int = -1, causal: bool = True,
+                    chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanning over KV chunks.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, Hk, hd]. window: scalar (-1 = global).
+    Returns [B, Sq, H, hd] (bf16 as input dtype).
+
+    Sharding: scores live on the *full* H dim (KV heads are broadcast to H
+    per chunk), so the model axis shards them even when Hk < axis size —
+    the [Hk, group] layout would silently replicate a 16x larger buffer.
+
+    Memory: custom VJP (FlashAttention-2-style). Plain autodiff of the
+    chunk scan stacks every chunk's f32 scores as residuals — the full
+    [Sq, Sk] attention matrix — which is exactly what flash attention
+    exists to avoid. The backward here saves only (q, k, v, out, lse) and
+    recomputes per-chunk scores.
+    """
+    out, _ = _flash_fwd_scan(q, k, v, window, causal, chunk)
+    return out
+
+
+def _flash_fwd_scan(q, k, v, window, causal: bool, chunk: int):
+    B, Sq, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    group = H // Hk
+    chunk = min(chunk, Sk)
+    n_chunks = Sk // chunk
+    assert Sk % chunk == 0, (Sk, chunk)
+
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    kc = k.reshape(B, n_chunks, chunk, Hk, hd)
+    vc = v.reshape(B, n_chunks, chunk, Hk, hd)
+
+    def body(carry, inputs):
+        acc, m, l = carry                      # [B,Sq,H,hd], [B,Sq,H], [B,Sq,H]
+        kcb, vcb, c_start = inputs             # [B,chunk,Hk,hd] x2, scalar
+        krep = _rep(kcb, group)
+        vrep = _rep(vcb, group)
+        s = jnp.einsum("bqhd,bkhd->bqhk", qf, krep.astype(jnp.float32))
+        s = constrain(s, ("pod", "data"), None, "model", None)
+        mask = _mask_for(Sq, s.shape[-1], c_start, window, causal)
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p, vrep.astype(jnp.float32))
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    starts = jnp.arange(n_chunks) * chunk
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), starts))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)                       # [B, Sq, H]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, window, causal, chunk):
+    out, lse = _flash_fwd_scan(q, k, v, window, causal, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(window, causal, chunk, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    group = H // Hk
+    chunk_ = min(chunk, Sk)
+    n_chunks = Sk // chunk_
+
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    do = dout.astype(jnp.float32)
+    # D_i = rowsum(dO * O) — the softmax-backward diagonal term
+    delta = jnp.sum(do * out.astype(jnp.float32), axis=-1)     # [B, Sq, H]
+    kc = k.reshape(B, n_chunks, chunk_, Hk, hd)
+    vc = v.reshape(B, n_chunks, chunk_, Hk, hd)
+    starts = jnp.arange(n_chunks) * chunk_
+
+    def body(dq, inputs):
+        kcb, vcb, c_start = inputs
+        krep = _rep(kcb, group).astype(jnp.float32)
+        vrep = _rep(vcb, group).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bqhk", qf, krep)
+        mask = _mask_for(Sq, chunk_, c_start, window, causal)
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                        # [B,Sq,H,ck]
+        dv_rep = jnp.einsum("bqhk,bqhd->bkhd", p, do)
+        dp = jnp.einsum("bqhd,bkhd->bqhk", do, vrep)
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bqhk,bkhd->bqhd", ds, krep) * hd ** -0.5
+        dk_rep = jnp.einsum("bqhk,bqhd->bkhd", ds, qf)
+        # fold the H = Hk*group broadcast back down
+        dk = dk_rep.reshape(B, chunk_, Hk, group, hd).sum(axis=3)
+        dv = dv_rep.reshape(B, chunk_, Hk, group, hd).sum(axis=3)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0, (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), starts))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, Hk, hd)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, Hk, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def self_attention(p: Params, x: jax.Array, positions: jax.Array, cfg,
+                   window: jax.Array | int = -1, causal: bool = True) -> jax.Array:
+    """Full-sequence self attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    k = constrain(k, ("pod", "data"), None, None, None)
+    o = flash_attention(q, k, v, window=window, causal=causal)
+    o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return o @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# Cached decode (q_len == 1)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, capacity: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_attention(p: Params, x: jax.Array, cache: Params, pos: jax.Array,
+                     cfg, window: jax.Array | int = -1) -> Tuple[jax.Array, Params]:
+    """One-token attention against a cache of static capacity.
+
+    x: [B, 1, D]; cache k/v: [B, S, Hk, hd]; pos: scalar int32 — number of
+    valid cached tokens; the new token has position ``pos`` and is written
+    into slot ``pos`` (clamped to capacity-1).
+    Returns (output [B, 1, D], updated cache).
+    """
+    B, _, _ = x.shape
+    S = cache["k"].shape[1]
+    Hk, hd = cfg.num_kv_heads, cfg.head_dim
+    group = cfg.num_heads // Hk
+
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    if cfg.mrope:
+        posq = jnp.broadcast_to(pos, (3, B, 1))
+    else:
+        posq = jnp.broadcast_to(pos, (B, 1))
+    q, k_new = _rope_qk(q, k_new, posq, cfg)
+
+    # Write the new kv into the cache (donated in the serving step).
+    slot = jnp.minimum(pos, S - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    k_cache = constrain(k_cache, ("pod", "data"), "model", None, None)
+    v_cache = constrain(v_cache, ("pod", "data"), "model", None, None)
+
+    qg = q.reshape(B, 1, Hk, group, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    j = jnp.arange(S)
+    valid = j <= slot
+    win = jnp.asarray(window, jnp.int32)
+    valid &= jnp.where(win > 0, (pos - j) < win, True)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    return o @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# --------------------------------------------------------------------------
+
+def cross_attention(p: Params, x: jax.Array, memory_kv: Params) -> jax.Array:
+    """x: [B, Sq, D] attends over precomputed encoder memory K/V."""
+    B, Sq, _ = x.shape
+    k, v = memory_kv["k"], memory_kv["v"]        # [B, Sm, Hk, hd]
+    hd = k.shape[3]
+    H = p["wq"].shape[1] // hd
+    q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    o = flash_attention(q, k, v, causal=False)   # chunked: no [Sq, Sm] blowup
+    o = o.reshape(B, Sq, H * hd)
+    return o @ p["wo"]
+
+
+def encode_memory_kv(p: Params, memory: jax.Array, num_kv_heads: int,
+                     head_dim: int) -> Params:
+    """Precompute cross-attention K/V from encoder output."""
+    B, Sm, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(B, Sm, num_kv_heads, head_dim)
+    v = (memory @ p["wv"]).reshape(B, Sm, num_kv_heads, head_dim)
+    return {"k": k, "v": v}

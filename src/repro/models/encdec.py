@@ -1,0 +1,163 @@
+"""Encoder-decoder assembly (seamless-m4t family).
+
+Encoder: bidirectional self-attention over precomputed modality-frontend
+frame embeddings (the speech frontend is a stub per DESIGN.md — inputs are
+``frames [B, S_enc, frontend_embed_dim]``). Decoder: causal self-attention
++ cross-attention over encoder memory + dense FFN. Both stacks are scanned.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding import constrain
+from repro.sharding.ctx import constrain_sp
+from . import attention as attn
+from .layers import embed_lookup, embed_params, ffn_apply, ffn_params, \
+    logits_from_embed, rmsnorm, rmsnorm_params, _dense_init
+
+Params = Dict[str, Any]
+
+
+def _enc_layer_params(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_params(cfg.d_model),
+        "attn": attn.attn_params(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.head_dim),
+        "ln2": rmsnorm_params(cfg.d_model),
+        "ffn": ffn_params(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_params(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_layer_params(k1, cfg)
+    p["ln_x"] = rmsnorm_params(cfg.d_model)
+    p["cross"] = attn.attn_params(k2, cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.head_dim)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kd, k0, k1, k2 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    enc_stack = [_enc_layer_params(k, cfg) for k in enc_keys]
+    dec_stack = [_dec_layer_params(k, cfg) for k in dec_keys]
+    return {
+        "frontend_proj": _dense_init(k0, (cfg.frontend_embed_dim, cfg.d_model)),
+        "embed": embed_params(k1, cfg.vocab_size, cfg.d_model),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_stack),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_stack),
+        "enc_norm": rmsnorm_params(cfg.d_model),
+        "final_norm": rmsnorm_params(cfg.d_model),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           remat: bool = True) -> jax.Array:
+    """frames: [B, S_enc, F] -> encoder memory [B, S_enc, D]."""
+    x = (frames @ params["frontend_proj"]).astype(jnp.bfloat16)
+    x = constrain(x, ("pod", "data"), None, None)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None]
+
+    def body(x, lp):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + attn.self_attention(lp["attn"], h, positions, cfg, causal=False)
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ffn_apply(lp["ffn"], h)
+        return constrain_sp(x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(lp: Params, x, positions, cfg, mode, state, pos, memory_kv):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    new_state = None
+    if mode == "decode":
+        o, new_state = attn.decode_attention(lp["attn"], h, state, pos, cfg)
+    else:
+        o = attn.self_attention(lp["attn"], h, positions, cfg)
+        if mode == "prefill":
+            q, k, v = attn._project_qkv(lp["attn"], h, cfg)
+            _, k = attn._rope_qk(q, k, positions, cfg)
+            new_state = {"k": k, "v": v}
+    x = x + o
+    h = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+    x = x + attn.cross_attention(lp["cross"], h, memory_kv)
+    h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    x = x + ffn_apply(lp["ffn"], h)
+    if mode == "train":
+        x = constrain_sp(x)
+    else:
+        x = constrain(x, ("pod", "data"), None, None)
+    return x, new_state
+
+
+def decode_stack(params: Params, tokens: jax.Array, memory: jax.Array,
+                 cfg: ModelConfig, mode: str, state: Optional[Params] = None,
+                 remat: bool = True) -> Tuple[jax.Array, Optional[Params]]:
+    """Decoder over (possibly cached) self-attn + cross-attn on memory."""
+    x = embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = constrain(x, ("pod", "data"), None, None)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None] if mode != "decode" else None
+    pos = state["pos"] if mode == "decode" else None
+
+    # Cross-attention K/V from encoder memory, per layer (scanned).
+    if mode == "decode" and "memory_kv" in state:
+        mem_kv = state["memory_kv"]
+    else:
+        def mk(lp):
+            return attn.encode_memory_kv(lp["cross"], memory,
+                                         cfg.num_kv_heads, cfg.head_dim)
+        mem_kv = jax.vmap(mk)(params["dec"])
+
+    def body(carry, xs):
+        x = carry
+        lp, mkv = xs["params"], xs["mem_kv"]
+        st = xs.get("state")
+        x, new_st = _dec_layer(lp, x, positions, cfg, mode, st, pos, mkv)
+        return x, (new_st if new_st is not None else 0)
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+    xs: Dict[str, Any] = {"params": params["dec"], "mem_kv": mem_kv}
+    if mode == "decode":
+        xs["state"] = state["kv"]
+    x, new_kv = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {"kv": new_kv, "memory_kv": mem_kv,
+                     "pos": (state["pos"] + 1) if mode == "decode"
+                     else jnp.asarray(S, jnp.int32)}
+    return x, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int, capacity: int,
+               mem_len: int) -> Params:
+    L = cfg.num_layers
+    kv = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape).copy(),
+        attn.init_kv_cache(batch, capacity, cfg.num_kv_heads, cfg.head_dim))
+    mem_kv = {
+        "k": jnp.zeros((L, batch, mem_len, cfg.num_kv_heads, cfg.head_dim),
+                       jnp.bfloat16),
+        "v": jnp.zeros((L, batch, mem_len, cfg.num_kv_heads, cfg.head_dim),
+                       jnp.bfloat16),
+    }
+    return {"kv": kv, "memory_kv": mem_kv, "pos": jnp.zeros((), jnp.int32)}
+
+
+def lm_logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return logits_from_embed(params["embed"], x, cfg.logit_softcap)

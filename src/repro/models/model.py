@@ -1,0 +1,119 @@
+"""Unified model API: build/init/loss/prefill/decode for every arch family.
+
+``step_fns(cfg)`` returns the three jittable entry points the launcher and
+dry-run lower:
+
+  train_step(params, opt_state, batch)        (via repro.optim)
+  prefill_step(params, batch)      -> (last-token logits, decode state)
+  serve_step(params, state, batch) -> (logits, updated state)
+
+Batch layout (all int32 unless noted):
+  tokens    [B, S]           LM tokens (decoder tokens for enc-dec)
+  labels    [B, S]           train only
+  frames    [B, S, F] bf16   audio family (frontend stub)
+  patches   [B, 64, F] bf16  vlm family (frontend stub)
+  positions [3, B, S]        mrope archs (optional; defaults to text pos)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding import constrain
+from . import encdec, transformer
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    if cfg.is_encdec:
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def init_state(cfg: ModelConfig, batch: int, capacity: int) -> Params:
+    if cfg.is_encdec:
+        return encdec.init_state(cfg, batch, capacity, mem_len=capacity)
+    return transformer.init_state(cfg, batch, capacity)
+
+
+# --------------------------------------------------------------------------
+# Loss (chunked over sequence to bound the logits materialization)
+# --------------------------------------------------------------------------
+
+def _xent_chunked(params: Params, x: jax.Array, labels: jax.Array,
+                  cfg: ModelConfig, chunk: int = 512) -> jax.Array:
+    """Mean next-token cross entropy; logits computed per seq-chunk."""
+    B, S, D = x.shape
+    lm = encdec.lm_logits if cfg.is_encdec else transformer.lm_logits
+    chunk = min(chunk, S)
+    n = S // chunk
+    xc = x[:, :n * chunk].reshape(B, n, chunk, D)
+    yc = labels[:, :n * chunk].reshape(B, n, chunk)
+
+    def body(tot, inp):
+        xb, yb = inp                                   # [B, chunk, D], [B, chunk]
+        lg = lm(params, xb, cfg).astype(jnp.float32)
+        lg = constrain(lg, ("pod", "data"), None, "model")
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        # target logit via masked reduction — take_along_axis over the
+        # model-sharded vocab axis would all-gather the full logits
+        iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+        tgt = jnp.sum(jnp.where(iota == yb[..., None], lg, 0.0), axis=-1)
+        return tot + (lse - tgt).sum(), None
+
+    body = jax.checkpoint(body)
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                          (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(yc, 1, 0)))
+    return tot / (B * n * chunk)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    if cfg.is_encdec:
+        memory = encdec.encode(params, batch["frames"], cfg, remat)
+        x, _ = encdec.decode_stack(params, batch["tokens"], memory, cfg,
+                                   "train", remat=remat)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x, _, aux = transformer.backbone(params, batch, cfg, "train",
+                                         remat=remat)
+    xent = _xent_chunked(params, x, batch["labels"], cfg)
+    coef = cfg.moe.aux_loss_coef if cfg.moe is not None else 0.0
+    return xent + coef * aux, {"xent": xent, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Serving entry points
+# --------------------------------------------------------------------------
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> Tuple[jax.Array, Params]:
+    if cfg.is_encdec:
+        memory = encdec.encode(params, batch["frames"], cfg, remat=False)
+        x, state = encdec.decode_stack(params, batch["tokens"], memory, cfg,
+                                       "prefill", remat=False)
+        lm = encdec.lm_logits
+    else:
+        x, state, _ = transformer.backbone(params, batch, cfg, "prefill",
+                                           remat=False)
+        lm = transformer.lm_logits
+    logits = lm(params, x[:, -1:, :], cfg)
+    return logits, state
+
+
+def decode_step(params: Params, state: Params, batch: Dict[str, jax.Array],
+                cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """One token for every sequence in the batch. tokens: [B, 1]."""
+    if cfg.is_encdec:
+        x, state = encdec.decode_stack(params, batch["tokens"], None, cfg,
+                                       "decode", state=state)
+        lm = encdec.lm_logits
+    else:
+        x, state, _ = transformer.backbone(params, batch, cfg, "decode",
+                                           state=state)
+        lm = transformer.lm_logits
+    return lm(params, x, cfg), state

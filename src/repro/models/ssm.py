@@ -1,0 +1,194 @@
+"""Mamba2 SSD (state-space duality) mixing layer.
+
+Implements the chunked dual form of arXiv:2405.21060 §6 in pure JAX:
+intra-chunk quadratic (attention-like) term + inter-chunk linear recurrence
+scanned over chunk states. ``ssd_decode_step`` is the O(1) recurrent form
+used by the serve path (this is why SSM/hybrid archs run the long_500k
+cell). The intra-chunk einsum block is the Pallas kernel target
+(kernels/ssd_scan).
+
+Recurrence (per head h, state n, channel p):
+    h_t = exp(a_t) * h_{t-1} + B_t ⊗ (x_t * dt_t)
+    y_t = C_t · h_t + D * x_t,         a_t = -exp(A_log) * dt_t
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.sharding import constrain
+from .layers import _dense_init, rmsnorm
+
+Params = Dict[str, jax.Array]
+
+
+def mamba_params(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.num_heads(D)
+    ci = di + 2 * s.d_state                    # conv runs over (x, B, C)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (D, 2 * di + 2 * s.d_state + nh)),
+        "conv_w": (jax.random.normal(ks[1], (ci, s.d_conv), jnp.float32) * 0.1
+                   ).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((ci,), jnp.bfloat16),
+        "A_log": jnp.zeros((nh,), jnp.float32),           # A = -exp(0) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (di, D)),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, s: SSMConfig, di: int, nh: int):
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * s.d_state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. xbc: [B, S, ci]; w: [ci, K].
+
+    Returns (activated output [B, S, ci], new state [B, K-1, ci]).
+    """
+    Bb, S, ci = xbc.shape
+    K = w.shape[1]
+    if state is None:
+        state = jnp.zeros((Bb, K - 1, ci), xbc.dtype)
+    ext = jnp.concatenate([state, xbc], axis=1)          # [B, S+K-1, ci]
+    out = jnp.zeros((Bb, S, ci), jnp.float32)
+    for k in range(K):                                    # K is 4: unrolled taps
+        out = out + ext[:, k:k + S, :].astype(jnp.float32) * w[:, k].astype(jnp.float32)
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+    return out, ext[:, S:, :]
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A_log: jax.Array,
+                Bmat: jax.Array, Cmat: jax.Array,
+                init_state: Optional[jax.Array] = None,
+                chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [B, S, nh, hp]; dt: [B, S, nh] (post-softplus); Bmat/Cmat: [B, S, ds];
+    A_log: [nh]. Returns (y [B, S, nh, hp], final state [B, nh, ds, hp]).
+    """
+    Bb, S, nh, hp = x.shape
+    ds = Bmat.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # ragged tail: pad with dt=0 steps — decay exp(0)=1 and zero input
+        # leave the state untouched; padded outputs are sliced off.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        S_orig, S = S, S + pad
+    else:
+        S_orig = S
+    Nc = S // Q
+
+    a = (-jnp.exp(A_log.astype(jnp.float32)) * dt)        # [B, S, nh], negative
+    xd = (x.astype(jnp.float32) * dt[..., None])          # discretized input
+
+    # chunk views, chunk axis leading for the scan: [Nc, B, Q, ...]
+    ac = jnp.moveaxis(a.reshape(Bb, Nc, Q, nh), 1, 0)
+    xc = jnp.moveaxis(xd.reshape(Bb, Nc, Q, nh, hp), 1, 0)
+    Bc = jnp.moveaxis(Bmat.astype(jnp.float32).reshape(Bb, Nc, Q, ds), 1, 0)
+    Cc = jnp.moveaxis(Cmat.astype(jnp.float32).reshape(Bb, Nc, Q, ds), 1, 0)
+
+    h0 = (jnp.zeros((Bb, nh, ds, hp), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # One chunk at a time: the quadratic L tensor is [B, Q, Q, nh] for a
+    # single chunk (sharded over nh), never [B, Nc, Q, Q, nh] — the full
+    # materialization was a ~100x per-device memory blowup at 32k tokens.
+    def body(h, inp):
+        a_c, x_c, B_c, C_c = inp
+        acs = jnp.cumsum(a_c, axis=1)                      # [B, Q, nh]
+        scores = jnp.einsum("bqn,bkn->bqk", C_c, B_c)      # [B, Q, Q]
+        diff = acs[:, :, None, :] - acs[:, None, :, :]     # [B, Q, Q, nh]
+        L = jnp.exp(jnp.where(mask[None, :, :, None], diff, -jnp.inf))
+        L = constrain(L, ("pod", "data"), None, None, "model")
+        y = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, L, x_c)
+        y = y + jnp.einsum("bqn,bqh,bhnp->bqhp", C_c, jnp.exp(acs), h)
+        decay_end = jnp.exp(acs[:, -1:, :] - acs)          # [B, Q, nh]
+        s_c = jnp.einsum("bkn,bkh,bkhp->bhnp", B_c, decay_end, x_c)
+        h = jnp.exp(acs[:, -1, :])[..., None, None] * h + s_c
+        return h, y
+
+    h_final, ys = jax.lax.scan(body, h0, (ac, xc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, nh, hp)[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A_log: jax.Array,
+                    Bmat: jax.Array, Cmat: jax.Array, state: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. x: [B, nh, hp]; dt: [B, nh]; B/C: [B, ds];
+    state: [B, nh, ds, hp]."""
+    a = jnp.exp(-jnp.exp(A_log.astype(jnp.float32)) * dt)          # [B, nh]
+    xd = x.astype(jnp.float32) * dt[..., None]
+    state = a[..., None, None] * state.astype(jnp.float32) + \
+        jnp.einsum("bn,bhp->bhnp", Bmat.astype(jnp.float32), xd)
+    y = jnp.einsum("bn,bhnp->bhp", Cmat.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> Params:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    ci = di + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, ci), jnp.bfloat16),
+        "ssd": jnp.zeros((batch, nh, s.d_state, cfg.ssm.head_dim), jnp.float32),
+    }
+
+
+def mamba_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Params] = None, decode: bool = False
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Full Mamba2 block. x: [B, S, D] -> (y [B, S, D], new state)."""
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.num_heads(D)
+    Bb, S, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(zxbcdt, s, di, nh)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = constrain(dt, ("pod", "data"), None, "model")
+
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bmat, Cmat = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    xh = xs.reshape(Bb, S, nh, s.head_dim)
+    xh = constrain(xh, ("pod", "data"), None, "model", None)
+
+    if decode:
+        assert S == 1
+        y, new_ssd = ssd_decode_step(
+            xh[:, 0], dt[:, 0], p["A_log"], Bmat[:, 0], Cmat[:, 0], state["ssd"])
+        y = y[:, None]
+    else:
+        init = None if state is None else state["ssd"]
+        y, new_ssd = ssd_chunked(xh, dt, p["A_log"], Bmat, Cmat, init,
+                                 chunk=s.chunk_size)
+
+    y = y + (p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(Bb, S, di)
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = rmsnorm(p["norm_w"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = {"conv": new_conv, "ssd": new_ssd} if (state is not None or decode) else None
+    return out, new_state

@@ -1,0 +1,3 @@
+from .engine import CollaborativeEngine, EngineConfig
+
+__all__ = ["CollaborativeEngine", "EngineConfig"]

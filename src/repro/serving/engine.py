@@ -1,0 +1,149 @@
+"""Collaborative serving engine: the paper's workflow, runnable end-to-end.
+
+Serves an MoE LM with the expert weights split across the two tiers of
+repro.core.collaborative: attention/router/norm weights plus an N-index
+M-way expert cache resident in the fast tier; the full expert table in the
+host tier. Every decode step performs the paper's (1) cache check,
+(2) tiered execution, (3) asynchronous post-fetch, all inside one jitted
+step function whose cache state threads functionally (donated buffers).
+
+The engine exposes the same counters the paper reports: per-layer hit
+rates, host-computed assignment counts, fetch volume — consumed by the
+fig5/fig6 benchmarks in live-model mode and by examples/serve_collaborative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CacheConfig, ModelConfig
+from repro.core import collaborative as collab
+from repro.core.cache import CacheState
+from repro.models import transformer
+from repro.models.layers import rmsnorm
+from repro.models.moe import route
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    cache: CacheConfig
+    max_batch: int = 1
+    capacity: int = 512           # KV capacity
+    greedy: bool = True
+
+
+class CollaborativeEngine:
+    """Single-host engine (the paper's per-request consumer scenario).
+
+    Only homogeneous decoder-only MoE archs (every layer MoE) are accepted
+    here — matching the paper's Mixtral/Phi targets. The generic serving
+    path without the cache lives in launch/serve.py for all archs.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, ecfg: EngineConfig,
+                 key=None):
+        assert cfg.moe is not None and cfg.moe_every == 1 and not cfg.is_encdec
+        slots, G, R = transformer.build_slots(cfg)
+        assert len(slots) == 1 and R == 0, "engine expects homogeneous stacks"
+        self.cfg, self.ecfg = cfg, ecfg
+        self.params = params
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+        # Split expert weights out of the param tree into the two tiers.
+        # The host tier is read-only and aliases the param tree — it is
+        # deliberately NOT donated (donating it would delete the params'
+        # buffers under prefill's feet); only the mutable fast-tier state
+        # (slot buffers + tags/age) threads through with donation.
+        moe_p = params["scan"]["s0"]["moe"]
+        tiers = collab.init_tiers(
+            moe_p["w1"], moe_p["w3"], moe_p["w2"], ecfg.cache,
+            num_experts=cfg.moe.num_experts, key=key)
+        self._host = (tiers.host_w1, tiers.host_w3, tiers.host_w2)
+        self.fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
+        self._decode = jax.jit(self._decode_step, donate_argnums=(1, 2))
+        self.stats = {"hits": 0, "accesses": 0, "host_assignments": 0,
+                      "fetched_experts": 0, "tokens": 0}
+
+    def _tiers(self, fast) -> collab.ExpertTiers:
+        s1, s3, s2, state = fast
+        h1, h3, h2 = self._host
+        return collab.ExpertTiers(host_w1=h1, host_w3=h3, host_w2=h2,
+                                  slot_w1=s1, slot_w3=s3, slot_w2=s2,
+                                  state=state)
+
+    # -- one decode step with collaborative MoE ---------------------------
+    def _decode_step(self, tokens, state, fast):
+        cfg = self.cfg
+        params = self.params
+        tiers = self._tiers(fast)
+        x = transformer._embed_inputs(params, {"tokens": tokens}, cfg)
+        pos = state["pos"]
+        slots, G, _ = transformer.build_slots(cfg)
+        slot = slots[0]
+
+        def body(carry, xs):
+            x, tiers, layer = carry
+            lp, st = xs["params"], xs["state"]
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            from repro.models import attention as attn
+            o, new_st = attn.decode_attention(lp["attn"], h, st, pos, cfg,
+                                              slot.window)
+            x = x + o
+            h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            _, top_i, top_w = route(lp["moe"]["router"],
+                                    h2[:, 0].astype(jnp.float32),
+                                    cfg.moe.top_k)
+            y, tiers, stats = collab.collaborative_moe(
+                tiers, layer, h2[:, 0], top_i, top_w, self.ecfg.cache)
+            x = x + y[:, None].astype(x.dtype)
+            return (x, tiers, layer + 1), (new_st, stats)
+
+        xs = {"params": params["scan"], "state": state["scan"]}
+        (x, tiers, _), (new_scan, stats) = jax.lax.scan(
+            body, (x, tiers, jnp.zeros((), jnp.int32)),
+            ({"params": xs["params"]["s0"], "state": xs["state"]["s0"]}))
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = transformer.lm_logits(params, x, cfg)
+        new_state = {"scan": {"s0": new_scan}, "pos": pos + 1}
+        new_fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
+        return logits, new_state, new_fast, stats
+
+    def prefill(self, tokens: jax.Array) -> Tuple[jax.Array, Params]:
+        """Standard prefill (tiers untouched: prefill is compute-bound and
+        runs from the host tier on real hardware; cache serves decode)."""
+        from repro.models import model as model_lib
+        B, P = tokens.shape
+        cap = self.ecfg.capacity
+        pad = jnp.zeros((B, cap - P), tokens.dtype)
+        logits, state = model_lib.prefill(
+            self.params, {"tokens": jnp.concatenate([tokens, pad], 1)},
+            self.cfg)
+        state["pos"] = jnp.asarray(P, jnp.int32)
+        return logits, state
+
+    def generate(self, prompt: np.ndarray, steps: int,
+                 key=None) -> Tuple[np.ndarray, Dict[str, float]]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, state = self.prefill(jnp.asarray(prompt))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for _ in range(steps - 1):
+            logits, state, self.fast, stats = self._decode(tok, state,
+                                                           self.fast)
+            tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+            out.append(np.asarray(tok))
+            for k in ("hits", "accesses", "fetched_experts"):
+                self.stats[k] += int(np.asarray(stats[k]).sum())
+            self.stats["host_assignments"] += int(
+                np.asarray(stats["host_flops_assignments"]).sum())
+            self.stats["tokens"] += prompt.shape[0]
+        hit_rate = self.stats["hits"] / max(self.stats["accesses"], 1)
+        return np.concatenate(out, 1), {**self.stats, "hit_rate": hit_rate}

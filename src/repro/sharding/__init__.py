@@ -1,0 +1,5 @@
+from .ctx import constrain, current_mesh, set_current_mesh, batch_axes
+from .partition import param_specs_for, opt_state_spec, abstractify
+
+__all__ = ["constrain", "current_mesh", "set_current_mesh", "batch_axes",
+           "param_specs_for", "opt_state_spec", "abstractify"]

@@ -1,0 +1,93 @@
+"""Mesh context for sharding constraints.
+
+Model code calls :func:`constrain` on activations with *logical* axis
+tuples. When no mesh is active (unit tests, smoke tests on one device) the
+call is a no-op, so model code never branches on distribution.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT_MESH: Optional[Mesh] = None
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+def set_current_mesh(mesh: Optional[Mesh]):
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    global _CURRENT_MESH
+    prev = _CURRENT_MESH
+    _CURRENT_MESH = mesh
+    try:
+        with jax.set_mesh(mesh):
+            yield mesh
+    finally:
+        _CURRENT_MESH = prev
+
+
+def _filter_spec(spec: Tuple[Axis, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)."""
+    names = set(mesh.axis_names)
+    out = []
+    for ax in spec:
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(ax if ax in names else None)
+    return P(*out)
+
+
+def batch_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    mesh = mesh or _CURRENT_MESH
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, *spec: Axis):
+    """with_sharding_constraint(x, P(*spec)) under the active mesh; no-op otherwise."""
+    mesh = _CURRENT_MESH
+    if mesh is None or mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _filter_spec(spec, mesh)))
+
+
+def constrain_sp(x):
+    """Sequence-parallel residual stream: [B, S, D] sharded (batch, model).
+
+    The per-layer activation saved by the remat'd layer scan is otherwise
+    replicated across the model axis — 16x the checkpoint memory. Megatron
+    SP semantics: norms/residual adds run sequence-sharded; GSPMD inserts
+    the all-gather before attention/FFN matmuls and the reduce-scatter
+    after (same wire bytes as the TP all-reduces they replace). Applied
+    only when S divides the model axis (decode steps with S=1 skip it).
+    """
+    mesh = _CURRENT_MESH
+    if mesh is None or mesh.size == 1:
+        return x
+    n = mesh.shape.get("model", 1)
+    if x.ndim < 3 or n <= 1 or x.shape[1] % n != 0:
+        return constrain(x, ("pod", "data"), None, None)
+    return constrain(x, ("pod", "data"), "model", None)
+
+
+def named(mesh: Mesh, *spec: Axis) -> NamedSharding:
+    return NamedSharding(mesh, _filter_spec(spec, mesh))

@@ -1,0 +1,109 @@
+"""Parameter partitioning rules: param pytree -> PartitionSpec pytree.
+
+Rules are keyed on the leaf's path name + rank, MaxText-style logical
+rules compressed into one dispatch table:
+
+  wq/w1/w3/in_proj      [.., D, F]   -> shard F on "model"   (column)
+  wo/w2/out_proj        [.., F, D]   -> shard F on "model"   (row)
+  wk/wv (+bk/bv)        [.., D, Hk*hd] -> "model" iff divisible else replicate
+  moe w1/w3/w2          [.., E, *, *] -> shard E on "model"  (EP)
+  embed/lm_head         [V, D]       -> shard V on "model"
+  conv_w                [ci, K]      -> shard ci on "model" iff divisible
+  norms/scalars                      -> replicated
+
+Every dim sharded only if divisible by the axis size. Leading scan-stack
+dims are skipped (rules address dims from the right). ``opt_state_spec``
+additionally shards the largest replicated dim over "data" (ZeRO-1), so
+fp32 optimizer moments of 72B-param models fit per-device HBM.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+COL = {"wq", "w1", "w3", "in_proj", "frontend_proj", "bq"}
+ROW = {"wo", "w2", "out_proj"}
+KV = {"wk", "wv", "bk", "bv"}
+VOCAB = {"embed", "lm_head"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(str(k.idx))
+    return tuple(names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+def _divides(dim: int, mesh: Mesh, axis: str) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 1 and dim % n == 0
+
+
+def spec_for(path, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    names = _path_names(path)
+    leaf = names[-1]
+    in_moe = "moe" in names
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    def set_if(dim_from_right: int, axis: str):
+        i = nd - dim_from_right
+        if 0 <= i < nd and _divides(shape[i], mesh, axis):
+            spec[i] = axis
+
+    if in_moe and leaf in ("w1", "w2", "w3"):
+        set_if(3, "model")                      # expert dim (EP)
+    elif leaf in COL:
+        set_if(1, "model")
+    elif leaf in ROW:
+        set_if(2, "model")
+    elif leaf in KV:
+        set_if(1, "model")
+    elif leaf in VOCAB:
+        set_if(2, "model")
+    elif leaf == "conv_w":
+        set_if(2, "model")
+    elif leaf == "router":
+        pass                                    # replicated (small, fp32)
+    if all(s is None for s in spec):            # canonical replicated form
+        return P()
+    return P(*spec)
+
+
+def param_specs_for(params_shape: Any, mesh: Mesh) -> Any:
+    """params pytree (arrays or ShapeDtypeStructs) -> PartitionSpec pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(path, leaf.shape, mesh), params_shape)
+
+
+def opt_state_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: add "data" sharding on the largest free divisible dim."""
+    n = _axis_size(mesh, "data")
+    if n <= 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (s, d) in enumerate(zip(parts, shape)):
+        if s is None and d % n == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best >= 0:
+        parts[best] = "data"
+    return P(*parts)
+
+
+def abstractify(tree: Any, mesh: Mesh, specs: Any) -> Any:
+    """Array/ShapeDtypeStruct pytree -> sharded ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs)

@@ -1,0 +1,63 @@
+"""Per-arch smoke tests: reduced same-family config, one train loss +
+prefill + decode step on CPU, asserting shapes and finiteness.
+(Deliverable f: every assigned architecture as a selectable config.)"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_config, list_archs, reduced
+from repro.models import decode_step, init_params, loss_fn, prefill
+
+ARCHS = list_archs()
+B, S = 2, 128
+
+
+def _batch(cfg, key):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, S, cfg.frontend_embed_dim), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (B, 16, cfg.frontend_embed_dim), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    loss, parts = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
+    assert loss.shape == () and bool(jnp.isfinite(loss)), arch
+
+    logits, state = jax.jit(lambda p, b: prefill(p, b, cfg))(params, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    dbatch = {k: v for k, v in batch.items() if k != "labels"}
+    dbatch["tokens"] = batch["tokens"][:, :1]
+    logits2, state2 = jax.jit(
+        lambda p, s, b: decode_step(p, s, b, cfg))(params, state, dbatch)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    assert int(state2["pos"]) == int(state["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_published(arch):
+    """Analytic param counts land near the published model sizes."""
+    published = {
+        "gemma3-4b": 3.9e9, "smollm-360m": 0.36e9, "qwen2-72b": 72.7e9,
+        "mistral-nemo-12b": 12.2e9, "qwen3-moe-30b-a3b": 30.5e9,
+        "llama4-maverick-400b-a17b": 400e9, "seamless-m4t-large-v2": 2.0e9,
+        "jamba-v0.1-52b": 52e9, "qwen2-vl-7b": 7.6e9, "mamba2-370m": 0.37e9,
+        "mixtral-8x7b": 46.7e9, "phi35-moe": 41.9e9,
+    }
+    got = get_config(arch).param_count()
+    want = published[arch]
+    assert abs(got - want) / want < 0.08, (arch, got, want)

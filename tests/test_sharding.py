@@ -1,0 +1,89 @@
+"""Partitioning rules + HLO analyzer unit tests (single device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+from repro.sharding.partition import opt_state_spec, spec_for
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def _spec(path_names, shape):
+    class K:
+        def __init__(self, n):
+            self.key = n
+    from jax.tree_util import DictKey
+    path = tuple(DictKey(n) for n in path_names)
+    return spec_for(path, shape, _FakeMesh())
+
+
+def test_column_row_rules():
+    assert _spec(("scan", "s0", "attn", "wq"), (1, 512, 1024)) == P(None, None, "model")
+    assert _spec(("scan", "s0", "attn", "wo"), (1, 1024, 512)) == P(None, "model", None)
+    assert _spec(("scan", "s0", "ffn", "w1"), (1, 512, 2048)) == P(None, None, "model")
+    assert _spec(("scan", "s0", "ffn", "w2"), (1, 2048, 512)) == P(None, "model", None)
+
+
+def test_moe_expert_parallel_rule():
+    assert _spec(("scan", "s0", "moe", "w1"), (1, 128, 512, 768)) == \
+        P(None, "model", None, None)
+    assert _spec(("scan", "s0", "moe", "w2"), (1, 128, 768, 512)) == \
+        P(None, "model", None, None)
+    # router replicated
+    assert _spec(("scan", "s0", "moe", "router"), (1, 512, 128)) == P()
+
+
+def test_indivisible_dims_stay_replicated():
+    # 1000 not divisible by the 16-way axis -> replicated (canonical P())
+    assert _spec(("scan", "s0", "attn", "wq"), (1, 960, 1000)) == P()
+    # note: smollm's 15*64=960 IS divisible by 16 at the projection level;
+    # the head-count misfit only bites at the [S, H, hd] reshape.
+
+
+def test_vocab_rule_and_zero1():
+    sp = _spec(("embed",), (49152, 960))
+    assert sp == P("model", None)
+    o = opt_state_spec(sp, (49152, 960), _FakeMesh())
+    assert o == P("model", "data")
+    # nothing free/divisible -> unchanged
+    o2 = opt_state_spec(P("model", None), (49152, 15), _FakeMesh())
+    assert o2 == P("model", None)
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    def scanned(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    xs = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+    hlo = jax.jit(scanned).lower(xs, ws).compile().as_text()
+    c = analyze(hlo)
+    expect = 12 * 2 * 128 * 256 * 256
+    assert c.flops == pytest.approx(expect, rel=0.05)
+
+
+def test_hlo_analyzer_collective_formulas():
+    hlo = """
+HloModule m
+
+ENTRY %main.1 (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128] parameter(0)
+  %ar = f32[64,128] all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %ag = f32[64,128] all-gather(%ar), replica_groups=[2,4]<=[8], dimensions={0}
+}
+"""
+    c = analyze(hlo)
+    bytes_ = 64 * 128 * 4
+    want_ar = 2 * bytes_ * 3 / 4
+    want_ag = bytes_ * 3 / 4
+    assert c.coll["all-reduce"]["wire_bytes"] == pytest.approx(want_ar)
+    assert c.coll["all-gather"]["wire_bytes"] == pytest.approx(want_ag)
