@@ -1,8 +1,39 @@
-"""Shared benchmark utilities: CSV emit + paper-value validation."""
+"""Shared benchmark utilities: CSV emit, paper-value validation, and the
+live batched-scheduler probe used by the fig5/fig6 ``--live`` modes."""
 from __future__ import annotations
 
 import time
 from typing import Optional
+
+
+def run_live_scheduler(policy: str = "lru", slots: int = 4,
+                       requests: int = 6, new_tokens: int = 12,
+                       arch: str = "mixtral-8x7b", seed: int = 0):
+    """Serve `requests` random prompts through the continuous-batching
+    scheduler on a reduced live model (one shared expert cache, grouped
+    gmm execution, per-slot KV positions). Returns (outputs, stats,
+    wall_seconds)."""
+    import jax
+    import numpy as np
+    from repro.config import CacheConfig, get_config, reduced
+    from repro.models import init_params
+    from repro.serving import CollaborativeEngine, \
+        ContinuousBatchingScheduler, EngineConfig
+
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=2, policy=policy)
+    eng = CollaborativeEngine(cfg, params, EngineConfig(
+        cache=ccfg, max_batch=slots, capacity=64), key=key)
+    sched = ContinuousBatchingScheduler(eng)
+    rng = np.random.default_rng(seed)
+    for _ in range(requests):
+        sched.submit(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 9))),
+                     max_new_tokens=new_tokens)
+    t0 = time.time()
+    outs = sched.run()
+    return outs, sched.stats, time.time() - t0
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

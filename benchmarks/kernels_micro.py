@@ -12,7 +12,40 @@ from repro.kernels.decode_attention import decode_attention
 from .common import emit, timeit
 
 
+def bench_cache_access() -> None:
+    """Expert-cache access: seed per-pick scan vs vectorized row update.
+
+    The paper-scale geometry (N=32 layers, M=8 ways) at decode assignment
+    counts from a single request (T*K = 4) up to a full continuous batch
+    (T*K = 64). The vectorized path gathers the set row once and services
+    picks with O(M) vector ops; the seed path re-slices the full [N, M]
+    arrays per pick inside a lax.scan.
+    """
+    import jax.numpy as jnp
+    from repro.config import CacheConfig
+    from repro.core.cache import access, access_scan_reference, \
+        init_cache_state
+
+    print("=== expert-cache access: seed scan vs vectorized row update ===")
+    ccfg = CacheConfig(num_indexes=32, num_ways=8, policy="lru")
+    state = init_cache_state(ccfg)
+    layer = jnp.int32(3)
+    for A in (4, 16, 64):
+        experts = jax.random.randint(jax.random.PRNGKey(A), (A,), 0, 16,
+                                     jnp.int32)
+        new = jax.jit(lambda s, e: access(s, layer, e, "lru"))
+        old = jax.jit(lambda s, e: access_scan_reference(s, layer, e, "lru"))
+        t_new = timeit(lambda: jax.block_until_ready(new(state, experts)),
+                       iters=50, warmup=5)
+        t_old = timeit(lambda: jax.block_until_ready(old(state, experts)),
+                       iters=50, warmup=5)
+        emit(f"cache_access.A{A}.vectorized", t_new,
+             f"seed_scan={t_old:.1f}us speedup={t_old / t_new:.2f}x "
+             f"(N=32 M=8 lru, {A} assignments/step)")
+
+
 def main() -> None:
+    bench_cache_access()
     print("=== kernels: analytic roofline + interpret-mode correctness ===")
     # mixtral-shaped expert pair on one device
     E, C, D, F = 2, 128, 512, 1792        # scaled-down for interpret mode

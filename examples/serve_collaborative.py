@@ -1,5 +1,7 @@
 """Paper workflow end-to-end: cache-policy and geometry sweep on a live
-(reduced) Phi-3.5-MoE model, mirroring the shape of paper Fig. 5/6.
+(reduced) Phi-3.5-MoE model, mirroring the shape of paper Fig. 5/6 — now
+served through the continuous-batching scheduler: 4 request slots share
+one expert cache, requests admit and retire without draining the batch.
 
     PYTHONPATH=src python examples/serve_collaborative.py
 """
@@ -10,29 +12,43 @@ import numpy as np
 
 from repro.config import CacheConfig, get_config, reduced
 from repro.models import init_params
-from repro.serving import CollaborativeEngine, EngineConfig
+from repro.serving import CollaborativeEngine, ContinuousBatchingScheduler, \
+    EngineConfig
+
+SLOTS = 4
+REQUESTS = 6
+NEW_TOKENS = 16
 
 
 def main():
     key = jax.random.PRNGKey(1)
     cfg = reduced(get_config("phi35-moe"))
     params = init_params(cfg, key)
-    prompt = np.asarray(jax.random.randint(key, (1, 16), 0, cfg.vocab_size))
+    rng = np.random.default_rng(1)
 
     E = cfg.moe.num_experts
-    print(f"model: {cfg.name} (reduced) layers={cfg.num_layers} experts={E}")
+    print(f"model: {cfg.name} (reduced) layers={cfg.num_layers} experts={E} "
+          f"slots={SLOTS} requests={REQUESTS}")
     print(f"{'config':>14s} {'policy':>7s} {'hit rate':>9s} {'tok/s':>7s}")
     for ways in (2, 4):
         for policy in ("lru", "fifo", "random"):
             ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=ways,
                                policy=policy)
             eng = CollaborativeEngine(
-                cfg, params, EngineConfig(cache=ccfg, capacity=128), key=key)
+                cfg, params, EngineConfig(cache=ccfg, max_batch=SLOTS,
+                                          capacity=128), key=key)
+            sched = ContinuousBatchingScheduler(eng)
+            for r in range(REQUESTS):
+                plen = int(rng.integers(8, 17))
+                sched.submit(rng.integers(0, cfg.vocab_size, plen),
+                             max_new_tokens=NEW_TOKENS)
             t0 = time.time()
-            _, stats = eng.generate(prompt, steps=32)
+            outs = sched.run()
             dt = time.time() - t0
+            stats = sched.stats
+            total = sum(len(o) for o in outs.values())
             print(f"  (N={cfg.num_layers:2d},M={ways}) {policy:>7s} "
-                  f"{stats['hit_rate']:9.3f} {32/dt:7.1f}")
+                  f"{stats['hit_rate']:9.3f} {total/dt:7.1f}")
     print("(wall tok/s on this CPU container is not the paper metric — the "
           "calibrated benchmark is benchmarks/fig5_throughput.py)")
 

@@ -1,13 +1,21 @@
 """The paper's contribution: two-tier collaborative MoE inference with a
-set-associative expert cache and asynchronous post-fetch."""
-from .cache import CacheState, access, init_cache_state, lookup, slot_id
-from .collaborative import ExpertTiers, collaborative_moe, init_tiers
-from .policies import NumpyCache, random_policy_hit_probs
+set-associative expert cache, grouped gmm-backed execution and
+asynchronous post-fetch."""
+from .cache import CacheState, access, access_scan_reference, \
+    init_cache_state, lookup, slot_id
+from .collaborative import ExpertTiers, collaborative_moe, \
+    collaborative_moe_offloaded, collaborative_moe_reference, \
+    host_offload_supported, init_tiers, memory_kinds, offload_host_tier
+from .policies import NumpyCache, PolicySpec, policy_spec, \
+    random_policy_hit_probs
 from .router_trace import TraceConfig, synthetic_trace, trace_stats
 
 __all__ = [
-    "CacheState", "access", "init_cache_state", "lookup", "slot_id",
-    "ExpertTiers", "collaborative_moe", "init_tiers",
-    "NumpyCache", "random_policy_hit_probs",
+    "CacheState", "access", "access_scan_reference", "init_cache_state",
+    "lookup", "slot_id",
+    "ExpertTiers", "collaborative_moe", "collaborative_moe_offloaded",
+    "collaborative_moe_reference", "host_offload_supported", "init_tiers",
+    "memory_kinds", "offload_host_tier",
+    "NumpyCache", "PolicySpec", "policy_spec", "random_policy_hit_probs",
     "TraceConfig", "synthetic_trace", "trace_stats",
 ]

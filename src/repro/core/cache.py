@@ -9,7 +9,8 @@ jit/scan-compatible — the cache lives inside the serving step:
   age   [N, M] int32 — last-access clock (LRU) / insertion clock (FIFO)
   clock []     int32 — global access counter
 
-Policies (paper §IV-D):
+Policies are described by :class:`repro.core.policies.PolicySpec` (shared
+with the numpy twin so the two implementations cannot drift):
   lru    — refresh age on hit and insert; evict min-age way.
   fifo   — age set on insert only; evict min-age way.
   random — the paper's static-random baseline: a fixed random expert set is
@@ -19,6 +20,19 @@ Policies (paper §IV-D):
 Layers >= N are beyond cache coverage (paper's "layer Z"): accesses miss
 and inserts are suppressed — handled branchlessly so the layer index may
 be a traced scan counter.
+
+``access`` services one decode step's picks for one layer. All picks hit
+the *same* set, so the update is row-local: the set row is gathered once,
+each pick is serviced with O(M) vector ops (rank-based victim selection =
+argmin over the way scores), and the row is scattered back once. This
+replaces the seed implementation's per-pick ``lax.scan`` whose every step
+sliced and re-wrote the full [N, M] arrays — the seed path is retained as
+:func:`access_scan_reference` for parity tests and the microbenchmark.
+Sequential semantics (a hardware cache servicing the router's picks in
+order, duplicates refreshing twice, an insert at pick i visible to pick
+i+1) are preserved exactly; work-dedup across duplicate picks happens at
+the execution layer (repro.core.collaborative groups FFN work and weight
+fetches per *unique* expert).
 """
 from __future__ import annotations
 
@@ -28,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import CacheConfig
-
+from .policies import PolicySpec, policy_spec
 
 class CacheState(NamedTuple):
     tags: jax.Array
@@ -46,8 +60,9 @@ class CacheState(NamedTuple):
 
 def init_cache_state(ccfg: CacheConfig, num_experts: int = 0,
                      key=None) -> CacheState:
+    spec = policy_spec(ccfg.policy)
     tags = jnp.full((ccfg.num_indexes, ccfg.num_ways), -1, jnp.int32)
-    if ccfg.policy == "random":
+    if spec.needs_key:
         assert key is not None and num_experts > 0, \
             "static-random policy needs a key and the expert count"
         # pin M distinct random experts per set, fixed forever
@@ -65,23 +80,77 @@ def lookup(state: CacheState, layer: jax.Array, experts: jax.Array
     row = jnp.where(layer < n, layer, 0)
     tags_l = jax.lax.dynamic_index_in_dim(state.tags, row, 0, keepdims=False)
     eq = tags_l[None, :] == experts[:, None]            # [A, M]
-    hit = eq.any(axis=1) & (layer < n) & (experts[:, None] >= 0).any(axis=1)
+    hit = eq.any(axis=1) & (layer < n) & (experts >= 0)
     way = jnp.argmax(eq, axis=1).astype(jnp.int32)
     return hit, way
 
 
+def _service_one(spec: PolicySpec, covered, tags_l, age_l, clock, e):
+    """Service one pick against the [M] set row. Pure vector ops."""
+    eq = tags_l == e
+    valid = covered & (e >= 0)
+    hit = eq.any() & valid
+    hit_way = jnp.argmax(eq).astype(jnp.int32)
+    # rank-based victim selection: empty slots outrank (score -1), else the
+    # least-recently-used/inserted way; argmin = rank-1 under (score, way)
+    victim_score = jnp.where(tags_l < 0, -1, age_l)
+    victim = jnp.argmin(victim_score).astype(jnp.int32)
+    way = jnp.where(hit, hit_way, victim)
+    # LRU refreshes age on hit and insert; FIFO only stamps on insert.
+    refresh = valid if spec.refresh_on_hit else (valid & ~hit)
+    tags_l = tags_l.at[way].set(jnp.where(valid, e, tags_l[way]))
+    age_l = age_l.at[way].set(jnp.where(refresh, clock, age_l[way]))
+    return tags_l, age_l, clock + 1, hit, jnp.where(valid, way, -1)
+
+
 def access(state: CacheState, layer: jax.Array, experts: jax.Array,
            policy: str) -> Tuple[CacheState, jax.Array, jax.Array]:
-    """Probe + update for one layer's required experts (sequential
-    semantics over ``experts``, matching a hardware cache servicing the
-    router's picks in order).
+    """Probe + update for one layer's required experts.
 
     experts: [A] int32 (may contain duplicates; dup hits refresh age once
-    more, as in the paper's implementation). Returns (new state,
-    hit [A] bool — hit *before* any insertion this call, way [A] int32 —
-    the slot each expert resides in afterwards; for `random` policy missed
-    experts get way=-1 since nothing is inserted).
+    more, as in the paper's implementation; entries < 0 are masked — they
+    neither hit nor insert, matching the numpy twin). Returns (new state,
+    hit [A] bool, way [A] int32 — the slot each expert resides in
+    afterwards; masked/uncovered picks and `random`-policy misses get
+    way=-1 since nothing is inserted).
     """
+    spec = policy_spec(policy)
+    n = state.num_indexes
+    covered = layer < n
+    row = jnp.where(covered, layer, 0)
+    tags_l = jax.lax.dynamic_index_in_dim(state.tags, row, 0, keepdims=False)
+
+    if spec.is_static:
+        # static placement never mutates: one vectorized [A, M] probe
+        eq = tags_l[None, :] == experts[:, None]
+        hits = eq.any(axis=1) & covered & (experts >= 0)
+        ways = jnp.where(hits, jnp.argmax(eq, axis=1).astype(jnp.int32), -1)
+        return state, hits, ways
+
+    age_l = jax.lax.dynamic_index_in_dim(state.age, row, 0, keepdims=False)
+
+    def step(carry, e):
+        t, a, c = carry
+        t, a, c, h, w = _service_one(spec, covered, t, a, c, e)
+        return (t, a, c), (h, w)
+
+    (tags_l, age_l, clock), (hits, ways) = jax.lax.scan(
+        step, (tags_l, age_l, state.clock), experts)
+
+    tags = jax.lax.dynamic_update_index_in_dim(state.tags, tags_l, row, 0)
+    age = jax.lax.dynamic_update_index_in_dim(state.age, age_l, row, 0)
+    return CacheState(tags, age, clock), hits, ways
+
+
+def access_scan_reference(state: CacheState, layer: jax.Array,
+                          experts: jax.Array, policy: str
+                          ) -> Tuple[CacheState, jax.Array, jax.Array]:
+    """The seed implementation: per-pick ``lax.scan`` that slices and
+    rewrites the full [N, M] arrays at every step. Kept as the parity
+    oracle for :func:`access` and as the "old path" in the cache-access
+    microbenchmark — do not use in serving code.
+    """
+    spec = policy_spec(policy)
     n, m = state.num_indexes, state.num_ways
     covered = layer < n
     row = jnp.where(covered, layer, 0)
@@ -91,22 +160,20 @@ def access(state: CacheState, layer: jax.Array, experts: jax.Array,
         tags_l = jax.lax.dynamic_index_in_dim(tags, row, 0, keepdims=False)
         age_l = jax.lax.dynamic_index_in_dim(age, row, 0, keepdims=False)
         eq = tags_l == e
-        hit = eq.any() & covered
+        hit = eq.any() & covered & (e >= 0)
         hit_way = jnp.argmax(eq).astype(jnp.int32)
 
-        if policy == "random":
+        if spec.is_static:
             way = jnp.where(hit, hit_way, -1)
             return (tags, age, clock), (hit, way)
 
-        # victim: empty slots win (score -1), else least-recently-used/inserted
         victim_score = jnp.where(tags_l < 0, -1, age_l)
         victim = jnp.argmin(victim_score).astype(jnp.int32)
         way = jnp.where(hit, hit_way, victim)
 
         do_write = covered & (e >= 0)
         new_tag = jnp.where(do_write, e, tags_l[way])
-        # LRU refreshes age on hit and insert; FIFO only stamps on insert.
-        refresh = (do_write & ~hit) if policy == "fifo" else do_write
+        refresh = do_write if spec.refresh_on_hit else (do_write & ~hit)
         new_age = jnp.where(refresh, clock, age_l[way])
 
         tags_l = tags_l.at[way].set(new_tag)
@@ -117,6 +184,8 @@ def access(state: CacheState, layer: jax.Array, experts: jax.Array,
 
     (tags, age, clock), (hits, ways) = jax.lax.scan(
         step, (state.tags, state.age, state.clock), experts)
+    if spec.is_static:
+        return state, hits, ways
     return CacheState(tags, age, clock), hits, ways
 
 

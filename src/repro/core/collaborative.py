@@ -4,16 +4,31 @@ Per MoE layer of a decode step:
 
   (1) cache check    — probe the set-associative cache for the router's
                        top-k experts (repro.core.cache, inside the jit).
-  (2) execute        — hit experts compute from the *device tier* (the
-                       [N*M, ...] cache slot buffer in fast memory); missed
-                       experts compute from the *host tier* (full expert
-                       table, host memory space on real hardware).
-  (3) post-fetch     — missed experts' weights are written into their
-                       assigned cache slots. The write feeds only *future*
-                       steps (no data path to this layer's output), so XLA
-                       overlaps the copy with downstream compute — the TPU
-                       analogue of the paper's second copy engine / dual
-                       CUDA streams.
+  (2) execute        — *grouped*: the step's assignments are bucketed by
+                       unique expert into an [G, C, D] dispatch buffer and
+                       executed by the grouped Pallas kernels
+                       (repro.kernels.moe_gmm.ops.moe_ffn). Each unique
+                       expert's weights are gathered ONCE per step —
+                       resident experts from the *device tier* (the
+                       [N*M, ...] cache slot buffer in fast memory),
+                       non-resident experts from the *host tier* (full
+                       expert table, host memory space on real hardware).
+  (3) post-fetch     — newly inserted experts' weights are written into
+                       their assigned cache slots, once per unique expert.
+                       The write feeds only *future* steps (no data path to
+                       this layer's output), so XLA overlaps the copy with
+                       downstream compute — the TPU analogue of the paper's
+                       second copy engine / dual CUDA streams.
+
+The seed implementation executed every assignment separately (dense
+per-assignment weight gathers + a vmapped single-row FFN) — it is retained
+as :func:`collaborative_moe_reference` for parity tests and benchmarks.
+Grouping also fixes a latent seed bug: when two concurrent requests picked
+the same non-resident expert, the seed's second assignment was marked a
+cache hit (the bookkeeping insert from the first assignment) and read the
+*stale* slot buffer; the grouped path derives each unique expert's tier
+from its residency *before* the step, so both assignments read the host
+tier and compute correctly.
 
 All state (CacheState + slot buffer) threads functionally through the
 serving step; donate both so the updates are in-place on device.
@@ -30,7 +45,9 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import CacheConfig, ModelConfig
+from repro.config import CacheConfig
+from repro.kernels.moe_gmm.ops import moe_ffn
+from repro.kernels.moe_gmm.ref import moe_ffn_ref
 from . import cache as cache_lib
 
 Params = Dict[str, jax.Array]
@@ -52,18 +69,42 @@ class ExpertTiers(NamedTuple):
     state: cache_lib.CacheState
 
 
+def memory_kinds() -> Tuple[Optional[str], str]:
+    """(host_kind, device_kind) for the literal two-tier placement.
+
+    host_kind prefers ``pinned_host`` (TPU: host DRAM over PCIe) and falls
+    back to ``unpinned_host``; None when the backend exposes no host space.
+    device_kind is the backend's default memory. On this CPU container both
+    resolve to ``unpinned_host`` — the placement degenerates to ordinary
+    buffers but the program structure (and tests) stay identical.
+    """
+    dev = jax.devices()[0]
+    kinds = {m.kind for m in dev.addressable_memories()}
+    host = next((k for k in ("pinned_host", "unpinned_host") if k in kinds),
+                None)
+    return host, dev.default_memory().kind
+
+
+def host_offload_supported() -> bool:
+    return memory_kinds()[0] is not None
+
+
 def offload_host_tier(tiers: ExpertTiers, device=None) -> ExpertTiers:
-    """Place the host-tier expert table in the `pinned_host` memory space.
+    """Place the host-tier expert table in the host memory space.
 
     This is the literal JAX expression of the paper's slow tier: the full
     expert table leaves accelerator HBM; hit-path reads touch only the
     HBM-resident slot buffers, miss-path reads stream over the host link.
     (Works on CPU and TPU backends; on TPU this is host DRAM over PCIe.)
     """
-    import jax
     from jax.sharding import SingleDeviceSharding
+    host_kind, _ = memory_kinds()
+    if host_kind is None:
+        raise RuntimeError(
+            "backend exposes no host memory space "
+            "(need pinned_host or unpinned_host)")
     dev = device or jax.devices()[0]
-    s = SingleDeviceSharding(dev, memory_kind="pinned_host")
+    s = SingleDeviceSharding(dev, memory_kind=host_kind)
     return tiers._replace(
         host_w1=jax.device_put(tiers.host_w1, s),
         host_w3=jax.device_put(tiers.host_w3, s),
@@ -105,27 +146,257 @@ def _ffn_one(w1, w3, w2, x):
     return h @ w2
 
 
+def _group_by_expert(flat_e: jax.Array, num_experts: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Bucket assignments by expert id (sort-based, static shapes).
+
+    flat_e: [A] int32 (−1 = masked). Returns (gid [A] — group index per
+    assignment, pos [A] — row within the group's capacity, rep_e [G] —
+    expert id per group, padded groups get −1). The group axis is
+    G = min(A, E+1): at most A distinct picks and at most E experts plus
+    one group of masked (−1) assignments, which sort first into group 0.
+    Group capacity stays A (worst case: every assignment picks the same
+    expert), so the dispatch buffer is [G, A, D].
+    """
+    A = flat_e.shape[0]
+    G = min(A, num_experts + 1)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), se[1:] != se[:-1]]) if A > 1 else \
+        jnp.ones((1,), bool)
+    gid_sorted = jnp.cumsum(first) - 1
+    seg_start = jax.lax.cummax(jnp.where(first, jnp.arange(A), 0))
+    pos_sorted = jnp.arange(A) - seg_start
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(A))
+    rep_e = jnp.full((G,), -1, flat_e.dtype).at[gid_sorted].set(
+        se, mode="drop")
+    return gid_sorted[inv], pos_sorted[inv], rep_e
+
+
+def _grouped_weights(tiers: ExpertTiers, layer, rep_e, ccfg: CacheConfig):
+    """Gather each unique expert's weights once — resident experts from the
+    slot buffer (fast tier), others from the host table (slow tier).
+    Residency is probed against the PRE-step cache state: a slot assigned
+    to an expert this step holds its weights only from the next step on
+    (the post-fetch is off the critical path)."""
+    resident, way = cache_lib.lookup(tiers.state, layer, rep_e)
+    slots = cache_lib.slot_id(layer, jnp.maximum(way, 0), ccfg.num_ways)
+    slots = jnp.where(resident, slots, 0)
+    e_ix = jnp.maximum(rep_e, 0)
+    r3 = resident[:, None, None]
+    host_w1 = tiers.host_w1[layer, e_ix]
+    host_w3 = tiers.host_w3[layer, e_ix]
+    host_w2 = tiers.host_w2[layer, e_ix]
+    w1 = jnp.where(r3, tiers.slot_w1[slots], host_w1)
+    w3 = jnp.where(r3, tiers.slot_w3[slots], host_w3)
+    w2 = jnp.where(r3, tiers.slot_w2[slots], host_w2)
+    return resident, way, (w1, w3, w2), (host_w1, host_w3, host_w2)
+
+
+def _post_fetch(tiers: ExpertTiers, layer, rep_e, resident, res_way,
+                new_state, host_w, ccfg: CacheConfig):
+    """Write inserted experts' weights into their slots, once per unique
+    expert. Probes the POST-step state: an expert is fetched iff its final
+    (expert -> way) mapping is not already backed by the buffer — newly
+    resident, or evicted-and-reinserted at a different way within the step
+    (possible when picks exceed the ways). An expert inserted then evicted
+    within the same step is correctly skipped. Output `y` never reads
+    these writes."""
+    new_res, new_way = cache_lib.lookup(new_state, layer, rep_e)
+    fetch = new_res & ~(resident & (new_way == res_way))
+    dst = cache_lib.slot_id(layer, new_way, ccfg.num_ways)
+    # out-of-range destination + mode="drop" suppresses non-fetched rows
+    dst = jnp.where(fetch, dst, tiers.slot_w1.shape[0])
+    host_w1, host_w3, host_w2 = host_w
+    s_w1 = tiers.slot_w1.at[dst].set(host_w1, mode="drop")
+    s_w3 = tiers.slot_w3.at[dst].set(host_w3, mode="drop")
+    s_w2 = tiers.slot_w2.at[dst].set(host_w2, mode="drop")
+    return s_w1, s_w3, s_w2, fetch
+
+
+def _combine(ybuf, gid, pos, tok, top_w, valid, T, x_dtype):
+    ya = ybuf[gid, pos]
+    scale = top_w.reshape(-1) * valid.astype(jnp.float32)
+    ya = ya * scale[:, None].astype(ya.dtype)
+    return jnp.zeros((T, ybuf.shape[-1]), x_dtype).at[tok].add(ya) \
+        .astype(x_dtype)
+
+
+def _stats(hits, valid, fetch):
+    return {
+        "hits": hits.sum(),
+        "accesses": valid.sum().astype(jnp.int32),
+        "host_flops_assignments": (valid & ~hits).sum(),
+        "fetched_experts": fetch.sum(),
+    }
+
+
 def collaborative_moe(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
-                      top_i: jax.Array, top_w: jax.Array, ccfg: CacheConfig
+                      top_i: jax.Array, top_w: jax.Array, ccfg: CacheConfig,
+                      active: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, ExpertTiers, Dict[str, jax.Array]]:
     """Execute one MoE layer for a decode micro-batch through the tiers.
 
     x: [T, D]; top_i/top_w: [T, K]. layer: traced scalar (the scan
-    counter). Returns (y [T, D], updated tiers, stats).
+    counter). active: optional [T] bool — rows of padded scheduler slots
+    are masked out of the cache, the stats and the output when False.
+    Returns (y [T, D], updated tiers, stats).
+    """
+    T, K = top_i.shape
+    flat_e = top_i.reshape(-1).astype(jnp.int32)
+    if active is not None:
+        flat_e = jnp.where(jnp.repeat(active, K), flat_e, -1)
+    valid = flat_e >= 0
+
+    # (1) cache check + bookkeeping update (tags/age; sequential semantics)
+    new_state, hits, _ = cache_lib.access(tiers.state, layer, flat_e,
+                                          ccfg.policy)
+
+    # (2) grouped execution through the gmm kernels
+    tok = jnp.repeat(jnp.arange(T), K)
+    xa = x[tok]                                            # [A, D]
+    gid, pos, rep_e = _group_by_expert(flat_e, tiers.host_w1.shape[1])
+    resident, res_way, w, host_w = _grouped_weights(tiers, layer, rep_e, ccfg)
+    A, G = flat_e.shape[0], rep_e.shape[0]
+    xbuf = jnp.zeros((G, A, x.shape[-1]), x.dtype).at[gid, pos].set(xa)
+    ybuf = moe_ffn(xbuf, *w)                               # [G, A, D]
+
+    # (3) post-fetch: reuse the execution path's host gather (one gather
+    # per unique expert per step). Async-schedulable: y ignores the writes.
+    s_w1, s_w3, s_w2, fetch = _post_fetch(tiers, layer, rep_e, resident,
+                                          res_way, new_state, host_w, ccfg)
+
+    y = _combine(ybuf, gid, pos, tok, top_w, valid, T, x.dtype)
+    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
+                           state=new_state)
+    return y, tiers, _stats(hits, valid, fetch)
+
+
+def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
+                                x: jax.Array, top_i: jax.Array,
+                                top_w: jax.Array, ccfg: CacheConfig,
+                                active: Optional[jax.Array] = None
+                                ) -> Tuple[jax.Array, ExpertTiers,
+                                           Dict[str, jax.Array]]:
+    """The paper's workflow with *literal* memory-space semantics.
+
+    Requires ``offload_host_tier(tiers)`` first (host weights in the host
+    memory space). Then, inside one jitted step:
+      * non-resident experts' grouped FFNs execute under
+        ``compute_on("device_host")`` reading host-space weights — the
+        paper's CPU compute;
+      * the dispatch buffer crosses to host and the results cross back —
+        the paper's 0.11 ms activation round-trip;
+      * post-fetch gathers newly inserted experts' weights host-side (once
+        per unique expert) and device_puts them into the cache slot
+        buffers — the paper's asynchronous PCIe weight copy (XLA schedules
+        it off the output's critical path exactly as in the default
+        implementation).
+
+    Same numerics as :func:`collaborative_moe` (tested); use this variant
+    on hardware where the host tier genuinely does not fit HBM. Resident
+    groups run through the same grouped gmm kernels as the default path;
+    host groups use the jnp oracle (Pallas does not lower to the host
+    compute stream).
+    """
+    from jax.experimental.compute_on import compute_on
+    from jax.sharding import SingleDeviceSharding
+
+    # single-device serving path (the paper's setting); must run under
+    # jit — memory-space transfers are compile-time placements
+    host_kind, dev_kind = memory_kinds()
+    if host_kind is None:
+        raise RuntimeError("backend exposes no host memory space")
+    dev = jax.devices()[0]
+    host_s = SingleDeviceSharding(dev, memory_kind=host_kind)
+    dev_s = SingleDeviceSharding(dev, memory_kind=dev_kind)
+
+    T, K = top_i.shape
+    flat_e = top_i.reshape(-1).astype(jnp.int32)
+    if active is not None:
+        flat_e = jnp.where(jnp.repeat(active, K), flat_e, -1)
+    valid = flat_e >= 0
+    new_state, hits, _ = cache_lib.access(tiers.state, layer, flat_e,
+                                          ccfg.policy)
+
+    tok = jnp.repeat(jnp.arange(T), K)
+    xa = x[tok]
+    gid, pos, rep_e = _group_by_expert(flat_e, tiers.host_w1.shape[1])
+    resident, way = cache_lib.lookup(tiers.state, layer, rep_e)
+    slots = jnp.where(resident,
+                      cache_lib.slot_id(layer, jnp.maximum(way, 0),
+                                        ccfg.num_ways), 0)
+    e_ix = jnp.maximum(rep_e, 0)
+    A = flat_e.shape[0]
+    xbuf = jnp.zeros((rep_e.shape[0], A, x.shape[-1]), x.dtype) \
+        .at[gid, pos].set(xa)
+
+    # device path (resident groups): reads only the HBM slot buffers
+    ybuf_dev = moe_ffn(xbuf, tiers.slot_w1[slots], tiers.slot_w3[slots],
+                       tiers.slot_w2[slots])
+
+    # host path (non-resident groups): dispatch buffer crosses to host,
+    # the grouped FFN runs there against host-space weights
+    @compute_on("device_host")
+    @jax.jit
+    def host_groups(hw1, hw3, hw2, xh, eh, lh):
+        # two-step indexing: mixed-space index broadcasting inside
+        # compute_on trips XLA; dynamic layer slice + row gather doesn't
+        w1 = jax.lax.dynamic_index_in_dim(hw1, lh, 0, keepdims=False)[eh]
+        w3 = jax.lax.dynamic_index_in_dim(hw3, lh, 0, keepdims=False)[eh]
+        w2 = jax.lax.dynamic_index_in_dim(hw2, lh, 0, keepdims=False)[eh]
+        return moe_ffn_ref(xh, w1, w3, w2)
+
+    xb_h = jax.device_put(xbuf, host_s)
+    e_h = jax.device_put(e_ix, host_s)
+    l_h = jax.device_put(layer, host_s)
+    ybuf_host = jax.device_put(
+        host_groups(tiers.host_w1, tiers.host_w3, tiers.host_w2,
+                    xb_h, e_h, l_h), dev_s)
+    ybuf = jnp.where(resident[:, None, None], ybuf_dev, ybuf_host)
+    y = _combine(ybuf, gid, pos, tok, top_w, valid, T, x.dtype)
+
+    # post-fetch: host-side gather of the newly inserted experts (once per
+    # unique expert), then the explicit host->device copy into the slots
+    @compute_on("device_host")
+    @jax.jit
+    def host_gather(hw, eh, lh):
+        return jax.lax.dynamic_index_in_dim(hw, lh, 0, keepdims=False)[eh]
+
+    src1 = jax.device_put(host_gather(tiers.host_w1, e_h, l_h), dev_s)
+    src3 = jax.device_put(host_gather(tiers.host_w3, e_h, l_h), dev_s)
+    src2 = jax.device_put(host_gather(tiers.host_w2, e_h, l_h), dev_s)
+    s_w1, s_w3, s_w2, fetch = _post_fetch(
+        tiers, layer, rep_e, resident, way, new_state, (src1, src3, src2),
+        ccfg)
+
+    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
+                           state=new_state)
+    return y, tiers, _stats(hits, valid, fetch)
+
+
+def collaborative_moe_reference(tiers: ExpertTiers, layer: jax.Array,
+                                x: jax.Array, top_i: jax.Array,
+                                top_w: jax.Array, ccfg: CacheConfig
+                                ) -> Tuple[jax.Array, ExpertTiers,
+                                           Dict[str, jax.Array]]:
+    """The seed per-assignment path: dense dual gathers + vmapped
+    single-row FFNs + a sequential post-fetch scan. Kept as the parity
+    oracle and benchmark baseline for :func:`collaborative_moe` — do not
+    use in serving code. (Known limitation, inherited: duplicate picks of
+    a non-resident expert across concurrent tokens read the stale slot
+    buffer — the grouped path fixes this.)
     """
     T, K = top_i.shape
     A = T * K
     flat_e = top_i.reshape(-1)
 
-    # (1) cache check + bookkeeping update (tags/age; sequential semantics)
-    new_state, hits, ways = cache_lib.access(tiers.state, layer, flat_e,
-                                             ccfg.policy)
+    new_state, hits, ways = cache_lib.access_scan_reference(
+        tiers.state, layer, flat_e, ccfg.policy)
     slots = cache_lib.slot_id(layer, jnp.maximum(ways, 0), ccfg.num_ways)
     slots = jnp.where(ways >= 0, slots, 0)
 
-    # (2) execute: hit experts read the device slot buffer, missed experts
-    # read the host tier. Both paths are dense gathers so the program stays
-    # branchless; `hits` selects per assignment.
     tok = jnp.repeat(jnp.arange(T), K)
     xa = x[tok]                                            # [A, D]
     w1_dev = tiers.slot_w1[slots]
@@ -141,8 +412,6 @@ def collaborative_moe(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
     ya = ya * top_w.reshape(-1)[:, None].astype(ya.dtype)
     y = jnp.zeros_like(x).at[tok].add(ya)
 
-    # (3) post-fetch: write missed experts' weights into their slots.
-    # Output `y` does not depend on these writes -> async-schedulable.
     do_fetch = (~hits) & (ways >= 0)
 
     def fetch(carry, inp):
@@ -158,107 +427,6 @@ def collaborative_moe(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
     (s_w1, s_w3, s_w2), _ = jax.lax.scan(
         fetch, (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2),
         (slots, flat_e, do_fetch))
-
-    stats = {
-        "hits": hits.sum(),
-        "accesses": jnp.asarray(A, jnp.int32),
-        "host_flops_assignments": (~hits).sum(),
-        "fetched_experts": do_fetch.sum(),
-    }
-    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
-                           state=new_state)
-    return y, tiers, stats
-
-
-def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
-                                x: jax.Array, top_i: jax.Array,
-                                top_w: jax.Array, ccfg: CacheConfig
-                                ) -> Tuple[jax.Array, ExpertTiers,
-                                           Dict[str, jax.Array]]:
-    """The paper's workflow with *literal* memory-space semantics.
-
-    Requires ``offload_host_tier(tiers)`` first (host weights in the
-    ``pinned_host`` space). Then, inside one jitted step:
-      * miss-path expert FFNs execute under ``compute_on("device_host")``
-        reading host-space weights — the paper's CPU compute;
-      * the activation rows cross to host and the results cross back —
-        the paper's 0.11 ms activation round-trip;
-      * post-fetch gathers missed experts' weights host-side and
-        device_puts them into the cache slot buffers — the paper's
-        asynchronous PCIe weight copy (XLA schedules it off the output's
-        critical path exactly as in the default implementation).
-
-    Same numerics as :func:`collaborative_moe` (tested); use this variant
-    on hardware where the host tier genuinely does not fit HBM.
-    """
-    from jax.experimental.compute_on import compute_on
-    from jax.sharding import SingleDeviceSharding
-
-    # single-device serving path (the paper's setting); must run under
-    # jit — memory-space transfers are compile-time placements
-    dev = jax.devices()[0]
-    host_s = SingleDeviceSharding(dev, memory_kind="pinned_host")
-    dev_s = SingleDeviceSharding(dev, memory_kind="device")
-
-    T, K = top_i.shape
-    A = T * K
-    flat_e = top_i.reshape(-1)
-    new_state, hits, ways = cache_lib.access(tiers.state, layer, flat_e,
-                                             ccfg.policy)
-    slots = cache_lib.slot_id(layer, jnp.maximum(ways, 0), ccfg.num_ways)
-    slots = jnp.where(ways >= 0, slots, 0)
-    tok = jnp.repeat(jnp.arange(T), K)
-    xa = x[tok]
-
-    # device path (cache hits): reads only the HBM slot buffers
-    y_dev = jax.vmap(_ffn_one)(tiers.slot_w1[slots], tiers.slot_w3[slots],
-                               tiers.slot_w2[slots], xa)
-
-    # host path (misses): activations cross to host, FFN runs there
-    @compute_on("device_host")
-    @jax.jit
-    def host_path(hw1, hw3, hw2, xh, eh, lh):
-        # two-step indexing: mixed-space index broadcasting inside
-        # compute_on trips XLA; dynamic layer slice + row gather doesn't
-        w1 = jax.lax.dynamic_index_in_dim(hw1, lh, 0, keepdims=False)[eh]
-        w3 = jax.lax.dynamic_index_in_dim(hw3, lh, 0, keepdims=False)[eh]
-        w2 = jax.lax.dynamic_index_in_dim(hw2, lh, 0, keepdims=False)[eh]
-        return jax.vmap(_ffn_one)(w1, w3, w2, xh)
-
-    xa_h = jax.device_put(xa, host_s)
-    e_h = jax.device_put(flat_e, host_s)
-    l_h = jax.device_put(layer, host_s)
-    y_host = jax.device_put(
-        host_path(tiers.host_w1, tiers.host_w3, tiers.host_w2,
-                  xa_h, e_h, l_h), dev_s)
-
-    ya = jnp.where(hits[:, None], y_dev, y_host)
-    ya = ya * top_w.reshape(-1)[:, None].astype(ya.dtype)
-    y = jnp.zeros_like(x).at[tok].add(ya)
-
-    # post-fetch: host-side gather of the missed experts, then the
-    # explicit host->device copy into the cache slots
-    do_fetch = (~hits) & (ways >= 0)
-
-    @compute_on("device_host")
-    @jax.jit
-    def host_gather(hw, eh, lh):
-        return jax.lax.dynamic_index_in_dim(hw, lh, 0, keepdims=False)[eh]
-
-    src1 = jax.device_put(host_gather(tiers.host_w1, e_h, l_h), dev_s)
-    src3 = jax.device_put(host_gather(tiers.host_w3, e_h, l_h), dev_s)
-    src2 = jax.device_put(host_gather(tiers.host_w2, e_h, l_h), dev_s)
-
-    def fetch(carry, inp):
-        s_w1, s_w3, s_w2 = carry
-        slot, do, a1, a3, a2 = inp
-        upd = lambda buf, src: jax.lax.dynamic_update_index_in_dim(
-            buf, jnp.where(do, src, buf[slot]), slot, 0)
-        return (upd(s_w1, a1), upd(s_w3, a3), upd(s_w2, a2)), None
-
-    (s_w1, s_w3, s_w2), _ = jax.lax.scan(
-        fetch, (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2),
-        (slots, do_fetch, src1, src3, src2))
 
     stats = {
         "hits": hits.sum(),

@@ -1,17 +1,60 @@
-"""Numpy twin of the JAX expert cache, for trace-scale simulation.
+"""Cache replacement policies: the shared PolicySpec + the numpy twin.
 
-Semantics are bit-identical to repro.core.cache (property tests replay
-random traces through both). Used by the discrete-event simulator, which
-feeds it millions of router decisions — far cheaper here than under jit.
+``PolicySpec`` is the single source of truth for what each eviction policy
+does — both the JAX cache (repro.core.cache) and the numpy twin below
+consume it, so the two implementations cannot drift on policy constants.
+
+The numpy twin's semantics are bit-identical to repro.core.cache
+(property tests replay random traces through both). Used by the
+discrete-event simulator, which feeds it millions of router decisions —
+far cheaper here than under jit.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.config import CacheConfig
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """What one eviction policy does (paper §IV-D).
+
+    name            — registry key ("lru" | "fifo" | "random").
+    inserts_on_miss — False for the static-random baseline: its expert set
+                      is pinned at init and never replaced.
+    refresh_on_hit  — LRU touch-refresh; FIFO stamps on insert only.
+    needs_key       — static placement draws its pinned experts at init.
+    """
+    name: str
+    inserts_on_miss: bool
+    refresh_on_hit: bool
+    needs_key: bool
+
+    @property
+    def is_static(self) -> bool:
+        return not self.inserts_on_miss
+
+
+POLICY_SPECS: Dict[str, PolicySpec] = {
+    "lru": PolicySpec("lru", inserts_on_miss=True, refresh_on_hit=True,
+                      needs_key=False),
+    "fifo": PolicySpec("fifo", inserts_on_miss=True, refresh_on_hit=False,
+                       needs_key=False),
+    "random": PolicySpec("random", inserts_on_miss=False,
+                         refresh_on_hit=False, needs_key=True),
+}
+
+
+def policy_spec(name: str) -> PolicySpec:
+    try:
+        return POLICY_SPECS[name]
+    except KeyError:
+        raise ValueError(f"unknown cache policy {name!r}; "
+                         f"have {sorted(POLICY_SPECS)}") from None
 
 
 @dataclass
@@ -27,9 +70,10 @@ class NumpyCache:
 
     def __post_init__(self):
         n, m = self.ccfg.num_indexes, self.ccfg.num_ways
+        self.spec = policy_spec(self.ccfg.policy)
         self.tags = np.full((n, m), -1, np.int64)
         self.age = np.zeros((n, m), np.int64)
-        if self.ccfg.policy == "random":
+        if self.spec.is_static:
             rng = np.random.default_rng(self.seed)
             assert self.num_experts >= m
             for i in range(n):
@@ -50,11 +94,11 @@ class NumpyCache:
             hit = ways.size > 0
             out.append(bool(hit))
             self.hits += int(hit)
-            if self.ccfg.policy == "random":
+            if self.spec.is_static:
                 continue
             if hit:
                 way = ways[0]
-                if self.ccfg.policy == "lru":
+                if self.spec.refresh_on_hit:
                     row_a[way] = self.clock
             else:
                 empty = np.nonzero(row_t < 0)[0]

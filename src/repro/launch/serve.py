@@ -1,8 +1,9 @@
-"""Serving driver: collaborative two-tier MoE engine (the paper) or the
-plain generic path for non-MoE archs.
+"""Serving driver: collaborative two-tier MoE engine (the paper) with
+continuous batching, or the plain generic path for non-MoE archs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-        --tokens 64 [--ways 4 --indexes 8 --policy lru]
+        --tokens 64 [--ways 4 --indexes 8 --policy lru] \
+        [--concurrency 4 --requests 8]
 
 Reduced configs by default (this is a CPU container); the full configs are
 exercised via the dry-run. Prints tokens/s and the paper's cache counters.
@@ -18,7 +19,8 @@ import numpy as np
 
 from repro.config import CacheConfig, get_config, reduced
 from repro.models import decode_step, init_params, prefill
-from repro.serving import CollaborativeEngine, EngineConfig
+from repro.serving import CollaborativeEngine, ContinuousBatchingScheduler, \
+    EngineConfig
 
 
 def main() -> None:
@@ -31,6 +33,10 @@ def main() -> None:
     ap.add_argument("--ways", type=int, default=2)
     ap.add_argument("--policy", default="lru",
                     choices=["lru", "fifo", "random"])
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="scheduler slots (padded decode batch T)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total requests to serve (default: concurrency*2)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -45,15 +51,27 @@ def main() -> None:
         n = args.indexes if args.indexes is not None else cfg.num_layers // 2
         ccfg = CacheConfig(num_indexes=n, num_ways=args.ways,
                            policy=args.policy)
+        R = args.requests or args.concurrency * 2
         print(f"[serve] collaborative engine: {cfg.name} cache=(N={n}, "
-              f"M={args.ways}, {args.policy})")
+              f"M={args.ways}, {args.policy}) slots={args.concurrency} "
+              f"requests={R}")
         eng = CollaborativeEngine(cfg, params, EngineConfig(
-            cache=ccfg, capacity=args.prompt + args.tokens + 1), key=key)
+            cache=ccfg, max_batch=args.concurrency,
+            capacity=args.prompt + args.tokens + 1), key=key)
+        sched = ContinuousBatchingScheduler(eng)
+        rng = np.random.default_rng(args.seed)
+        for r in range(R):
+            plen = int(rng.integers(max(args.prompt // 2, 1),
+                                    args.prompt + 1))
+            sched.submit(rng.integers(0, cfg.vocab_size, plen),
+                         max_new_tokens=args.tokens)
         t0 = time.time()
-        out, stats = eng.generate(prompt, args.tokens, key)
+        outs = sched.run()
         dt = time.time() - t0
-        print(f"  generated {out.shape} in {dt:.2f}s "
-              f"({args.tokens * args.batch / dt:.1f} tok/s wall)")
+        stats = sched.stats
+        total = sum(len(o) for o in outs.values())
+        print(f"  served {len(outs)} requests / {total} tokens in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s wall, {stats['steps']} decode steps)")
         print(f"  cache hit rate: {stats['hit_rate']:.3f} "
               f"(hits={stats['hits']} accesses={stats['accesses']} "
               f"fetches={stats['fetched_experts']})")

@@ -235,37 +235,40 @@ def decode_attention(p: Params, x: jax.Array, cache: Params, pos: jax.Array,
                      cfg, window: jax.Array | int = -1) -> Tuple[jax.Array, Params]:
     """One-token attention against a cache of static capacity.
 
-    x: [B, 1, D]; cache k/v: [B, S, Hk, hd]; pos: scalar int32 — number of
-    valid cached tokens; the new token has position ``pos`` and is written
-    into slot ``pos`` (clamped to capacity-1).
+    x: [B, 1, D]; cache k/v: [B, S, Hk, hd]; pos: int32 scalar or [B]
+    vector — number of valid cached tokens per batch row (a vector lets a
+    continuous-batching scheduler serve requests at different sequence
+    positions in one padded step); the new token has position ``pos`` and
+    is written into slot ``pos`` (clamped to capacity-1).
     Returns (output [B, 1, D], updated cache).
     """
     B, _, _ = x.shape
     S = cache["k"].shape[1]
     Hk, hd = cfg.num_kv_heads, cfg.head_dim
     group = cfg.num_heads // Hk
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
 
     q, k_new, v_new = _project_qkv(p, x, cfg)
     if cfg.mrope:
-        posq = jnp.broadcast_to(pos, (3, B, 1))
+        posq = jnp.broadcast_to(pos_b[None, :, None], (3, B, 1))
     else:
-        posq = jnp.broadcast_to(pos, (B, 1))
+        posq = pos_b[:, None]
     q, k_new = _rope_qk(q, k_new, posq, cfg)
 
-    # Write the new kv into the cache (donated in the serving step).
-    slot = jnp.minimum(pos, S - 1)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    # Write each row's new kv into its slot (donated in the serving step).
+    slot = jnp.minimum(pos_b, S - 1)                       # [B]
+    k_cache = cache["k"].at[jnp.arange(B), slot].set(k_new[:, 0])
+    v_cache = cache["v"].at[jnp.arange(B), slot].set(v_new[:, 0])
     k_cache = constrain(k_cache, ("pod", "data"), "model", None, None)
     v_cache = constrain(v_cache, ("pod", "data"), "model", None, None)
 
     qg = q.reshape(B, 1, Hk, group, hd).astype(jnp.float32) * hd ** -0.5
     s = jnp.einsum("bqhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
     j = jnp.arange(S)
-    valid = j <= slot
+    valid = j[None, :] <= slot[:, None]                    # [B, S]
     win = jnp.asarray(window, jnp.int32)
-    valid &= jnp.where(win > 0, (pos - j) < win, True)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid &= jnp.where(win > 0, (pos_b[:, None] - j[None, :]) < win, True)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
     o = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)

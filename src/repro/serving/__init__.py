@@ -1,3 +1,5 @@
 from .engine import CollaborativeEngine, EngineConfig
+from .scheduler import ContinuousBatchingScheduler, Request
 
-__all__ = ["CollaborativeEngine", "EngineConfig"]
+__all__ = ["CollaborativeEngine", "EngineConfig",
+           "ContinuousBatchingScheduler", "Request"]

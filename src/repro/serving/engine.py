@@ -4,8 +4,18 @@ Serves an MoE LM with the expert weights split across the two tiers of
 repro.core.collaborative: attention/router/norm weights plus an N-index
 M-way expert cache resident in the fast tier; the full expert table in the
 host tier. Every decode step performs the paper's (1) cache check,
-(2) tiered execution, (3) asynchronous post-fetch, all inside one jitted
-step function whose cache state threads functionally (donated buffers).
+(2) grouped tiered execution (gmm kernels), (3) asynchronous post-fetch,
+all inside one jitted step function whose cache state threads functionally
+(donated buffers).
+
+The engine is *batch-capable*: one decode step serves up to
+``EngineConfig.max_batch`` concurrent requests, each at its own sequence
+position (per-slot KV positions), all sharing ONE expert cache — the
+paper's single-request workflow generalized to continuous batching. The
+request lifecycle (admission, retirement, queueing) lives in
+repro.serving.scheduler; the engine exposes the batch-state primitives it
+needs: ``init_slots`` / ``prefill_request`` / ``write_slot`` /
+``decode_batch``.
 
 The engine exposes the same counters the paper reports: per-layer hit
 rates, host-computed assignment counts, fetch volume — consumed by the
@@ -13,10 +23,8 @@ fig5/fig6 benchmarks in live-model mode and by examples/serve_collaborative.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +32,6 @@ import numpy as np
 
 from repro.config import CacheConfig, ModelConfig
 from repro.core import collaborative as collab
-from repro.core.cache import CacheState
 from repro.models import transformer
 from repro.models.layers import rmsnorm
 from repro.models.moe import route
@@ -35,13 +42,13 @@ Params = Dict[str, Any]
 @dataclass(frozen=True)
 class EngineConfig:
     cache: CacheConfig
-    max_batch: int = 1
+    max_batch: int = 1            # concurrent request slots (T)
     capacity: int = 512           # KV capacity
     greedy: bool = True
 
 
 class CollaborativeEngine:
-    """Single-host engine (the paper's per-request consumer scenario).
+    """Single-host engine (the paper's consumer scenario, batched).
 
     Only homogeneous decoder-only MoE archs (every layer MoE) are accepted
     here — matching the paper's Mixtral/Phi targets. The generic serving
@@ -69,8 +76,9 @@ class CollaborativeEngine:
         self._host = (tiers.host_w1, tiers.host_w3, tiers.host_w2)
         self.fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
         self._decode = jax.jit(self._decode_step, donate_argnums=(1, 2))
+        self._write = jax.jit(self._write_slot, donate_argnums=(0,))
         self.stats = {"hits": 0, "accesses": 0, "host_assignments": 0,
-                      "fetched_experts": 0, "tokens": 0}
+                      "fetched_experts": 0, "tokens": 0, "steps": 0}
 
     def _tiers(self, fast) -> collab.ExpertTiers:
         s1, s3, s2, state = fast
@@ -80,7 +88,9 @@ class CollaborativeEngine:
                                   state=state)
 
     # -- one decode step with collaborative MoE ---------------------------
-    def _decode_step(self, tokens, state, fast):
+    def _decode_step(self, tokens, state, fast, active):
+        """tokens [T, 1]; state['pos'] [T] per-slot positions; active [T]
+        bool — padded slots neither touch the shared cache nor the stats."""
         cfg = self.cfg
         params = self.params
         tiers = self._tiers(fast)
@@ -102,7 +112,8 @@ class CollaborativeEngine:
                                     h2[:, 0].astype(jnp.float32),
                                     cfg.moe.top_k)
             y, tiers, stats = collab.collaborative_moe(
-                tiers, layer, h2[:, 0], top_i, top_w, self.ecfg.cache)
+                tiers, layer, h2[:, 0], top_i, top_w, self.ecfg.cache,
+                active=active)
             x = x + y[:, None].astype(x.dtype)
             return (x, tiers, layer + 1), (new_st, stats)
 
@@ -112,10 +123,62 @@ class CollaborativeEngine:
             ({"params": xs["params"]["s0"], "state": xs["state"]["s0"]}))
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = transformer.lm_logits(params, x, cfg)
-        new_state = {"scan": {"s0": new_scan}, "pos": pos + 1}
+        new_state = {"scan": {"s0": new_scan},
+                     "pos": pos + active.astype(jnp.int32)}
         new_fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
         return logits, new_state, new_fast, stats
 
+    # -- batch-state primitives for the scheduler -------------------------
+    def init_slots(self) -> Params:
+        """Empty decode state for max_batch request slots."""
+        state = transformer.init_state(self.cfg, self.ecfg.max_batch,
+                                       self.ecfg.capacity)
+        state["pos"] = jnp.zeros((self.ecfg.max_batch,), jnp.int32)
+        return state
+
+    @staticmethod
+    def _write_slot(batch_state, one_state, slot):
+        """Scatter a single prefilled request's state into batch slot
+        ``slot`` (scan leaves are [G, B, ...]; the incoming state is B=1)."""
+        new_scan = jax.tree.map(lambda full, one: full.at[:, slot].set(one[:, 0]),
+                                batch_state["scan"], one_state["scan"])
+        pos = batch_state["pos"].at[slot].set(one_state["pos"])
+        return {"scan": new_scan, "pos": pos}
+
+    def write_slot(self, batch_state: Params, one_state: Params,
+                   slot: int) -> Params:
+        return self._write(batch_state, one_state, jnp.asarray(slot, jnp.int32))
+
+    def prefill_request(self, prompt: np.ndarray) -> Tuple[int, Params]:
+        """Prefill one request; returns (first greedy token, decode state
+        with pos=len(prompt), B=1)."""
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        P = prompt.shape[1]
+        assert 1 <= P < self.ecfg.capacity, (P, self.ecfg.capacity)
+        logits, state = self.prefill(jnp.asarray(prompt))
+        tok = int(np.argmax(np.asarray(logits[0, P - 1])))
+        return tok, state
+
+    def decode_batch(self, tokens, state: Params, active
+                     ) -> Tuple[jax.Array, Params]:
+        """One padded decode step for the whole slot batch. tokens [T, 1];
+        active [T] bool. Updates the shared expert-cache tiers and the
+        engine counters (padded rows excluded); returns (logits, state)."""
+        active = jnp.asarray(active, bool)
+        logits, state, self.fast, stats = self._decode(
+            jnp.asarray(tokens, jnp.int32), state, self.fast, active)
+        self._accumulate(stats, int(jax.device_get(active.sum())))
+        return logits, state
+
+    def _accumulate(self, stats, n_active: int) -> None:
+        for k in ("hits", "accesses", "fetched_experts"):
+            self.stats[k] += int(np.asarray(stats[k]).sum())
+        self.stats["host_assignments"] += int(
+            np.asarray(stats["host_flops_assignments"]).sum())
+        self.stats["tokens"] += n_active
+        self.stats["steps"] += 1
+
+    # -- static-batch convenience path ------------------------------------
     def prefill(self, tokens: jax.Array) -> Tuple[jax.Array, Params]:
         """Standard prefill (tiers untouched: prefill is compute-bound and
         runs from the host tier on real hardware; cache serves decode)."""
@@ -131,19 +194,20 @@ class CollaborativeEngine:
 
     def generate(self, prompt: np.ndarray, steps: int,
                  key=None) -> Tuple[np.ndarray, Dict[str, float]]:
+        """Static-batch generation: all prompt rows start and stop together
+        (the scheduler path interleaves requests instead)."""
         key = key if key is not None else jax.random.PRNGKey(0)
+        B, P = prompt.shape
         logits, state = self.prefill(jnp.asarray(prompt))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        state["pos"] = jnp.full((B,), P, jnp.int32)
+        tok = jnp.argmax(logits[:, P - 1], -1)[:, None].astype(jnp.int32)
+        active = jnp.ones((B,), bool)
         out = [np.asarray(tok)]
         for _ in range(steps - 1):
             logits, state, self.fast, stats = self._decode(tok, state,
-                                                           self.fast)
+                                                           self.fast, active)
             tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
             out.append(np.asarray(tok))
-            for k in ("hits", "accesses", "fetched_experts"):
-                self.stats[k] += int(np.asarray(stats[k]).sum())
-            self.stats["host_assignments"] += int(
-                np.asarray(stats["host_flops_assignments"]).sum())
-            self.stats["tokens"] += prompt.shape[0]
+            self._accumulate(stats, B)
         hit_rate = self.stats["hits"] / max(self.stats["accesses"], 1)
         return np.concatenate(out, 1), {**self.stats, "hit_rate": hit_rate}

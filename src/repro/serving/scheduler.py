@@ -1,0 +1,141 @@
+"""Continuous-batching request scheduler over the collaborative engine.
+
+The paper's framework decodes one request at a time; production MoE
+serving (HybriMoE, DAOP) interleaves many. This scheduler generalizes the
+workflow to T = ``EngineConfig.max_batch`` concurrent *slots* over ONE
+shared expert cache:
+
+  * admission   — a queued request claims a free slot: its prompt is
+                  prefilled (B=1) and the resulting KV state is scattered
+                  into the slot's rows of the batch decode state.
+  * decode tick — every step decodes the whole padded slot batch in one
+                  jitted call; each slot sits at its own KV position
+                  (per-slot ``pos`` vector) and inactive slots are masked
+                  out of the shared expert cache, the stats and the output.
+  * retirement  — a request finishes on ``max_new_tokens`` or ``eos_id``;
+                  its slot frees immediately and the next queued request
+                  is admitted on the same tick (continuous batching: the
+                  batch never drains to refill).
+
+Everything here is host-side orchestration (numpy + python lists) around
+the engine's jitted primitives — the scheduler adds no traced code, so the
+decode step compiles exactly once per (T, capacity) geometry.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import CollaborativeEngine
+
+__all__ = ["Request", "ContinuousBatchingScheduler"]
+
+
+@dataclass
+class Request:
+    """One generation request and its accumulated output."""
+    rid: int
+    prompt: np.ndarray                  # [P] int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and len(self.generated) > 0
+                and self.generated[-1] == self.eos_id)
+
+    @property
+    def output(self) -> np.ndarray:
+        return np.asarray(self.generated, np.int32)
+
+
+class ContinuousBatchingScheduler:
+    """Slot-based continuous batching for :class:`CollaborativeEngine`."""
+
+    def __init__(self, engine: CollaborativeEngine):
+        self.engine = engine
+        self.num_slots = engine.ecfg.max_batch
+        self.state = engine.init_slots()
+        self.slots: List[Optional[Request]] = [None] * self.num_slots
+        self.queue: Deque[Request] = deque()
+        self._next = np.zeros((self.num_slots, 1), np.int32)
+        self._rid = 0
+        self.finished: List[Request] = []
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(self._rid, np.asarray(prompt, np.int32).reshape(-1),
+                      int(max_new_tokens), eos_id)
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    # -- slot bookkeeping --------------------------------------------------
+    @property
+    def active_mask(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots], bool)
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active_mask.sum())
+
+    def _retire(self) -> List[Request]:
+        out = []
+        for t, req in enumerate(self.slots):
+            if req is not None and req.done:
+                self.slots[t] = None
+                out.append(req)
+        self.finished.extend(out)
+        return out
+
+    def _admit(self) -> None:
+        for t in range(self.num_slots):
+            if self.slots[t] is None and self.queue:
+                req = self.queue.popleft()
+                first_tok, one_state = self.engine.prefill_request(req.prompt)
+                self.state = self.engine.write_slot(self.state, one_state, t)
+                req.generated.append(first_tok)
+                self._next[t, 0] = first_tok
+                self.slots[t] = req
+
+    # -- the decode loop ---------------------------------------------------
+    def step(self) -> List[Request]:
+        """One scheduler tick: retire -> admit -> one padded decode step.
+        Returns the requests that finished on this tick."""
+        finished = self._retire()
+        self._admit()
+        finished += self._retire()       # an admitted req may already be done
+        active = self.active_mask
+        if active.any():
+            logits, self.state = self.engine.decode_batch(
+                self._next, self.state, active)
+            toks = np.asarray(jax.device_get(
+                jnp.argmax(logits[:, 0], -1))).astype(np.int32)
+            for t, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                req.generated.append(int(toks[t]))
+                self._next[t, 0] = toks[t]
+        return finished
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain queue + slots to completion; returns {rid: output tokens}."""
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+        self._retire()
+        return {r.rid: r.output for r in self.finished}
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        s = dict(self.engine.stats)
+        s["hit_rate"] = s["hits"] / max(s["accesses"], 1)
+        return s

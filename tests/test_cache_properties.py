@@ -3,6 +3,12 @@ equivalence on arbitrary traces."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (minimal image); "
+                    "deterministic twin-parity coverage lives in "
+                    "test_cache.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import CacheConfig

@@ -92,13 +92,18 @@ def test_post_fetch_is_async_schedulable():
 
 
 def test_offloaded_path_matches_default():
-    """The pinned_host + compute_on("device_host") variant — the literal
+    """The host-space + compute_on("device_host") variant — the literal
     memory-space form of the paper's workflow — computes identically to
-    the default path, across hit/miss/post-fetch transitions."""
+    the default path, across hit/miss/post-fetch transitions. Backends
+    without pinned_host fall back to unpinned_host (this CPU container);
+    backends with no host space at all skip."""
+    if not collab.host_offload_supported():
+        pytest.skip("backend exposes no host memory space")
+    host_kind, _ = collab.memory_kinds()
     key = jax.random.PRNGKey(5)
     tiers, ccfg = _tiers(key)
     off = collab.offload_host_tier(tiers)
-    assert off.host_w1.sharding.memory_kind == "pinned_host"
+    assert off.host_w1.sharding.memory_kind == host_kind
     x = jax.random.normal(key, (2, 16), jnp.float32)
     ti = jnp.asarray([[0, 1], [2, 3]])
     tw = jnp.asarray([[0.5, 0.5], [0.6, 0.4]], jnp.float32)
@@ -117,6 +122,80 @@ def test_offloaded_path_matches_default():
     # slot buffers converged identically through post-fetches
     np.testing.assert_allclose(np.asarray(tiers.slot_w1),
                                np.asarray(off.slot_w1), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("policy", ["lru", "fifo", "random"])
+def test_grouped_matches_seed_per_assignment_path(policy):
+    """Parity: the grouped gmm-backed execution must match the retained
+    seed per-assignment path numerically across cold/warm/beyond-coverage
+    transitions (f32 weights -> tight tolerance), on traces without
+    duplicate picks (where the seed path is well-defined)."""
+    key = jax.random.PRNGKey(11)
+    tiers_g, ccfg = _tiers(key, policy=policy)
+    tiers_r, _ = _tiers(key, ccfg=ccfg, policy=policy)
+    rng = np.random.default_rng(0)
+    x = jax.random.normal(key, (2, 16), jnp.float32)
+    tw = jnp.asarray([[0.6, 0.4], [0.5, 0.5]], jnp.float32)
+    for layer in (0, 1, 2):
+        for rep in range(3):
+            picks = rng.permutation(4)[:4].reshape(2, 2)   # dup-free
+            ti = jnp.asarray(picks)
+            y_g, tiers_g, s_g = collab.collaborative_moe(
+                tiers_g, jnp.int32(layer), x, ti, tw, ccfg)
+            y_r, tiers_r, s_r = collab.collaborative_moe_reference(
+                tiers_r, jnp.int32(layer), x, ti, tw, ccfg)
+            np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_r),
+                                       rtol=1e-5, atol=1e-5)
+            for k in ("hits", "accesses", "host_flops_assignments"):
+                assert int(s_g[k]) == int(s_r[k]), (k, layer, rep)
+            # the grouped post-fetch copies only experts that survive the
+            # step (the seed also copied within-step evictions): <=
+            assert int(s_g["fetched_experts"]) <= int(s_r["fetched_experts"])
+            np.testing.assert_allclose(np.asarray(tiers_g.slot_w1),
+                                       np.asarray(tiers_r.slot_w1),
+                                       rtol=1e-6, atol=1e-6)
+            assert np.array_equal(np.asarray(tiers_g.state.tags),
+                                  np.asarray(tiers_r.state.tags))
+
+
+def test_grouped_handles_duplicate_picks_across_tokens():
+    """Two concurrent tokens picking the same cold expert: the grouped
+    path computes both from the host tier (the seed path read the stale
+    slot buffer for the second — the bookkeeping insert of the first
+    masqueraded as a cache hit)."""
+    key = jax.random.PRNGKey(0)
+    tiers, ccfg = _tiers(key)
+    x = jax.random.normal(key, (2, 16), jnp.float32)
+    ti = jnp.asarray([[0, 1], [0, 2]])                     # expert 0 twice
+    tw = jnp.asarray([[0.6, 0.4], [0.5, 0.5]], jnp.float32)
+    y, tiers, stats = collab.collaborative_moe(
+        tiers, jnp.int32(0), x, ti, tw, ccfg)
+    ref = _dense_ref(tiers, 0, x, ti, tw)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+    # bookkeeping keeps the paper's sequential-semantics hit counter; the
+    # post-fetch copies only the experts resident AFTER the step (expert 1
+    # is inserted then evicted within the step -> not copied)
+    assert int(stats["hits"]) == 1 and int(stats["fetched_experts"]) == 2
+
+
+def test_active_mask_excludes_padded_rows():
+    """Inactive rows (padded scheduler slots) produce zero output, leave
+    the cache untouched and are excluded from the stats."""
+    key = jax.random.PRNGKey(4)
+    tiers, ccfg = _tiers(key)
+    x = jax.random.normal(key, (2, 16), jnp.float32)
+    ti = jnp.asarray([[0, 1], [2, 3]])
+    tw = jnp.asarray([[0.5, 0.5], [0.5, 0.5]], jnp.float32)
+    active = jnp.asarray([True, False])
+    y, tiers, stats = collab.collaborative_moe(
+        tiers, jnp.int32(0), x, ti, tw, ccfg, active=active)
+    assert int(stats["accesses"]) == 2 and int(stats["fetched_experts"]) == 2
+    assert (np.asarray(y[1]) == 0).all()
+    tags = set(np.asarray(tiers.state.tags[0]).tolist())
+    assert 2 not in tags and 3 not in tags                  # row 1 masked
+    ref = _dense_ref(tiers, 0, x, ti, tw)
+    np.testing.assert_allclose(np.asarray(y[0]), ref[0], rtol=2e-4,
+                               atol=2e-4)
 
 
 def test_static_random_preload():
