@@ -1,18 +1,24 @@
-"""Shared benchmark utilities: CSV emit, paper-value validation, and the
-live batched-scheduler probe used by the fig5/fig6 ``--live`` modes."""
+"""Shared benchmark utilities: CSV emit (with optional JSON capture for
+the CI perf-trajectory artifacts), paper-value validation, and the live
+batched-scheduler probe used by the fig5/fig6 ``--live`` modes."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Optional
+from typing import List, Optional
+
+# every emit() lands here; dump_json() snapshots it for BENCH_*.json
+_RESULTS: List[dict] = []
 
 
 def run_live_scheduler(policy: str = "lru", slots: int = 4,
                        requests: int = 6, new_tokens: int = 12,
-                       arch: str = "mixtral-8x7b", seed: int = 0):
+                       arch: str = "mixtral-8x7b", seed: int = 0,
+                       prefetch: bool = False):
     """Serve `requests` random prompts through the continuous-batching
     scheduler on a reduced live model (one shared expert cache, grouped
-    gmm execution, per-slot KV positions). Returns (outputs, stats,
-    wall_seconds)."""
+    gmm execution, per-slot KV positions, optional cross-layer speculative
+    prefetch). Returns (outputs, stats, wall_seconds)."""
     import jax
     import numpy as np
     from repro.config import CacheConfig, get_config, reduced
@@ -25,7 +31,8 @@ def run_live_scheduler(policy: str = "lru", slots: int = 4,
     params = init_params(cfg, key)
     ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=2, policy=policy)
     eng = CollaborativeEngine(cfg, params, EngineConfig(
-        cache=ccfg, max_batch=slots, capacity=64), key=key)
+        cache=ccfg, max_batch=slots, capacity=64, prefetch=prefetch),
+        key=key)
     sched = ContinuousBatchingScheduler(eng)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
@@ -37,7 +44,16 @@ def run_live_scheduler(policy: str = "lru", slots: int = 4,
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    _RESULTS.append({"name": name, "us": us_per_call, "derived": derived})
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def dump_json(path: str) -> None:
+    """Write every emit() of this process to ``path`` (BENCH_*.json) so CI
+    can archive the perf trajectory run over run."""
+    with open(path, "w") as f:
+        json.dump(_RESULTS, f, indent=1)
+    print(f"wrote {len(_RESULTS)} results to {path}")
 
 
 def check(name: str, got: float, paper: float, tol: float) -> str:

@@ -45,6 +45,12 @@ def bench_cache_access() -> None:
 
 
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write the results to this BENCH_*.json path")
+    args, _ = ap.parse_known_args()
+
     bench_cache_access()
     print("=== kernels: analytic roofline + interpret-mode correctness ===")
     # mixtral-shaped expert pair on one device
@@ -93,6 +99,10 @@ def main() -> None:
     emit("ssd_scan.interpret", us,
          f"tpu: saved state HBM round-trips={state_traffic/1e6:.2f}MB/layer "
          f"({(S2 // 128)} chunks x {Bb*nh} heads, kept in VMEM scratch)")
+
+    if args.json:
+        from .common import dump_json
+        dump_json(args.json)
 
 
 if __name__ == "__main__":

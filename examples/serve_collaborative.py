@@ -29,28 +29,36 @@ def main():
     E = cfg.moe.num_experts
     print(f"model: {cfg.name} (reduced) layers={cfg.num_layers} experts={E} "
           f"slots={SLOTS} requests={REQUESTS}")
-    print(f"{'config':>14s} {'policy':>7s} {'hit rate':>9s} {'tok/s':>7s}")
+    print(f"{'config':>14s} {'policy':>7s} {'pf':>3s} {'hit rate':>9s} "
+          f"{'pf hits':>8s} {'pred acc':>8s} {'tok/s':>7s}")
     for ways in (2, 4):
         for policy in ("lru", "fifo", "random"):
-            ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=ways,
-                               policy=policy)
-            eng = CollaborativeEngine(
-                cfg, params, EngineConfig(cache=ccfg, max_batch=SLOTS,
-                                          capacity=128), key=key)
-            sched = ContinuousBatchingScheduler(eng)
-            for r in range(REQUESTS):
-                plen = int(rng.integers(8, 17))
-                sched.submit(rng.integers(0, cfg.vocab_size, plen),
-                             max_new_tokens=NEW_TOKENS)
-            t0 = time.time()
-            outs = sched.run()
-            dt = time.time() - t0
-            stats = sched.stats
-            total = sum(len(o) for o in outs.values())
-            print(f"  (N={cfg.num_layers:2d},M={ways}) {policy:>7s} "
-                  f"{stats['hit_rate']:9.3f} {total/dt:7.1f}")
+            for prefetch in ((False, True) if policy == "lru"
+                             else (False,)):
+                ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=ways,
+                                   policy=policy)
+                eng = CollaborativeEngine(
+                    cfg, params, EngineConfig(cache=ccfg, max_batch=SLOTS,
+                                              capacity=128,
+                                              prefetch=prefetch), key=key)
+                sched = ContinuousBatchingScheduler(eng)
+                for r in range(REQUESTS):
+                    plen = int(rng.integers(8, 17))
+                    sched.submit(rng.integers(0, cfg.vocab_size, plen),
+                                 max_new_tokens=NEW_TOKENS)
+                t0 = time.time()
+                outs = sched.run()
+                dt = time.time() - t0
+                stats = sched.stats
+                total = sum(len(o) for o in outs.values())
+                print(f"  (N={cfg.num_layers:2d},M={ways}) {policy:>7s} "
+                      f"{'on' if prefetch else 'off':>3s} "
+                      f"{stats['hit_rate']:9.3f} "
+                      f"{stats['prefetch_hits']:8d} "
+                      f"{stats['prediction_accuracy']:8.3f} {total/dt:7.1f}")
     print("(wall tok/s on this CPU container is not the paper metric — the "
-          "calibrated benchmark is benchmarks/fig5_throughput.py)")
+          "calibrated benchmark is benchmarks/fig5_throughput.py; pf=on "
+          "rows add the cross-layer speculative expert prefetch)")
 
 
 if __name__ == "__main__":

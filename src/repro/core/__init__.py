@@ -1,21 +1,25 @@
 """The paper's contribution: two-tier collaborative MoE inference with a
 set-associative expert cache, grouped gmm-backed execution and
 asynchronous post-fetch."""
-from .cache import CacheState, access, access_scan_reference, \
-    init_cache_state, lookup, slot_id
-from .collaborative import ExpertTiers, collaborative_moe, \
-    collaborative_moe_offloaded, collaborative_moe_reference, \
-    host_offload_supported, init_tiers, memory_kinds, offload_host_tier
+from .cache import CacheState, FLAG_DEMAND, FLAG_PENDING, FLAG_SPEC, \
+    access, access_ex, access_scan_reference, init_cache_state, land, \
+    lookup, reserve, slot_id
+from .collaborative import ExpertTiers, ProbeResult, collaborative_moe, \
+    collaborative_moe_offloaded, collaborative_moe_reference, commit, \
+    execute, host_offload_supported, init_tiers, memory_kinds, \
+    offload_host_tier, prefetch, probe
 from .policies import NumpyCache, PolicySpec, policy_spec, \
     random_policy_hit_probs
 from .router_trace import TraceConfig, synthetic_trace, trace_stats
 
 __all__ = [
-    "CacheState", "access", "access_scan_reference", "init_cache_state",
-    "lookup", "slot_id",
-    "ExpertTiers", "collaborative_moe", "collaborative_moe_offloaded",
-    "collaborative_moe_reference", "host_offload_supported", "init_tiers",
-    "memory_kinds", "offload_host_tier",
+    "CacheState", "FLAG_DEMAND", "FLAG_PENDING", "FLAG_SPEC",
+    "access", "access_ex", "access_scan_reference", "init_cache_state",
+    "land", "lookup", "reserve", "slot_id",
+    "ExpertTiers", "ProbeResult", "collaborative_moe",
+    "collaborative_moe_offloaded", "collaborative_moe_reference",
+    "commit", "execute", "host_offload_supported", "init_tiers",
+    "memory_kinds", "offload_host_tier", "prefetch", "probe",
     "NumpyCache", "PolicySpec", "policy_spec", "random_policy_hit_probs",
     "TraceConfig", "synthetic_trace", "trace_stats",
 ]

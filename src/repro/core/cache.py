@@ -21,6 +21,28 @@ Layers >= N are beyond cache coverage (paper's "layer Z"): accesses miss
 and inserts are suppressed — handled branchlessly so the layer index may
 be a traced scan counter.
 
+Speculative prefetch (cross-layer pre-gating) adds a fourth array:
+
+  in_flight [N, M] int32 — slot provenance/transfer flag:
+      FLAG_DEMAND  (0)  demand-resident or empty slot;
+      FLAG_SPEC    (1)  speculatively inserted, transfer landed;
+      FLAG_PENDING (2)  speculatively inserted, transfer still in flight.
+
+``reserve`` inserts *predicted* experts with the policy's normal victim
+selection but does not count as a demand access: it never reports hits and
+never refreshes an already-resident entry. A fresh reservation is PENDING —
+mirroring the simulator's async fetch engine, a demand probe in the same
+step still misses it (and, like the simulator, does not enqueue a duplicate
+fetch because the tag is already present). ``land`` marks every PENDING
+reservation as arrived (SPEC); the serving pipeline lands at the start of
+the next layer's probe, so a reservation made while executing layer *l*
+serves hits from layer *l+1* on. The first demand hit on a SPEC entry
+promotes it to DEMAND and is reported separately (``spec_served``) so the
+engine can count demand hits that prefetch manufactured — the
+HybriMoE-style demand/speculative distinction. With ``in_flight`` all zero
+(no reservations ever made) every operation below is bit-identical to the
+flag-free cache, which the parity suites rely on.
+
 ``access`` services one decode step's picks for one layer. All picks hit
 the *same* set, so the update is row-local: the set row is gathered once,
 each pick is serviced with O(M) vector ops (rank-based victim selection =
@@ -36,18 +58,21 @@ fetches per *unique* expert).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import CacheConfig
-from .policies import PolicySpec, policy_spec
+from .policies import FLAG_DEMAND, FLAG_PENDING, FLAG_SPEC, PolicySpec, \
+    policy_spec
+
 
 class CacheState(NamedTuple):
     tags: jax.Array
     age: jax.Array
     clock: jax.Array
+    in_flight: jax.Array
 
     @property
     def num_indexes(self) -> int:
@@ -70,41 +95,64 @@ def init_cache_state(ccfg: CacheConfig, num_experts: int = 0,
             return jax.random.permutation(k, num_experts)[:ccfg.num_ways]
         tags = jax.vmap(pick)(jax.random.split(key, ccfg.num_indexes)).astype(jnp.int32)
     age = jnp.zeros((ccfg.num_indexes, ccfg.num_ways), jnp.int32)
-    return CacheState(tags=tags, age=age, clock=jnp.zeros((), jnp.int32))
+    return CacheState(tags=tags, age=age, clock=jnp.zeros((), jnp.int32),
+                      in_flight=jnp.zeros_like(tags))
 
 
 def lookup(state: CacheState, layer: jax.Array, experts: jax.Array
            ) -> Tuple[jax.Array, jax.Array]:
-    """Read-only probe. experts: [A] -> (hit [A] bool, way [A] int32)."""
+    """Read-only probe. experts: [A] -> (hit [A] bool, way [A] int32).
+
+    An expert whose reservation is still PENDING is *not* a hit — its
+    transfer has not landed, so the execution tier must read the host
+    table (the simulator's in-flight-miss semantics)."""
     n = state.num_indexes
     row = jnp.where(layer < n, layer, 0)
     tags_l = jax.lax.dynamic_index_in_dim(state.tags, row, 0, keepdims=False)
+    flag_l = jax.lax.dynamic_index_in_dim(state.in_flight, row, 0,
+                                          keepdims=False)
     eq = tags_l[None, :] == experts[:, None]            # [A, M]
-    hit = eq.any(axis=1) & (layer < n) & (experts >= 0)
     way = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    hit = eq.any(axis=1) & (layer < n) & (experts >= 0) \
+        & (flag_l[way] != FLAG_PENDING)
     return hit, way
 
 
-def _service_one(spec: PolicySpec, covered, tags_l, age_l, clock, e):
+def _service_one(spec: PolicySpec, covered, tags_l, age_l, flag_l, clock, e):
     """Service one pick against the [M] set row. Pure vector ops."""
     eq = tags_l == e
     valid = covered & (e >= 0)
-    hit = eq.any() & valid
+    tag_hit = eq.any() & valid
     hit_way = jnp.argmax(eq).astype(jnp.int32)
     # rank-based victim selection: empty slots outrank (score -1), else the
     # least-recently-used/inserted way; argmin = rank-1 under (score, way)
     victim_score = jnp.where(tags_l < 0, -1, age_l)
     victim = jnp.argmin(victim_score).astype(jnp.int32)
-    way = jnp.where(hit, hit_way, victim)
-    # LRU refreshes age on hit and insert; FIFO only stamps on insert.
-    refresh = valid if spec.refresh_on_hit else (valid & ~hit)
+    way = jnp.where(tag_hit, hit_way, victim)
+    # A tag hit on a PENDING reservation is serviced as a miss (the weights
+    # have not landed) but neither re-inserts nor enqueues a second fetch —
+    # the tag is already present. SPEC entries serve hits like any resident
+    # entry; the first demand hit promotes them to DEMAND.
+    pending = tag_hit & (flag_l[way] == FLAG_PENDING)
+    hit = tag_hit & ~pending
+    spec_served = tag_hit & (flag_l[way] == FLAG_SPEC)
+    # Bookkeeping (tags/age) keys off the *tag* hit so the LRU/FIFO order
+    # is identical with and without prefetch — only the reported hit and
+    # the provenance flag see the in-flight distinction.
+    refresh = valid if spec.refresh_on_hit else (valid & ~tag_hit)
     tags_l = tags_l.at[way].set(jnp.where(valid, e, tags_l[way]))
     age_l = age_l.at[way].set(jnp.where(refresh, clock, age_l[way]))
-    return tags_l, age_l, clock + 1, hit, jnp.where(valid, way, -1)
+    # demand insert (miss) and demand-hit promotion both clear to DEMAND;
+    # a pending entry stays PENDING until land().
+    clear = valid & ~pending
+    flag_l = flag_l.at[way].set(jnp.where(clear, FLAG_DEMAND, flag_l[way]))
+    return (tags_l, age_l, flag_l, clock + 1, hit, spec_served,
+            jnp.where(valid, way, -1))
 
 
-def access(state: CacheState, layer: jax.Array, experts: jax.Array,
-           policy: str) -> Tuple[CacheState, jax.Array, jax.Array]:
+def access_ex(state: CacheState, layer: jax.Array, experts: jax.Array,
+              policy: str
+              ) -> Tuple[CacheState, jax.Array, jax.Array, jax.Array]:
     """Probe + update for one layer's required experts.
 
     experts: [A] int32 (may contain duplicates; dup hits refresh age once
@@ -112,7 +160,9 @@ def access(state: CacheState, layer: jax.Array, experts: jax.Array,
     neither hit nor insert, matching the numpy twin). Returns (new state,
     hit [A] bool, way [A] int32 — the slot each expert resides in
     afterwards; masked/uncovered picks and `random`-policy misses get
-    way=-1 since nothing is inserted).
+    way=-1 since nothing is inserted, spec_served [A] bool — hits that a
+    landed speculative reservation manufactured; the hit promotes the
+    entry to demand provenance so each prefetch is credited once).
     """
     spec = policy_spec(policy)
     n = state.num_indexes
@@ -125,21 +175,111 @@ def access(state: CacheState, layer: jax.Array, experts: jax.Array,
         eq = tags_l[None, :] == experts[:, None]
         hits = eq.any(axis=1) & covered & (experts >= 0)
         ways = jnp.where(hits, jnp.argmax(eq, axis=1).astype(jnp.int32), -1)
-        return state, hits, ways
+        return state, hits, ways, jnp.zeros_like(hits)
 
     age_l = jax.lax.dynamic_index_in_dim(state.age, row, 0, keepdims=False)
+    flag_l = jax.lax.dynamic_index_in_dim(state.in_flight, row, 0,
+                                          keepdims=False)
 
     def step(carry, e):
-        t, a, c = carry
-        t, a, c, h, w = _service_one(spec, covered, t, a, c, e)
-        return (t, a, c), (h, w)
+        t, a, f, c = carry
+        t, a, f, c, h, sp, w = _service_one(spec, covered, t, a, f, c, e)
+        return (t, a, f, c), (h, sp, w)
 
-    (tags_l, age_l, clock), (hits, ways) = jax.lax.scan(
-        step, (tags_l, age_l, state.clock), experts)
+    (tags_l, age_l, flag_l, clock), (hits, spec_served, ways) = jax.lax.scan(
+        step, (tags_l, age_l, flag_l, state.clock), experts)
 
     tags = jax.lax.dynamic_update_index_in_dim(state.tags, tags_l, row, 0)
     age = jax.lax.dynamic_update_index_in_dim(state.age, age_l, row, 0)
-    return CacheState(tags, age, clock), hits, ways
+    flags = jax.lax.dynamic_update_index_in_dim(state.in_flight, flag_l,
+                                                row, 0)
+    return CacheState(tags, age, clock, flags), hits, ways, spec_served
+
+
+def access(state: CacheState, layer: jax.Array, experts: jax.Array,
+           policy: str) -> Tuple[CacheState, jax.Array, jax.Array]:
+    """:func:`access_ex` without the speculative-hit channel."""
+    new_state, hits, ways, _ = access_ex(state, layer, experts, policy)
+    return new_state, hits, ways
+
+
+def reserve(state: CacheState, layer: jax.Array, experts: jax.Array,
+            policy: str, protect: Optional[jax.Array] = None
+            ) -> Tuple[CacheState, jax.Array, jax.Array]:
+    """Speculatively insert *predicted* experts for a future probe.
+
+    Policy-correct eviction (same empty-first/min-age victim rule as the
+    demand path) but none of a demand access's observable effects: no hit
+    is ever reported, an already-present expert (resident OR in flight) is
+    left untouched — no age refresh, no duplicate fetch — and the static
+    `random` policy never reserves at all. *Batch protection*: a way
+    holding any expert of the protected set (``protect``, defaulting to
+    the insert batch itself) is never the victim — reserving pick B must
+    not evict predicted pick A out from under the very probe the batch is
+    staged for (fatal at low associativity: with M = top_k the batch
+    would otherwise evict itself); if every way is protected the pick is
+    skipped, not forced. Callers that issue picks one at a time (e.g. a
+    transfer-budget gate) pass the full prediction batch as ``protect``.
+    Newly inserted entries are PENDING until :func:`land`, so a probe in
+    the same step still misses them. experts: [A] int32, duplicates and
+    -1 masks allowed. Returns (new state, issued [A] bool — picks whose
+    reservation actually claimed a slot and therefore needs its weights
+    fetched, way [A] int32 — the claimed way; -1 where nothing was
+    issued).
+    """
+    spec = policy_spec(policy)
+    n = state.num_indexes
+    covered = layer < n
+    row = jnp.where(covered, layer, 0)
+    protect = experts if protect is None else protect
+
+    if spec.is_static:
+        zeros = jnp.zeros(experts.shape, bool)
+        return state, zeros, jnp.full(experts.shape, -1, jnp.int32)
+
+    tags_l = jax.lax.dynamic_index_in_dim(state.tags, row, 0, keepdims=False)
+    age_l = jax.lax.dynamic_index_in_dim(state.age, row, 0, keepdims=False)
+    flag_l = jax.lax.dynamic_index_in_dim(state.in_flight, row, 0,
+                                          keepdims=False)
+    # protected ways rank above every real age (ages are < clock, and
+    # pinning to the max avoids the int32 overflow an additive penalty
+    # would hit once the clock passes 2^30); ties between protected ways
+    # are irrelevant — a protected victim is never inserted over
+    PROTECT = jnp.iinfo(jnp.int32).max
+
+    def step(carry, e):
+        t, a, f, c = carry
+        valid = covered & (e >= 0)
+        present = (t == e).any() & valid
+        # ways holding a protected expert are never victims (empty ways'
+        # -1 sentinel must not match masked -1 picks)
+        prot = (t[:, None] == protect[None, :]).any(1) & (t >= 0)
+        victim_score = jnp.where(t < 0, -1, jnp.where(prot, PROTECT, a))
+        victim = jnp.argmin(victim_score).astype(jnp.int32)
+        insert = valid & ~present & ~prot[victim]
+        t = t.at[victim].set(jnp.where(insert, e, t[victim]))
+        a = a.at[victim].set(jnp.where(insert, c, a[victim]))
+        f = f.at[victim].set(jnp.where(insert, FLAG_PENDING, f[victim]))
+        return (t, a, f, c + 1), (insert, jnp.where(insert, victim, -1))
+
+    (tags_l, age_l, flag_l, clock), (issued, ways) = jax.lax.scan(
+        step, (tags_l, age_l, flag_l, state.clock), experts)
+
+    tags = jax.lax.dynamic_update_index_in_dim(state.tags, tags_l, row, 0)
+    age = jax.lax.dynamic_update_index_in_dim(state.age, age_l, row, 0)
+    flags = jax.lax.dynamic_update_index_in_dim(state.in_flight, flag_l,
+                                                row, 0)
+    return CacheState(tags, age, clock, flags), issued, ways
+
+
+def land(state: CacheState) -> CacheState:
+    """Mark every PENDING reservation as arrived (PENDING -> SPEC).
+
+    The serving pipeline lands at the start of each probe: a reservation
+    issued while layer *l* executed has one attention's worth of compute to
+    cover its transfer and serves demand hits from layer *l+1* on."""
+    return state._replace(in_flight=jnp.where(
+        state.in_flight == FLAG_PENDING, FLAG_SPEC, state.in_flight))
 
 
 def access_scan_reference(state: CacheState, layer: jax.Array,
@@ -148,7 +288,9 @@ def access_scan_reference(state: CacheState, layer: jax.Array,
     """The seed implementation: per-pick ``lax.scan`` that slices and
     rewrites the full [N, M] arrays at every step. Kept as the parity
     oracle for :func:`access` and as the "old path" in the cache-access
-    microbenchmark — do not use in serving code.
+    microbenchmark — do not use in serving code. Predates speculative
+    prefetch: only valid on flag-free states (``in_flight`` all zero),
+    which it passes through untouched.
     """
     spec = policy_spec(policy)
     n, m = state.num_indexes, state.num_ways
@@ -186,7 +328,7 @@ def access_scan_reference(state: CacheState, layer: jax.Array,
         step, (state.tags, state.age, state.clock), experts)
     if spec.is_static:
         return state, hits, ways
-    return CacheState(tags, age, clock), hits, ways
+    return CacheState(tags, age, clock, state.in_flight), hits, ways
 
 
 def slot_id(layer: jax.Array, way: jax.Array, num_ways: int) -> jax.Array:

@@ -1,24 +1,34 @@
-"""Two-tier collaborative MoE execution — the paper's workflow (Fig. 4).
+"""Two-tier collaborative MoE execution — the paper's workflow (Fig. 4),
+decomposed into composable stages:
 
-Per MoE layer of a decode step:
+  probe    — land any in-flight reservations, service the router's top-k
+             picks against the set-associative cache (demand bookkeeping,
+             speculative-hit attribution) and bucket the step's
+             assignments by unique expert (repro.core.cache, inside jit).
+  execute  — *grouped*: the assignments run through an [G, C, D] dispatch
+             buffer and the grouped Pallas kernels
+             (repro.kernels.moe_gmm.ops.moe_ffn). Each unique expert's
+             weights are gathered ONCE per step — resident experts from
+             the *device tier* (the [N*M, ...] cache slot buffer in fast
+             memory), non-resident experts from the *host tier* (full
+             expert table, host memory space on real hardware).
+  commit   — state update + post-fetch: newly inserted experts' weights
+             are written into their assigned cache slots, once per unique
+             expert. The write feeds only *future* steps (no data path to
+             this layer's output), so XLA overlaps the copy with
+             downstream compute — the TPU analogue of the paper's second
+             copy engine / dual CUDA streams.
+  prefetch — speculative cross-layer pre-fetch (DAOP / Pre-gated style):
+             reserve slots for the experts the *next* layer's router is
+             predicted to pick and stream their weights in ahead of the
+             next probe. Reservations are invisible until the next
+             probe lands them, so a prefetch issued at layer *l* serves
+             demand hits from layer *l+1* on — the live-path twin of the
+             simulator's async fetch engine.
 
-  (1) cache check    — probe the set-associative cache for the router's
-                       top-k experts (repro.core.cache, inside the jit).
-  (2) execute        — *grouped*: the step's assignments are bucketed by
-                       unique expert into an [G, C, D] dispatch buffer and
-                       executed by the grouped Pallas kernels
-                       (repro.kernels.moe_gmm.ops.moe_ffn). Each unique
-                       expert's weights are gathered ONCE per step —
-                       resident experts from the *device tier* (the
-                       [N*M, ...] cache slot buffer in fast memory),
-                       non-resident experts from the *host tier* (full
-                       expert table, host memory space on real hardware).
-  (3) post-fetch     — newly inserted experts' weights are written into
-                       their assigned cache slots, once per unique expert.
-                       The write feeds only *future* steps (no data path to
-                       this layer's output), so XLA overlaps the copy with
-                       downstream compute — the TPU analogue of the paper's
-                       second copy engine / dual CUDA streams.
+:func:`collaborative_moe` is the probe→execute→commit composition (no
+prefetch); the serving engine drives the stages directly so it can overlap
+the prefetch for layer *l+1* with layer *l*'s commit.
 
 The seed implementation executed every assignment separately (dense
 per-assignment weight gathers + a vmapped single-row FFN) — it is retained
@@ -174,16 +184,67 @@ def _group_by_expert(flat_e: jax.Array, num_experts: int
     return gid_sorted[inv], pos_sorted[inv], rep_e
 
 
-def _grouped_weights(tiers: ExpertTiers, layer, rep_e, ccfg: CacheConfig):
+class ProbeResult(NamedTuple):
+    """Everything probe() learned about one layer's demand picks.
+
+    state    — post-access cache bookkeeping (landed, tags/age/flags
+               updated); commit() installs it.
+    hits     — [A] reported demand hits (in-flight reservations miss).
+    spec_hits— [A] demand hits manufactured by a landed reservation.
+    valid    — [A] unmasked assignments (active row, expert >= 0).
+    flat_e   — [A] expert id per assignment (-1 = masked).
+    gid/pos  — [A] dispatch coordinates (group index / row in group).
+    rep_e    — [G] unique expert id per group (-1 = padded group).
+    resident — [G] group residency at probe time: execute() reads these
+               groups from the slot buffer, the rest from the host tier.
+    res_way  — [G] way of resident groups.
+    """
+    state: cache_lib.CacheState
+    hits: jax.Array
+    spec_hits: jax.Array
+    valid: jax.Array
+    flat_e: jax.Array
+    gid: jax.Array
+    pos: jax.Array
+    rep_e: jax.Array
+    resident: jax.Array
+    res_way: jax.Array
+
+
+def probe(tiers: ExpertTiers, layer: jax.Array, top_i: jax.Array,
+          ccfg: CacheConfig,
+          active: Optional[jax.Array] = None) -> ProbeResult:
+    """Stage 1 — cache check + grouping for one layer's top-k picks.
+
+    Lands outstanding reservations first (one probe boundary = one
+    transfer deadline), services the demand access, and buckets the
+    step's assignments by unique expert for the grouped kernels.
+    Residency for *execution* is probed against the landed PRE-access
+    state: a slot claimed this step holds its weights only from the next
+    step on (the post-fetch is off the critical path)."""
+    T, K = top_i.shape
+    flat_e = top_i.reshape(-1).astype(jnp.int32)
+    if active is not None:
+        flat_e = jnp.where(jnp.repeat(active, K), flat_e, -1)
+    valid = flat_e >= 0
+    state0 = cache_lib.land(tiers.state)
+    new_state, hits, _, spec_hits = cache_lib.access_ex(
+        state0, layer, flat_e, ccfg.policy)
+    gid, pos, rep_e = _group_by_expert(flat_e, tiers.host_w1.shape[1])
+    resident, res_way = cache_lib.lookup(state0, layer, rep_e)
+    return ProbeResult(state=new_state, hits=hits, spec_hits=spec_hits,
+                       valid=valid, flat_e=flat_e, gid=gid, pos=pos,
+                       rep_e=rep_e, resident=resident, res_way=res_way)
+
+
+def _gather_group_weights(tiers: ExpertTiers, layer, pr: ProbeResult,
+                          ccfg: CacheConfig):
     """Gather each unique expert's weights once — resident experts from the
-    slot buffer (fast tier), others from the host table (slow tier).
-    Residency is probed against the PRE-step cache state: a slot assigned
-    to an expert this step holds its weights only from the next step on
-    (the post-fetch is off the critical path)."""
-    resident, way = cache_lib.lookup(tiers.state, layer, rep_e)
+    slot buffer (fast tier), others from the host table (slow tier)."""
+    resident, way = pr.resident, pr.res_way
     slots = cache_lib.slot_id(layer, jnp.maximum(way, 0), ccfg.num_ways)
     slots = jnp.where(resident, slots, 0)
-    e_ix = jnp.maximum(rep_e, 0)
+    e_ix = jnp.maximum(pr.rep_e, 0)
     r3 = resident[:, None, None]
     host_w1 = tiers.host_w1[layer, e_ix]
     host_w3 = tiers.host_w3[layer, e_ix]
@@ -191,7 +252,81 @@ def _grouped_weights(tiers: ExpertTiers, layer, rep_e, ccfg: CacheConfig):
     w1 = jnp.where(r3, tiers.slot_w1[slots], host_w1)
     w3 = jnp.where(r3, tiers.slot_w3[slots], host_w3)
     w2 = jnp.where(r3, tiers.slot_w2[slots], host_w2)
-    return resident, way, (w1, w3, w2), (host_w1, host_w3, host_w2)
+    return (w1, w3, w2), (host_w1, host_w3, host_w2)
+
+
+def execute(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
+            top_w: jax.Array, pr: ProbeResult, ccfg: CacheConfig
+            ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Stage 2 — grouped tiered execution through the gmm kernels.
+
+    Returns (y [T, D], host-tier gathers of the step's unique experts —
+    reused by commit()'s post-fetch so each expert's host read happens
+    once per step)."""
+    T, K = top_w.shape
+    tok = jnp.repeat(jnp.arange(T), K)
+    xa = x[tok]                                            # [A, D]
+    w, host_w = _gather_group_weights(tiers, layer, pr, ccfg)
+    A, G = pr.flat_e.shape[0], pr.rep_e.shape[0]
+    xbuf = jnp.zeros((G, A, x.shape[-1]), x.dtype).at[pr.gid, pr.pos].set(xa)
+    ybuf = moe_ffn(xbuf, *w)                               # [G, A, D]
+    y = _combine(ybuf, pr.gid, pr.pos, tok, top_w, pr.valid, T, x.dtype)
+    return y, host_w
+
+
+def commit(tiers: ExpertTiers, layer: jax.Array, pr: ProbeResult, host_w,
+           ccfg: CacheConfig) -> Tuple[ExpertTiers, jax.Array]:
+    """Stage 3 — install the probe's cache state and post-fetch the newly
+    inserted experts' weights into their slots (async-schedulable: no data
+    path back to this layer's output). Returns (tiers, fetch [G] bool)."""
+    s_w1, s_w3, s_w2, fetch = _post_fetch(
+        tiers, layer, pr.rep_e, pr.resident, pr.res_way, pr.state, host_w,
+        ccfg)
+    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
+                           state=pr.state)
+    return tiers, fetch
+
+
+def prefetch(tiers: ExpertTiers, layer: jax.Array, pred_i: jax.Array,
+             ccfg: CacheConfig, active: Optional[jax.Array] = None
+             ) -> Tuple[ExpertTiers, jax.Array, jax.Array, jax.Array]:
+    """Stage 4 — speculative cross-layer prefetch into reserved slots.
+
+    pred_i: [T, K] *predicted* expert picks for ``layer`` (typically the
+    next layer's router run on the current hidden state). Reserves slots
+    with policy-correct eviction but no demand accounting, then writes the
+    issued experts' host-tier weights into the claimed slots, once per
+    unique predicted expert. The reservations stay in-flight until the
+    next probe lands them — a same-step probe still reads the host tier.
+
+    Returns (tiers, rep_p [G] unique predicted expert per group,
+    issued [G] bool — groups whose reservation claimed a slot (one host
+    fetch each), n_issued scalar)."""
+    T, K = pred_i.shape
+    flat_p = pred_i.reshape(-1).astype(jnp.int32)
+    if active is not None:
+        flat_p = jnp.where(jnp.repeat(active, K), flat_p, -1)
+    new_state, issued_a, ways_a = cache_lib.reserve(
+        tiers.state, layer, flat_p, ccfg.policy)
+    gid, _, rep_p = _group_by_expert(flat_p, tiers.host_w1.shape[1])
+    G = rep_p.shape[0]
+    # duplicates of one expert reserve at most once, so at most one pick
+    # per group carries issued=True — fold picks onto their groups
+    issued = jnp.zeros((G,), bool).at[gid].max(issued_a)
+    way = jnp.zeros((G,), jnp.int32).at[gid].add(
+        jnp.where(issued_a, ways_a, 0))
+    # stream the issued experts' weights into the reserved slots (the
+    # speculative transfer the in-flight flag models; next probe lands it)
+    e_ix = jnp.maximum(rep_p, 0)
+    S = tiers.slot_w1.shape[0]
+    dst = cache_lib.slot_id(layer, way, ccfg.num_ways)
+    dst = jnp.where(issued, dst, S)    # out-of-range + drop = no write
+    s_w1 = tiers.slot_w1.at[dst].set(tiers.host_w1[layer, e_ix], mode="drop")
+    s_w3 = tiers.slot_w3.at[dst].set(tiers.host_w3[layer, e_ix], mode="drop")
+    s_w2 = tiers.slot_w2.at[dst].set(tiers.host_w2[layer, e_ix], mode="drop")
+    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
+                           state=new_state)
+    return tiers, rep_p, issued, issued_a.sum()
 
 
 def _post_fetch(tiers: ExpertTiers, layer, rep_e, resident, res_way,
@@ -223,12 +358,13 @@ def _combine(ybuf, gid, pos, tok, top_w, valid, T, x_dtype):
         .astype(x_dtype)
 
 
-def _stats(hits, valid, fetch):
+def _stats(pr: ProbeResult, fetch):
     return {
-        "hits": hits.sum(),
-        "accesses": valid.sum().astype(jnp.int32),
-        "host_flops_assignments": (valid & ~hits).sum(),
+        "hits": pr.hits.sum(),
+        "accesses": pr.valid.sum().astype(jnp.int32),
+        "host_flops_assignments": (pr.valid & ~pr.hits).sum(),
         "fetched_experts": fetch.sum(),
+        "prefetch_hits": pr.spec_hits.sum(),
     }
 
 
@@ -236,41 +372,19 @@ def collaborative_moe(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
                       top_i: jax.Array, top_w: jax.Array, ccfg: CacheConfig,
                       active: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, ExpertTiers, Dict[str, jax.Array]]:
-    """Execute one MoE layer for a decode micro-batch through the tiers.
+    """Execute one MoE layer for a decode micro-batch through the tiers —
+    the probe → execute → commit composition (no prefetch stage; the
+    serving engine drives the stages itself to interleave prefetch).
 
     x: [T, D]; top_i/top_w: [T, K]. layer: traced scalar (the scan
     counter). active: optional [T] bool — rows of padded scheduler slots
     are masked out of the cache, the stats and the output when False.
     Returns (y [T, D], updated tiers, stats).
     """
-    T, K = top_i.shape
-    flat_e = top_i.reshape(-1).astype(jnp.int32)
-    if active is not None:
-        flat_e = jnp.where(jnp.repeat(active, K), flat_e, -1)
-    valid = flat_e >= 0
-
-    # (1) cache check + bookkeeping update (tags/age; sequential semantics)
-    new_state, hits, _ = cache_lib.access(tiers.state, layer, flat_e,
-                                          ccfg.policy)
-
-    # (2) grouped execution through the gmm kernels
-    tok = jnp.repeat(jnp.arange(T), K)
-    xa = x[tok]                                            # [A, D]
-    gid, pos, rep_e = _group_by_expert(flat_e, tiers.host_w1.shape[1])
-    resident, res_way, w, host_w = _grouped_weights(tiers, layer, rep_e, ccfg)
-    A, G = flat_e.shape[0], rep_e.shape[0]
-    xbuf = jnp.zeros((G, A, x.shape[-1]), x.dtype).at[gid, pos].set(xa)
-    ybuf = moe_ffn(xbuf, *w)                               # [G, A, D]
-
-    # (3) post-fetch: reuse the execution path's host gather (one gather
-    # per unique expert per step). Async-schedulable: y ignores the writes.
-    s_w1, s_w3, s_w2, fetch = _post_fetch(tiers, layer, rep_e, resident,
-                                          res_way, new_state, host_w, ccfg)
-
-    y = _combine(ybuf, gid, pos, tok, top_w, valid, T, x.dtype)
-    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
-                           state=new_state)
-    return y, tiers, _stats(hits, valid, fetch)
+    pr = probe(tiers, layer, top_i, ccfg, active=active)
+    y, host_w = execute(tiers, layer, x, top_w, pr, ccfg)
+    tiers, fetch = commit(tiers, layer, pr, host_w, ccfg)
+    return y, tiers, _stats(pr, fetch)
 
 
 def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
@@ -312,23 +426,19 @@ def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
     host_s = SingleDeviceSharding(dev, memory_kind=host_kind)
     dev_s = SingleDeviceSharding(dev, memory_kind=dev_kind)
 
+    # shared staged preamble: cache check + grouping (stage 1)
     T, K = top_i.shape
-    flat_e = top_i.reshape(-1).astype(jnp.int32)
-    if active is not None:
-        flat_e = jnp.where(jnp.repeat(active, K), flat_e, -1)
-    valid = flat_e >= 0
-    new_state, hits, _ = cache_lib.access(tiers.state, layer, flat_e,
-                                          ccfg.policy)
+    pr = probe(tiers, layer, top_i, ccfg, active=active)
+    gid, pos, rep_e = pr.gid, pr.pos, pr.rep_e
+    resident, way = pr.resident, pr.res_way
 
     tok = jnp.repeat(jnp.arange(T), K)
     xa = x[tok]
-    gid, pos, rep_e = _group_by_expert(flat_e, tiers.host_w1.shape[1])
-    resident, way = cache_lib.lookup(tiers.state, layer, rep_e)
     slots = jnp.where(resident,
                       cache_lib.slot_id(layer, jnp.maximum(way, 0),
                                         ccfg.num_ways), 0)
     e_ix = jnp.maximum(rep_e, 0)
-    A = flat_e.shape[0]
+    A = pr.flat_e.shape[0]
     xbuf = jnp.zeros((rep_e.shape[0], A, x.shape[-1]), x.dtype) \
         .at[gid, pos].set(xa)
 
@@ -355,7 +465,7 @@ def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
         host_groups(tiers.host_w1, tiers.host_w3, tiers.host_w2,
                     xb_h, e_h, l_h), dev_s)
     ybuf = jnp.where(resident[:, None, None], ybuf_dev, ybuf_host)
-    y = _combine(ybuf, gid, pos, tok, top_w, valid, T, x.dtype)
+    y = _combine(ybuf, gid, pos, tok, top_w, pr.valid, T, x.dtype)
 
     # post-fetch: host-side gather of the newly inserted experts (once per
     # unique expert), then the explicit host->device copy into the slots
@@ -367,13 +477,8 @@ def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
     src1 = jax.device_put(host_gather(tiers.host_w1, e_h, l_h), dev_s)
     src3 = jax.device_put(host_gather(tiers.host_w3, e_h, l_h), dev_s)
     src2 = jax.device_put(host_gather(tiers.host_w2, e_h, l_h), dev_s)
-    s_w1, s_w3, s_w2, fetch = _post_fetch(
-        tiers, layer, rep_e, resident, way, new_state, (src1, src3, src2),
-        ccfg)
-
-    tiers = tiers._replace(slot_w1=s_w1, slot_w3=s_w3, slot_w2=s_w2,
-                           state=new_state)
-    return y, tiers, _stats(hits, valid, fetch)
+    tiers, fetch = commit(tiers, layer, pr, (src1, src3, src2), ccfg)
+    return y, tiers, _stats(pr, fetch)
 
 
 def collaborative_moe_reference(tiers: ExpertTiers, layer: jax.Array,

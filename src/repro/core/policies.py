@@ -57,6 +57,14 @@ def policy_spec(name: str) -> PolicySpec:
                          f"have {sorted(POLICY_SPECS)}") from None
 
 
+# Slot provenance/transfer flags — the single source of truth, consumed
+# by both the JAX cache (repro.core.cache) and the numpy twin below, like
+# PolicySpec, so the two implementations cannot drift on flag semantics.
+FLAG_DEMAND = 0      # demand-resident (or empty slot)
+FLAG_SPEC = 1        # speculative insert, transfer landed
+FLAG_PENDING = 2     # speculative insert, transfer in flight
+
+
 @dataclass
 class NumpyCache:
     ccfg: CacheConfig
@@ -64,15 +72,19 @@ class NumpyCache:
     seed: int = 0
     tags: np.ndarray = field(init=False)
     age: np.ndarray = field(init=False)
+    flags: np.ndarray = field(init=False)
     clock: int = field(init=False, default=0)
     hits: int = field(init=False, default=0)
     accesses: int = field(init=False, default=0)
+    spec_hits: int = field(init=False, default=0)
+    reserved: int = field(init=False, default=0)
 
     def __post_init__(self):
         n, m = self.ccfg.num_indexes, self.ccfg.num_ways
         self.spec = policy_spec(self.ccfg.policy)
         self.tags = np.full((n, m), -1, np.int64)
         self.age = np.zeros((n, m), np.int64)
+        self.flags = np.zeros((n, m), np.int64)
         if self.spec.is_static:
             rng = np.random.default_rng(self.seed)
             assert self.num_experts >= m
@@ -80,7 +92,12 @@ class NumpyCache:
                 self.tags[i] = rng.permutation(self.num_experts)[:m]
 
     def access(self, layer: int, experts) -> List[bool]:
-        """Sequentially service one layer's expert picks; returns hit flags."""
+        """Sequentially service one layer's expert picks; returns hit flags.
+
+        Mirrors repro.core.cache.access_ex: a tag hit on a PENDING
+        reservation reports a miss without re-inserting; the first demand
+        hit on a landed SPEC entry counts toward ``spec_hits`` and
+        promotes it to demand provenance."""
         out = []
         n, m = self.tags.shape
         covered = layer < n
@@ -90,23 +107,83 @@ class NumpyCache:
                 out.append(False)
                 continue
             row_t, row_a = self.tags[layer], self.age[layer]
+            row_f = self.flags[layer]
             ways = np.nonzero(row_t == e)[0]
-            hit = ways.size > 0
+            tag_hit = ways.size > 0
+            pending = tag_hit and row_f[ways[0]] == FLAG_PENDING
+            hit = tag_hit and not pending
             out.append(bool(hit))
             self.hits += int(hit)
             if self.spec.is_static:
                 continue
-            if hit:
+            if tag_hit:
                 way = ways[0]
                 if self.spec.refresh_on_hit:
                     row_a[way] = self.clock
+                if row_f[way] == FLAG_SPEC:
+                    self.spec_hits += 1
+                if not pending:
+                    row_f[way] = FLAG_DEMAND
             else:
                 empty = np.nonzero(row_t < 0)[0]
                 way = empty[0] if empty.size else int(np.argmin(row_a))
                 row_t[way] = e
                 row_a[way] = self.clock
+                row_f[way] = FLAG_DEMAND
             self.clock += 1
         return out
+
+    def reserve(self, layer: int, experts, protect=None) -> List[bool]:
+        """Speculatively insert predicted experts (no demand accounting).
+
+        Mirrors repro.core.cache.reserve: policy-correct victim selection
+        with *batch protection* — a way holding any expert of the
+        protected set (``protect``, defaulting to the insert batch) is
+        never the victim, so reserving pick B cannot evict predicted pick
+        A out from under the very probe the batch is staged for (fatal at
+        low associativity); callers issuing picks one at a time under a
+        transfer budget pass the full prediction batch as ``protect``.
+        Already-present experts are untouched, fresh inserts stay PENDING
+        until :meth:`land`. Returns the issued flags (True = fetch
+        enqueued)."""
+        out = []
+        n, m = self.tags.shape
+        covered = layer < n
+        if protect is None:
+            protect = experts
+        batch = np.asarray([e for e in protect if e >= 0], np.int64)
+        for e in experts:
+            if not covered or e < 0 or self.spec.is_static:
+                out.append(False)
+                continue
+            row_t, row_a, row_f = (self.tags[layer], self.age[layer],
+                                   self.flags[layer])
+            if (row_t == e).any():
+                out.append(False)
+                self.clock += 1
+                continue
+            empty = np.nonzero(row_t < 0)[0]
+            if empty.size:
+                way = int(empty[0])
+            else:
+                prot = np.isin(row_t, batch)
+                if prot.all():
+                    out.append(False)
+                    self.clock += 1
+                    continue
+                way = int(np.argmin(np.where(prot, np.iinfo(np.int64).max,
+                                             row_a)))
+            row_t[way] = e
+            row_a[way] = self.clock
+            row_f[way] = FLAG_PENDING
+            self.clock += 1
+            self.reserved += 1
+            out.append(True)
+        return out
+
+    def land(self) -> None:
+        """Mark every PENDING reservation as arrived (PENDING -> SPEC)."""
+        self.flags[self.flags == FLAG_PENDING] = FLAG_SPEC
 
     @property
     def hit_rate(self) -> float:

@@ -23,6 +23,16 @@ Baselines:
                + per-model orchestration overhead calibrated to Fig. 5
                (documented: Fiddler internals are not first-principles
                modeled; its O(E·2^E) placement cost motivates the Phi gap).
+
+`ours_prefetch` extends `ours` with the serving engine's cross-layer
+speculative prefetch: while layer l executes, the next layer's picks are
+predicted (per-expert accuracy `prefetch_accuracy`, imperfect predictions
+substitute a random expert) and reserved via NumpyCache.reserve — the
+same policy-correct speculative insert as the live cache, no demand
+accounting. Issued reservations ride the SAME single fetch engine as
+demand post-fetches, so wasted speculative transfers genuinely delay
+demand fetches; a reservation serves real hits only once its transfer
+lands (`ready_at`), from the next layer's probe at the earliest.
 """
 from __future__ import annotations
 
@@ -32,8 +42,9 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.config import CacheConfig
-from .costmodel import (PAPER_TIMINGS, PREGATED_POWER_W, PaperModelTimings,
-                        cpu_expert_ms, fetch_expert_ms, gpu_expert_ms)
+from .costmodel import (PAPER_TIMINGS, PREFETCH_PREDICTOR_ACCURACY,
+                        PREGATED_POWER_W, PaperModelTimings, cpu_expert_ms,
+                        fetch_expert_ms, gpu_expert_ms)
 from .policies import NumpyCache
 
 FIDDLER_OVERHEAD_MS = {"mixtral-8x7b": 3.7, "phi35-moe": 9.8}
@@ -57,7 +68,9 @@ def _nearest_key(d: Dict[int, float], k: int) -> float:
 
 def simulate(trace: np.ndarray, timings: PaperModelTimings, threads: int,
              method: str = "ours", ccfg: Optional[CacheConfig] = None,
-             seed: int = 0) -> SimResult:
+             seed: int = 0,
+             prefetch_accuracy: float = PREFETCH_PREDICTOR_ACCURACY
+             ) -> SimResult:
     """trace: [T, L, K] expert ids. Returns aggregate timing/energy."""
     T, L, K = trace.shape
     t_gpu = gpu_expert_ms(timings)
@@ -69,7 +82,9 @@ def simulate(trace: np.ndarray, timings: PaperModelTimings, threads: int,
     cache = None
     ready_at: Dict[tuple, float] = {}
     fetch_free_at = 0.0
-    if method == "ours":
+    pf_rng = np.random.default_rng(seed + 17)
+    pf_issued = pf_wasted = pf_predicted = pf_correct = 0
+    if method in ("ours", "ours_prefetch"):
         assert ccfg is not None
         cache = NumpyCache(ccfg, num_experts=timings.num_experts, seed=seed)
     if method == "fiddler":
@@ -108,7 +123,7 @@ def simulate(trace: np.ndarray, timings: PaperModelTimings, threads: int,
                 cpu_t = (t_act + (K - nh) * t_cpu) if nh < K else 0.0
                 now += t_other + max(gpu_t, cpu_t) + \
                     FIDDLER_OVERHEAD_MS.get(timings.name, 3.7)
-            elif method == "ours":
+            elif method in ("ours", "ours_prefetch"):
                 tag_hits = cache.access(l, experts)
                 # a tag hit whose post-fetch hasn't landed is still a miss
                 real = [h and ready_at.get((l, int(e)), 0.0) <= now
@@ -124,7 +139,48 @@ def simulate(trace: np.ndarray, timings: PaperModelTimings, threads: int,
                         if not h:
                             fetch_free_at = max(fetch_free_at, now) + t_fetch
                             ready_at[(l, int(e))] = fetch_free_at
-                now += t_other + max(gpu_t, cpu_t)
+                layer_ms = t_other + max(gpu_t, cpu_t)
+                if method == "ours_prefetch" and l + 1 < L:
+                    # predict layer l+1's picks (the live engine runs
+                    # router[l+1] on layer l's output residual): each
+                    # actual pick survives with p=prefetch_accuracy, else
+                    # a random expert is (wastefully) predicted. The
+                    # prediction is modeled available at this layer's
+                    # dispatch, so the transfer may overlap the layer's
+                    # expert compute — the window a predictor placed at
+                    # the dispatch point (DAOP) gets; a post-FFN
+                    # predictor's window is one attention block, which at
+                    # these PCIe timings never fits an expert (the live
+                    # path's probe-boundary landing is optimistic there)
+                    nxt = trace[t, l + 1]
+                    pred = [int(e) if pf_rng.random() < prefetch_accuracy
+                            else int(pf_rng.integers(timings.num_experts))
+                            for e in nxt]
+                    pf_predicted += len(pred)
+                    pf_correct += sum(p in nxt for p in pred)
+                    # best-effort window gate, enforced PER TRANSFER: a
+                    # speculative fetch rides the SAME engine as demand
+                    # post-fetches (queued behind this layer's
+                    # just-enqueued misses) and is issued only if it
+                    # lands inside this layer's compute window — so
+                    # prefetch fills pipeline bubbles (the CPU miss path)
+                    # and a speculative transfer never occupies the
+                    # engine past the next probe, where new demand
+                    # fetches enqueue. The full prediction batch stays
+                    # protected even when only a prefix fits the budget.
+                    for p in pred:
+                        if max(fetch_free_at, now) + t_fetch \
+                                > now + layer_ms:
+                            break
+                        iss = cache.reserve(l + 1, [p], protect=pred)
+                        if iss[0]:
+                            fetch_free_at = max(fetch_free_at, now) \
+                                + t_fetch
+                            ready_at[(l + 1, p)] = fetch_free_at
+                            pf_issued += 1
+                            pf_wasted += int(p not in nxt)
+                    cache.land()
+                now += layer_ms
             else:
                 raise ValueError(method)
 
@@ -134,6 +190,11 @@ def simulate(trace: np.ndarray, timings: PaperModelTimings, threads: int,
         hit_rate=hits / max(accesses, 1),
         both_hit_rate=both / (T * L),
     )
+    if method == "ours_prefetch":
+        res.extra.update(
+            prefetch_issued=pf_issued, prefetch_wasted=pf_wasted,
+            prediction_accuracy=pf_correct / max(pf_predicted, 1),
+            spec_hits=cache.spec_hits)
     if timings.cpu_power_w:
         if method == "pregated":
             res.cpu_power_w = PREGATED_POWER_W[timings.name]["cpu"]

@@ -3,10 +3,20 @@
 Serves an MoE LM with the expert weights split across the two tiers of
 repro.core.collaborative: attention/router/norm weights plus an N-index
 M-way expert cache resident in the fast tier; the full expert table in the
-host tier. Every decode step performs the paper's (1) cache check,
-(2) grouped tiered execution (gmm kernels), (3) asynchronous post-fetch,
-all inside one jitted step function whose cache state threads functionally
-(donated buffers).
+host tier. Every decode step runs the staged collaborative pipeline —
+probe (cache check + grouping), execute (grouped tiered gmm), commit
+(state update + async post-fetch) — all inside one jitted step function
+whose cache state threads functionally (donated buffers).
+
+With ``EngineConfig.prefetch`` the decode scan becomes a *software
+pipeline* with cross-layer speculative prefetch (DAOP / Pre-gated style):
+after layer *l*'s FFN, layer *l+1*'s router runs on layer *l*'s output
+hidden state — an approximation of its real input one attention block
+later — and the predicted top-k experts are reserved in the cache and
+streamed in while layer *l+1*'s attention computes. Reservations land at
+the next probe, so a prediction made at layer *l* can only serve demand
+hits from layer *l+1* on (the live-path twin of the simulator's async
+fetch engine). Prefetch changes residency and counters, never numerics.
 
 The engine is *batch-capable*: one decode step serves up to
 ``EngineConfig.max_batch`` concurrent requests, each at its own sequence
@@ -15,11 +25,14 @@ paper's single-request workflow generalized to continuous batching. The
 request lifecycle (admission, retirement, queueing) lives in
 repro.serving.scheduler; the engine exposes the batch-state primitives it
 needs: ``init_slots`` / ``prefill_request`` / ``write_slot`` /
-``decode_batch``.
+``decode_batch`` / ``select_tokens``.
 
-The engine exposes the same counters the paper reports: per-layer hit
-rates, host-computed assignment counts, fetch volume — consumed by the
-fig5/fig6 benchmarks in live-model mode and by examples/serve_collaborative.
+The engine exposes the counters the paper reports — per-layer and
+aggregate hit rates, host-computed assignment counts, fetch volume — plus
+the prefetch channel (issued / manufactured-hit / wasted fetches and
+next-layer prediction accuracy), consumed by the fig5/fig6 benchmarks in
+live-model mode, benchmarks/decode_prefetch, and
+examples/serve_collaborative.
 """
 from __future__ import annotations
 
@@ -44,7 +57,9 @@ class EngineConfig:
     cache: CacheConfig
     max_batch: int = 1            # concurrent request slots (T)
     capacity: int = 512           # KV capacity
-    greedy: bool = True
+    greedy: bool = True           # False -> temperature sampling (needs key)
+    temperature: float = 1.0      # sampling temperature when greedy=False
+    prefetch: bool = False        # cross-layer speculative expert prefetch
 
 
 class CollaborativeEngine:
@@ -77,8 +92,14 @@ class CollaborativeEngine:
         self.fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
         self._decode = jax.jit(self._decode_step, donate_argnums=(1, 2))
         self._write = jax.jit(self._write_slot, donate_argnums=(0,))
+        L = cfg.num_layers
         self.stats = {"hits": 0, "accesses": 0, "host_assignments": 0,
-                      "fetched_experts": 0, "tokens": 0, "steps": 0}
+                      "fetched_experts": 0, "tokens": 0, "steps": 0,
+                      "prefetch_issued": 0, "prefetch_hits": 0,
+                      "prefetch_wasted": 0, "predicted": 0,
+                      "predicted_correct": 0,
+                      "per_layer_hits": np.zeros(L, np.int64),
+                      "per_layer_accesses": np.zeros(L, np.int64)}
 
     def _tiers(self, fast) -> collab.ExpertTiers:
         s1, s3, s2, state = fast
@@ -87,20 +108,47 @@ class CollaborativeEngine:
                                   slot_w1=s1, slot_w3=s3, slot_w2=s2,
                                   state=state)
 
-    # -- one decode step with collaborative MoE ---------------------------
+    # -- one decode step with the staged collaborative pipeline -----------
     def _decode_step(self, tokens, state, fast, active):
         """tokens [T, 1]; state['pos'] [T] per-slot positions; active [T]
-        bool — padded slots neither touch the shared cache nor the stats."""
+        bool — padded slots neither touch the shared cache nor the stats.
+
+        The layer scan is a software pipeline: each iteration probes /
+        executes / commits layer *l*'s MoE, then (``prefetch`` enabled)
+        predicts layer *l+1*'s picks from layer *l*'s output and issues
+        reservations + weight streams so the next probe finds them
+        resident. The prediction and the issued-fetch set ride the scan
+        carry one iteration so accuracy and wasted fetches are scored
+        against the *actual* next-layer routing."""
         cfg = self.cfg
+        ccfg = self.ecfg.cache
         params = self.params
         tiers = self._tiers(fast)
         x = transformer._embed_inputs(params, {"tokens": tokens}, cfg)
         pos = state["pos"]
-        slots, G, _ = transformer.build_slots(cfg)
+        slots, _, _ = transformer.build_slots(cfg)
         slot = slots[0]
+        T, K = tokens.shape[0], cfg.moe.top_k
+        E = cfg.moe.num_experts
+        NG = min(T * K, E + 1)             # dispatch groups per layer
+
+        scan_p = params["scan"]["s0"]
+        xs = {"params": scan_p, "state": state["scan"]["s0"]}
+        if self.ecfg.prefetch:
+            # next layer's ln2 + router, aligned to the current iteration:
+            # at layer l the pipeline runs router[l+1] on this layer's
+            # output (the pre-gating approximation of layer l+1's true
+            # router input). The wrapped last entry is masked via has_next
+            # — the next token's layer-0 input is unknowable before
+            # sampling. Only the prefetch build pays for the rolled
+            # weight-table duplicates.
+            xs.update(
+                ln2_next=jnp.roll(scan_p["ln2"], -1, axis=0),
+                router_next=jnp.roll(scan_p["moe"]["router"], -1, axis=0),
+                has_next=jnp.arange(cfg.num_layers) < cfg.num_layers - 1)
 
         def body(carry, xs):
-            x, tiers, layer = carry
+            x, tiers, layer, pred_prev, rep_prev, issued_prev = carry
             lp, st = xs["params"], xs["state"]
             h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
             from repro.models import attention as attn
@@ -109,18 +157,63 @@ class CollaborativeEngine:
             x = x + o
             h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
             _, top_i, top_w = route(lp["moe"]["router"],
-                                    h2[:, 0].astype(jnp.float32),
-                                    cfg.moe.top_k)
-            y, tiers, stats = collab.collaborative_moe(
-                tiers, layer, h2[:, 0], top_i, top_w, self.ecfg.cache,
-                active=active)
-            x = x + y[:, None].astype(x.dtype)
-            return (x, tiers, layer + 1), (new_st, stats)
+                                    h2[:, 0].astype(jnp.float32), K)
 
-        xs = {"params": params["scan"], "state": state["scan"]}
-        (x, tiers, _), (new_scan, stats) = jax.lax.scan(
-            body, (x, tiers, jnp.zeros((), jnp.int32)),
-            ({"params": xs["params"]["s0"], "state": xs["state"]["s0"]}))
+            # staged collaborative MoE: probe -> execute -> commit
+            pr = collab.probe(tiers, layer, top_i, ccfg, active=active)
+            y, host_w = collab.execute(tiers, layer, h2[:, 0], top_w, pr,
+                                       ccfg)
+            tiers, fetch = collab.commit(tiers, layer, pr, host_w, ccfg)
+            x = x + y[:, None].astype(x.dtype)
+
+            if self.ecfg.prefetch:
+                # score the prediction the previous iteration made for
+                # THIS layer: accuracy per predicted assignment, and
+                # issued fetches whose expert the layer never demanded
+                pred_valid = (pred_prev >= 0) & active[:, None]
+                pred_ok = (pred_prev[:, :, None]
+                           == top_i[:, None, :]).any(-1)
+                demanded = (rep_prev[:, None] == pr.flat_e[None, :]).any(-1)
+                wasted = (issued_prev & ~demanded).sum()
+                predicted = pred_valid.sum()
+                pred_correct = (pred_ok & pred_valid).sum()
+                # speculative prefetch for layer l+1 (reservations +
+                # streams; invisible until the next probe lands them).
+                # Pre-gating prediction: layer l+1's router on layer l's
+                # OUTPUT residual (its true input one attention block
+                # later) — the DAOP-style one-layer lookahead; the
+                # reservation's transfer hides under layer l+1's attention
+                h_pred = rmsnorm(xs["ln2_next"], x, cfg.norm_eps)
+                _, pred_i, _ = route(xs["router_next"],
+                                     h_pred[:, 0].astype(jnp.float32), K)
+                pred_i = jnp.where(xs["has_next"] & active[:, None],
+                                   pred_i, -1).astype(jnp.int32)
+                tiers, rep_p, issued, n_issued = collab.prefetch(
+                    tiers, layer + 1, pred_i, ccfg, active=active)
+            else:
+                # prefetch disabled: no rolled weight tables, no scoring —
+                # only constant-zero counters so the stats shape is stable
+                pred_i = jnp.full((T, K), -1, jnp.int32)
+                rep_p = jnp.full((NG,), -1, jnp.int32)
+                issued = jnp.zeros((NG,), bool)
+                n_issued = wasted = jnp.zeros((), jnp.int32)
+                predicted = pred_correct = jnp.zeros((), jnp.int32)
+
+            stats = {
+                **collab._stats(pr, fetch),
+                "prefetch_issued": n_issued,
+                "prefetch_wasted": wasted,
+                "predicted": predicted,
+                "predicted_correct": pred_correct,
+            }
+            return (x, tiers, layer + 1, pred_i, rep_p, issued), \
+                (new_st, stats)
+
+        carry0 = (x, tiers, jnp.zeros((), jnp.int32),
+                  jnp.full((T, K), -1, jnp.int32),
+                  jnp.full((NG,), -1, jnp.int32), jnp.zeros((NG,), bool))
+        (x, tiers, _, _, _, _), (new_scan, stats) = jax.lax.scan(
+            body, carry0, xs)
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = transformer.lm_logits(params, x, cfg)
         new_state = {"scan": {"s0": new_scan},
@@ -149,15 +242,28 @@ class CollaborativeEngine:
                    slot: int) -> Params:
         return self._write(batch_state, one_state, jnp.asarray(slot, jnp.int32))
 
-    def prefill_request(self, prompt: np.ndarray) -> Tuple[int, Params]:
-        """Prefill one request; returns (first greedy token, decode state
-        with pos=len(prompt), B=1)."""
+    def prefill_request(self, prompt: np.ndarray,
+                        key=None) -> Tuple[int, Params]:
+        """Prefill one request; returns (first token, decode state with
+        pos=len(prompt), B=1). The first token is greedy unless the engine
+        samples (``greedy=False``) and a key is provided."""
         prompt = np.asarray(prompt, np.int32).reshape(1, -1)
         P = prompt.shape[1]
         assert 1 <= P < self.ecfg.capacity, (P, self.ecfg.capacity)
         logits, state = self.prefill(jnp.asarray(prompt))
-        tok = int(np.argmax(np.asarray(logits[0, P - 1])))
+        tok = int(np.asarray(self.select_tokens(logits[:, P - 1], key))[0])
         return tok, state
+
+    def select_tokens(self, logits: jax.Array, key=None) -> jax.Array:
+        """Next-token selection from step logits [T, V]: argmax when
+        ``greedy``, else temperature sampling (requires a PRNG key)."""
+        if self.ecfg.greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        if key is None:
+            raise ValueError("greedy=False sampling needs a PRNG key")
+        t = max(self.ecfg.temperature, 1e-6)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / t, axis=-1).astype(jnp.int32)
 
     def decode_batch(self, tokens, state: Params, active
                      ) -> Tuple[jax.Array, Params]:
@@ -171,12 +277,35 @@ class CollaborativeEngine:
         return logits, state
 
     def _accumulate(self, stats, n_active: int) -> None:
-        for k in ("hits", "accesses", "fetched_experts"):
+        for k in ("hits", "accesses", "fetched_experts", "prefetch_issued",
+                  "prefetch_hits", "prefetch_wasted", "predicted",
+                  "predicted_correct"):
             self.stats[k] += int(np.asarray(stats[k]).sum())
         self.stats["host_assignments"] += int(
             np.asarray(stats["host_flops_assignments"]).sum())
+        # scan stacks one entry per layer: accumulate the per-layer series
+        # the aggregates above collapse
+        self.stats["per_layer_hits"] += np.asarray(stats["hits"], np.int64)
+        self.stats["per_layer_accesses"] += np.asarray(stats["accesses"],
+                                                       np.int64)
         self.stats["tokens"] += n_active
         self.stats["steps"] += 1
+
+    @property
+    def per_layer_hit_rates(self) -> np.ndarray:
+        """Demand hit rate per MoE layer ([num_layers] float; layers with
+        zero accesses — e.g. nothing decoded yet — report 0.0)."""
+        acc = self.stats["per_layer_accesses"]
+        return np.where(acc > 0,
+                        self.stats["per_layer_hits"] / np.maximum(acc, 1),
+                        0.0)
+
+    @property
+    def prediction_accuracy(self) -> float:
+        """Share of speculative next-layer predictions the next layer's
+        real router confirmed (0.0 when prefetch never predicted)."""
+        return self.stats["predicted_correct"] / max(
+            self.stats["predicted"], 1)
 
     # -- static-batch convenience path ------------------------------------
     def prefill(self, tokens: jax.Array) -> Tuple[jax.Array, Params]:
@@ -200,14 +329,19 @@ class CollaborativeEngine:
         B, P = prompt.shape
         logits, state = self.prefill(jnp.asarray(prompt))
         state["pos"] = jnp.full((B,), P, jnp.int32)
-        tok = jnp.argmax(logits[:, P - 1], -1)[:, None].astype(jnp.int32)
+        key, sub = jax.random.split(key)
+        tok = self.select_tokens(logits[:, P - 1], sub)[:, None]
         active = jnp.ones((B,), bool)
         out = [np.asarray(tok)]
         for _ in range(steps - 1):
             logits, state, self.fast, stats = self._decode(tok, state,
                                                            self.fast, active)
-            tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+            key, sub = jax.random.split(key)
+            tok = self.select_tokens(logits[:, 0], sub)[:, None]
             out.append(np.asarray(tok))
             self._accumulate(stats, B)
         hit_rate = self.stats["hits"] / max(self.stats["accesses"], 1)
-        return np.concatenate(out, 1), {**self.stats, "hit_rate": hit_rate}
+        return np.concatenate(out, 1), {
+            **self.stats, "hit_rate": hit_rate,
+            "prediction_accuracy": self.prediction_accuracy,
+            "per_layer_hit_rates": self.per_layer_hit_rates}

@@ -58,9 +58,13 @@ class Request:
 
 
 class ContinuousBatchingScheduler:
-    """Slot-based continuous batching for :class:`CollaborativeEngine`."""
+    """Slot-based continuous batching for :class:`CollaborativeEngine`.
 
-    def __init__(self, engine: CollaborativeEngine):
+    ``key`` seeds the sampling chain used when the engine's ``greedy`` is
+    False (temperature sampling); one subkey is split off per decode tick
+    and per admission, so scheduler runs are reproducible per seed."""
+
+    def __init__(self, engine: CollaborativeEngine, key=None):
         self.engine = engine
         self.num_slots = engine.ecfg.max_batch
         self.state = engine.init_slots()
@@ -68,7 +72,12 @@ class ContinuousBatchingScheduler:
         self.queue: Deque[Request] = deque()
         self._next = np.zeros((self.num_slots, 1), np.int32)
         self._rid = 0
+        self._key = key if key is not None else jax.random.PRNGKey(0)
         self.finished: List[Request] = []
+
+    def _split(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -101,7 +110,8 @@ class ContinuousBatchingScheduler:
         for t in range(self.num_slots):
             if self.slots[t] is None and self.queue:
                 req = self.queue.popleft()
-                first_tok, one_state = self.engine.prefill_request(req.prompt)
+                first_tok, one_state = self.engine.prefill_request(
+                    req.prompt, key=self._split())
                 self.state = self.engine.write_slot(self.state, one_state, t)
                 req.generated.append(first_tok)
                 self._next[t, 0] = first_tok
@@ -118,8 +128,8 @@ class ContinuousBatchingScheduler:
         if active.any():
             logits, self.state = self.engine.decode_batch(
                 self._next, self.state, active)
-            toks = np.asarray(jax.device_get(
-                jnp.argmax(logits[:, 0], -1))).astype(np.int32)
+            toks = np.asarray(jax.device_get(self.engine.select_tokens(
+                logits[:, 0], key=self._split()))).astype(np.int32)
             for t, req in enumerate(self.slots):
                 if req is None:
                     continue
@@ -136,6 +146,16 @@ class ContinuousBatchingScheduler:
 
     @property
     def stats(self) -> Dict[str, float]:
+        """Engine counters plus derived rates. Every division is guarded:
+        a run that never decoded (zero accesses / zero predictions /
+        prefetch disabled) reports 0.0 rates instead of dividing by
+        zero."""
         s = dict(self.engine.stats)
         s["hit_rate"] = s["hits"] / max(s["accesses"], 1)
+        s["prefetch_hit_rate"] = s["prefetch_hits"] / max(s["accesses"], 1)
+        s["prediction_accuracy"] = (
+            s["predicted_correct"] / max(s["predicted"], 1))
+        s["prefetch_waste_rate"] = (
+            s["prefetch_wasted"] / max(s["prefetch_issued"], 1))
+        s["per_layer_hit_rates"] = self.engine.per_layer_hit_rates
         return s

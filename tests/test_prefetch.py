@@ -1,0 +1,345 @@
+"""Staged collaborative core + cross-layer speculative prefetch tests.
+
+Covers the three contracts the refactor introduces:
+  * reserve/land semantics — a reservation is policy-correct but has none
+    of a demand access's observable effects, is invisible to same-step
+    probes and visible from the next probe on;
+  * staged parity — driving probe/execute/commit separately (as the
+    serving engine does) is BIT-identical to the collaborative_moe
+    composition with prefetch disabled;
+  * live pipeline — prefetch changes residency and counters, never
+    logits; counters accumulate monotonically through the scheduler.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CacheConfig, get_config, reduced
+from repro.core import cache as cache_lib
+from repro.core import collaborative as collab
+from repro.core.cache import FLAG_DEMAND
+from repro.core.policies import NumpyCache
+from repro.models import init_params
+from repro.serving import CollaborativeEngine, \
+    ContinuousBatchingScheduler, EngineConfig
+
+
+def _acc(state, layer, experts, policy="lru"):
+    return cache_lib.access_ex(state, jnp.int32(layer),
+                               jnp.asarray(experts, jnp.int32), policy)
+
+
+def _res(state, layer, experts, policy="lru"):
+    return cache_lib.reserve(state, jnp.int32(layer),
+                             jnp.asarray(experts, jnp.int32), policy)
+
+
+def _tiers(key, L=3, E=4, D=16, F=32, ccfg=None, policy="lru"):
+    ks = jax.random.split(key, 3)
+    ccfg = ccfg or CacheConfig(num_indexes=2, num_ways=2, policy=policy)
+    w1 = jax.random.normal(ks[0], (L, E, D, F), jnp.float32) * 0.1
+    w3 = jax.random.normal(ks[1], (L, E, D, F), jnp.float32) * 0.1
+    w2 = jax.random.normal(ks[2], (L, E, F, D), jnp.float32) * 0.1
+    return collab.init_tiers(w1, w3, w2, ccfg, num_experts=E,
+                             key=jax.random.PRNGKey(7)), ccfg
+
+
+# ---------------------------------------------------------------------------
+# reserve / land semantics
+# ---------------------------------------------------------------------------
+
+def test_reservation_invisible_same_step_visible_next():
+    s = cache_lib.init_cache_state(CacheConfig(num_indexes=2, num_ways=2))
+    s, issued, ways = _res(s, 1, [4, 6])
+    assert list(np.asarray(issued)) == [True, True]
+    # same-step: read-only probe AND demand access both miss the PENDING
+    # reservations (and the demand access must not re-insert/evict)
+    hit, _ = cache_lib.lookup(s, jnp.int32(1), jnp.asarray([4, 6]))
+    assert not np.asarray(hit).any()
+    tags_before = np.asarray(s.tags).copy()
+    s2, hits, _, spec = _acc(s, 1, [4, 6])
+    assert not np.asarray(hits).any() and not np.asarray(spec).any()
+    assert np.array_equal(np.asarray(s2.tags), tags_before)
+    # next probe boundary: land -> the reservations serve demand hits,
+    # attributed to the speculative channel exactly once
+    s3 = cache_lib.land(s2)
+    s4, hits, _, spec = _acc(s3, 1, [4, 6])
+    assert np.asarray(hits).all() and np.asarray(spec).all()
+    s5, hits, _, spec = _acc(s4, 1, [4, 6])
+    assert np.asarray(hits).all() and not np.asarray(spec).any()
+
+
+def test_reserve_has_no_demand_observable_effects():
+    """No hit inflation: reserving must leave the demand-visible LRU
+    order and the twin's hit/access counters untouched for experts it
+    does not insert."""
+    nc = NumpyCache(CacheConfig(num_indexes=1, num_ways=2))
+    nc.access(0, [1, 2])
+    hits0, acc0 = nc.hits, nc.accesses
+    nc.reserve(0, [1, 2])          # both present -> full no-op
+    assert (nc.hits, nc.accesses) == (hits0, acc0)
+    assert nc.reserved == 0
+    # an already-resident expert is NOT age-refreshed by reserve: 1 is
+    # still the LRU victim for the next demand insert
+    nc.access(0, [3])
+    assert 1 not in nc.tags[0] and 2 in nc.tags[0]
+
+
+def test_reserve_does_not_duplicate_in_flight_fetches():
+    s = cache_lib.init_cache_state(CacheConfig(num_indexes=1, num_ways=4))
+    s, issued, _ = _res(s, 0, [5])
+    assert np.asarray(issued).all()
+    # re-reserving (same step or next) never issues a second transfer
+    s, issued, _ = _res(s, 0, [5, 5])
+    assert not np.asarray(issued).any()
+    s = cache_lib.land(s)
+    s, issued, _ = _res(s, 0, [5])
+    assert not np.asarray(issued).any()
+
+
+def test_reserve_batch_protection():
+    """Reserving pick B must not evict predicted pick A of the same
+    batch — at M = top_k the batch would otherwise evict itself."""
+    s = cache_lib.init_cache_state(CacheConfig(num_indexes=1, num_ways=2))
+    s, _, _, _ = _acc(s, 0, [1])     # oldest way: expert 1
+    s, _, _, _ = _acc(s, 0, [2])
+    # batch {1, 3}: 1 is present (protected), so 3 must evict 2 — the
+    # unprotected way — even though 1 is the LRU
+    s, issued, _ = _res(s, 0, [1, 3])
+    assert list(np.asarray(issued)) == [False, True]
+    tags = set(np.asarray(s.tags)[0].tolist())
+    assert tags == {1, 3}
+    # all ways protected -> the reservation is skipped, not forced
+    s1 = cache_lib.init_cache_state(CacheConfig(num_indexes=1, num_ways=1))
+    s1, _, _, _ = _acc(s1, 0, [7])
+    s1, issued, _ = _res(s1, 0, [7, 3])
+    assert not np.asarray(issued).any()
+    assert np.asarray(s1.tags)[0, 0] == 7
+
+
+def test_reserve_static_policy_and_coverage():
+    ccfg = CacheConfig(num_indexes=2, num_ways=2, policy="random")
+    s = cache_lib.init_cache_state(ccfg, num_experts=8,
+                                   key=jax.random.PRNGKey(0))
+    tags0 = np.asarray(s.tags).copy()
+    s, issued, _ = _res(s, 0, [1, 2], "random")
+    assert not np.asarray(issued).any()
+    assert np.array_equal(tags0, np.asarray(s.tags))
+    s2 = cache_lib.init_cache_state(CacheConfig(num_indexes=2, num_ways=2))
+    s2, issued, _ = _res(s2, 5, [1, 2])          # beyond coverage
+    assert not np.asarray(issued).any()
+    assert (np.asarray(s2.tags) == -1).all()
+
+
+def test_demand_insert_over_pending_way_clears_flag():
+    """A demand insert that evicts an in-flight reservation takes clean
+    DEMAND provenance (the dropped transfer must not mark it)."""
+    s = cache_lib.init_cache_state(CacheConfig(num_indexes=1, num_ways=1))
+    s, issued, _ = _res(s, 0, [4])
+    assert np.asarray(issued).all()
+    s, hits, _, _ = _acc(s, 0, [6])              # evicts pending 4
+    assert not np.asarray(hits).any()
+    assert np.asarray(s.tags)[0, 0] == 6
+    assert np.asarray(s.in_flight)[0, 0] == FLAG_DEMAND
+
+
+@pytest.mark.parametrize("policy", ["lru", "fifo"])
+def test_jax_and_numpy_twin_agree_on_reserve_traces(policy):
+    """Random interleavings of access / reserve / land replay identically
+    through the JAX cache and the numpy twin (tags, flags, hit flags)."""
+    rng = np.random.default_rng(5)
+    for trial in range(4):
+        n, m = int(rng.integers(1, 4)), int(rng.integers(1, 4))
+        e = int(rng.integers(max(m, 2), 9))
+        ccfg = CacheConfig(num_indexes=n, num_ways=m, policy=policy)
+        js = cache_lib.init_cache_state(ccfg)
+        nc = NumpyCache(ccfg, num_experts=e)
+        for step in range(12):
+            layer = int(rng.integers(0, n + 1))
+            ex = rng.integers(-1, e, size=int(rng.integers(1, 5)))
+            op = rng.integers(0, 3)
+            if op == 0:
+                js, h1, _, sp1 = _acc(js, layer, ex, policy)
+                h2 = nc.access(layer, ex)
+                assert list(np.asarray(h1)) == h2, (trial, step, ex)
+            elif op == 1:
+                js, iss1, _ = _res(js, layer, ex, policy)
+                iss2 = nc.reserve(layer, ex)
+                assert list(np.asarray(iss1)) == iss2, (trial, step, ex)
+            else:
+                js = cache_lib.land(js)
+                nc.land()
+            assert np.array_equal(np.asarray(js.tags), nc.tags)
+            assert np.array_equal(np.asarray(js.in_flight), nc.flags)
+
+
+# ---------------------------------------------------------------------------
+# staged parity
+# ---------------------------------------------------------------------------
+
+def test_staged_path_bit_identical_to_collaborative_moe():
+    """Driving the stages separately (the engine's pipeline, prefetch
+    disabled) is BIT-identical to the collaborative_moe composition:
+    same y, same stats, same cache state, same slot buffers."""
+    key = jax.random.PRNGKey(0)
+    tiers_a, ccfg = _tiers(key)
+    tiers_b, _ = _tiers(key, ccfg=ccfg)
+    x = jax.random.normal(key, (2, 16), jnp.float32)
+    tw = jnp.asarray([[0.6, 0.4], [0.5, 0.5]], jnp.float32)
+    rng = np.random.default_rng(3)
+    for layer in (0, 1, 2):
+        for rep in range(3):
+            ti = jnp.asarray(rng.integers(0, 4, size=(2, 2)))
+            y_a, tiers_a, s_a = collab.collaborative_moe(
+                tiers_a, jnp.int32(layer), x, ti, tw, ccfg)
+            pr = collab.probe(tiers_b, jnp.int32(layer), ti, ccfg)
+            y_b, host_w = collab.execute(tiers_b, jnp.int32(layer), x, tw,
+                                         pr, ccfg)
+            tiers_b, fetch = collab.commit(tiers_b, jnp.int32(layer), pr,
+                                           host_w, ccfg)
+            assert np.array_equal(np.asarray(y_a), np.asarray(y_b))
+            for k, v in s_a.items():
+                if k == "fetched_experts":
+                    assert int(v) == int(np.asarray(fetch.sum()))
+                elif k == "hits":
+                    assert int(v) == int(np.asarray(pr.hits.sum()))
+            for fa, fb in zip(tiers_a, tiers_b):
+                if isinstance(fa, cache_lib.CacheState):
+                    for xa, xb in zip(fa, fb):
+                        assert np.array_equal(np.asarray(xa), np.asarray(xb))
+                else:
+                    assert np.array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_prefetch_stage_populates_next_layer_probe():
+    """prefetch() at layer 1 makes layer 1's next probe hit: correct
+    weights in the slots, hits attributed to the speculative channel, and
+    the layer output numerically unchanged."""
+    key = jax.random.PRNGKey(2)
+    tiers, ccfg = _tiers(key)
+    tiers_ref, _ = _tiers(key, ccfg=ccfg)
+    x = jax.random.normal(key, (2, 16), jnp.float32)
+    ti = jnp.asarray([[0, 1], [1, 2]])
+    tw = jnp.asarray([[0.5, 0.5], [0.6, 0.4]], jnp.float32)
+
+    tiers, rep_p, issued, n = collab.prefetch(tiers, jnp.int32(1), ti, ccfg)
+    assert int(n) == 2            # ways=2: top protected inserts only
+    # slot buffers hold the predicted experts' actual host weights
+    st = cache_lib.land(tiers.state)
+    res, way = cache_lib.lookup(st, jnp.int32(1), jnp.asarray([0, 1]))
+    assert np.asarray(res).all()
+    for e, w in zip([0, 1], np.asarray(way)):
+        np.testing.assert_array_equal(
+            np.asarray(tiers.slot_w1[1 * ccfg.num_ways + int(w)]),
+            np.asarray(tiers.host_w1[1, e]))
+    # the demand pass: y identical to the never-prefetched tiers, hits up
+    y_pf, tiers, s_pf = collab.collaborative_moe(
+        tiers, jnp.int32(1), x, ti, tw, ccfg)
+    y_rf, tiers_ref, s_rf = collab.collaborative_moe(
+        tiers_ref, jnp.int32(1), x, ti, tw, ccfg)
+    np.testing.assert_allclose(np.asarray(y_pf), np.asarray(y_rf),
+                               rtol=1e-6, atol=1e-6)
+    assert int(s_pf["prefetch_hits"]) >= 2
+    assert int(s_pf["hits"]) >= int(s_rf["hits"]) + 2
+
+
+# ---------------------------------------------------------------------------
+# live pipeline (engine + scheduler)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral-8x7b"))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    return cfg, params
+
+
+def _engine(cfg, params, prefetch=False, **kw):
+    ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=2, policy="lru")
+    return CollaborativeEngine(
+        cfg, params, EngineConfig(cache=ccfg, capacity=64, prefetch=prefetch,
+                                  **kw),
+        key=jax.random.PRNGKey(3))
+
+
+def test_prefetch_changes_residency_never_logits(setup):
+    """The acceptance pair: identical greedy generations with prefetch on
+    and off, and a strictly better demand hit rate with it on."""
+    cfg, params = setup
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab_size), np.int32)
+    out_off, s_off = _engine(cfg, params, False).generate(prompt, steps=16)
+    out_on, s_on = _engine(cfg, params, True).generate(prompt, steps=16)
+    np.testing.assert_array_equal(out_off, out_on)
+    assert s_on["hit_rate"] > s_off["hit_rate"]
+    assert s_on["prefetch_issued"] > 0
+    assert s_on["prefetch_hits"] > 0
+    assert s_off["prefetch_issued"] == s_off["prefetch_hits"] == 0
+    # accounting identity holds with prefetch enabled: every access is
+    # either a demand hit or a host-computed assignment
+    assert s_on["accesses"] == s_on["hits"] + s_on["host_assignments"]
+    assert s_on["prefetch_hits"] <= s_on["hits"]
+
+
+def test_per_layer_hit_rates_reported(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, False)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size), np.int32)
+    _, stats = eng.generate(prompt, steps=12)
+    rates = stats["per_layer_hit_rates"]
+    assert rates.shape == (cfg.num_layers,)
+    assert ((rates >= 0) & (rates <= 1)).all()
+    assert stats["per_layer_hits"].sum() == stats["hits"]
+    assert stats["per_layer_accesses"].sum() == stats["accesses"]
+
+
+def test_scheduler_prefetch_counters_monotone(setup):
+    """Counters only ever grow across scheduler ticks, and rates stay
+    guarded (finite) from the zero-access initial state onwards."""
+    cfg, params = setup
+    eng = _engine(cfg, params, True, max_batch=2)
+    sched = ContinuousBatchingScheduler(eng)
+    s = sched.stats
+    assert s["hit_rate"] == 0.0 and s["prediction_accuracy"] == 0.0
+    assert s["prefetch_waste_rate"] == 0.0          # zero-division guarded
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        sched.submit(rng.integers(0, cfg.vocab_size, 6), max_new_tokens=5)
+    prev = sched.stats
+    while any(sl is not None for sl in sched.slots) or sched.queue:
+        sched.step()
+        cur = sched.stats
+        for k in ("prefetch_issued", "prefetch_hits", "prefetch_wasted",
+                  "predicted", "predicted_correct", "hits", "accesses"):
+            assert cur[k] >= prev[k], k
+        prev = cur
+    assert prev["prefetch_issued"] > 0
+    assert prev["predicted"] > 0
+    assert 0.0 <= prev["prediction_accuracy"] <= 1.0
+
+
+def test_sampling_honors_greedy_knob(setup):
+    """greedy=False samples with temperature through the scheduler's key
+    chain: reproducible per key, and actually different from greedy
+    argmax decoding at high temperature."""
+    cfg, params = setup
+
+    def run(key_seed, greedy, temperature=8.0):
+        eng = _engine(cfg, params, greedy=greedy, temperature=temperature)
+        sched = ContinuousBatchingScheduler(
+            eng, key=jax.random.PRNGKey(key_seed))
+        r = sched.submit(np.arange(6, dtype=np.int32), max_new_tokens=10)
+        return sched.run()[r.rid]
+
+    a = run(11, greedy=False)
+    b = run(11, greedy=False)
+    np.testing.assert_array_equal(a, b)             # same key -> same draw
+    g1 = run(11, greedy=True)
+    g2 = run(99, greedy=True)
+    np.testing.assert_array_equal(g1, g2)           # greedy ignores the key
+    c = run(12, greedy=False)
+    assert not (np.array_equal(a, g1) and np.array_equal(c, g1)), \
+        "temperature sampling must not collapse to argmax for every key"
