@@ -1,39 +1,38 @@
 """Shared benchmark utilities: CSV emit (with optional JSON capture for
-the CI perf-trajectory artifacts), paper-value validation, and the live
-batched-scheduler probe used by the fig5/fig6 ``--live`` modes."""
+the CI perf-trajectory artifacts), typed run-stats capture, paper-value
+validation, and the live batched-scheduler probe used by the fig5/fig6
+``--live`` modes."""
 from __future__ import annotations
 
 import json
 import time
 from typing import List, Optional
 
-# every emit() lands here; dump_json() snapshots it for BENCH_*.json
+# every emit() lands in _RESULTS and every record_run() in _RUNS;
+# dump_json() snapshots both for BENCH_*.json
 _RESULTS: List[dict] = []
+_RUNS: List[dict] = []
 
 
 def run_live_scheduler(policy: str = "lru", slots: int = 4,
                        requests: int = 6, new_tokens: int = 12,
                        arch: str = "mixtral-8x7b", seed: int = 0,
-                       prefetch: bool = False):
+                       prefetch: bool = False, prefill_chunk: int = 8):
     """Serve `requests` random prompts through the continuous-batching
     scheduler on a reduced live model (one shared expert cache, grouped
-    gmm execution, per-slot KV positions, optional cross-layer speculative
-    prefetch). Returns (outputs, stats, wall_seconds)."""
-    import jax
+    gmm execution, per-slot KV positions, cache-warming chunked prefill,
+    optional cross-layer speculative prefetch). Returns
+    (outputs, RunStats, wall_seconds)."""
     import numpy as np
-    from repro.config import CacheConfig, get_config, reduced
-    from repro.models import init_params
-    from repro.serving import CollaborativeEngine, \
-        ContinuousBatchingScheduler, EngineConfig
+    from repro.config import get_config, reduced
+    from repro.serving import build
 
     cfg = reduced(get_config(arch))
-    key = jax.random.PRNGKey(seed)
-    params = init_params(cfg, key)
-    ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=2, policy=policy)
-    eng = CollaborativeEngine(cfg, params, EngineConfig(
-        cache=ccfg, max_batch=slots, capacity=64, prefetch=prefetch),
-        key=key)
-    sched = ContinuousBatchingScheduler(eng)
+    _, sched = build(cfg, cache=dict(policy=policy),
+                     serving=dict(max_batch=slots, capacity=64,
+                                  prefetch=prefetch,
+                                  prefill_chunk=prefill_chunk),
+                     seed=seed)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         sched.submit(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 9))),
@@ -48,12 +47,21 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+def record_run(name: str, stats) -> None:
+    """Capture one serving run's typed stats (``RunStats`` or
+    ``EngineStats``) for the JSON artifact — the schema the
+    tests/test_bench_schema.py contract pins."""
+    _RUNS.append({"name": name, "stats": stats.to_json()})
+
+
 def dump_json(path: str) -> None:
-    """Write every emit() of this process to ``path`` (BENCH_*.json) so CI
-    can archive the perf trajectory run over run."""
+    """Write every emit() and record_run() of this process to ``path``
+    (BENCH_*.json) so CI can archive the perf trajectory run over run.
+    Schema: {"results": [{name, us, derived}], "runs": [{name, stats}]}
+    where ``stats`` is ``RunStats.to_json()`` / ``EngineStats.to_json()``."""
     with open(path, "w") as f:
-        json.dump(_RESULTS, f, indent=1)
-    print(f"wrote {len(_RESULTS)} results to {path}")
+        json.dump({"results": _RESULTS, "runs": _RUNS}, f, indent=1)
+    print(f"wrote {len(_RESULTS)} results / {len(_RUNS)} runs to {path}")
 
 
 def check(name: str, got: float, paper: float, tol: float) -> str:

@@ -20,28 +20,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import dump_json, emit, timeit
+from .common import dump_json, emit, record_run, timeit
 
 SLOTS = 4
 STEPS = 24
 
 
 def bench(prefetch: bool):
-    from repro.config import CacheConfig, get_config, reduced
-    from repro.models import init_params
-    from repro.serving import CollaborativeEngine, EngineConfig
+    from repro.serving import build
 
-    cfg = reduced(get_config("mixtral-8x7b"))
-    key = jax.random.PRNGKey(0)
-    params = init_params(cfg, key)
-    ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=2, policy="lru")
-    eng = CollaborativeEngine(
-        cfg, params, EngineConfig(cache=ccfg, max_batch=SLOTS, capacity=64,
-                                  prefetch=prefetch),
-        key=jax.random.PRNGKey(3))
+    eng, _ = build("mixtral-8x7b",
+                   serving=dict(max_batch=SLOTS, capacity=64,
+                                prefetch=prefetch),
+                   seed=0)
+    cfg = eng.cfg
 
     # hit-rate probe: short greedy generation through the decode path
-    prompt = np.asarray(jax.random.randint(key, (SLOTS, 8), 0,
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(0),
+                                           (SLOTS, 8), 0,
                                            cfg.vocab_size), np.int32)
     _, stats = eng.generate(prompt, steps=STEPS)
 
@@ -69,16 +65,18 @@ def main() -> None:
     print("=== decode step: cross-layer speculative prefetch on/off ===")
     us_off, s_off = bench(prefetch=False)
     us_on, s_on = bench(prefetch=True)
-    hr_off = s_off["hit_rate"]
-    hr_on = s_on["hit_rate"]
+    record_run("decode_prefetch.off", s_off)
+    record_run("decode_prefetch.on", s_on)
+    hr_off = s_off.hit_rate
+    hr_on = s_on.hit_rate
     emit("decode_step.prefetch_off", us_off,
          f"hit_rate={hr_off:.3f} ({SLOTS}-slot batch, lru 2-way)")
     emit("decode_step.prefetch_on", us_on,
          f"hit_rate={hr_on:.3f} overhead={us_on / us_off:.2f}x "
-         f"pred_acc={s_on['prediction_accuracy']:.3f} "
-         f"issued={s_on['prefetch_issued']} "
-         f"spec_hits={s_on['prefetch_hits']} "
-         f"wasted={s_on['prefetch_wasted']}")
+         f"pred_acc={s_on.prediction_accuracy:.3f} "
+         f"issued={s_on.prefetch_issued} "
+         f"spec_hits={s_on.prefetch_hits} "
+         f"wasted={s_on.prefetch_wasted}")
     emit("decode_step.prefetch_hit_uplift", (hr_on - hr_off) * 1e6,
          f"demand hit rate {hr_off:.3f} -> {hr_on:.3f} on the same "
          f"prompts/weights (prefetch changes residency, never logits)")

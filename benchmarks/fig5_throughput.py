@@ -22,13 +22,14 @@ from .common import check, emit
 
 def live_scaling() -> None:
     """Wall tok/s of the live batched engine at concurrency 1 / 2 / 4."""
-    from .common import run_live_scheduler
+    from .common import record_run, run_live_scheduler
     print("=== live (reduced model): scheduler concurrency scaling ===")
     for slots in (1, 2, 4):
         outs, stats, dt = run_live_scheduler(slots=slots)
+        record_run(f"fig5.live.slots{slots}", stats)
         total = sum(len(o) for o in outs.values())
         emit(f"live.mixtral_reduced.slots{slots}.tok_s", total / dt * 1e6,
-             f"steps={stats['steps']} hit_rate={stats['hit_rate']:.3f} "
+             f"steps={stats.steps} hit_rate={stats.hit_rate:.3f} "
              f"(wall clock on this container, not the paper metric)")
 
 THREADS = (1, 2, 4, 8, 16, 24)

@@ -53,9 +53,10 @@ def live_serving(policy: str, prefetch: bool = False):
     """Measured stats of the real serving path: the batched engine +
     continuous-batching scheduler, 4 concurrent requests sharing one
     expert cache (grouped gmm execution, per-slot KV positions, optional
-    cross-layer speculative prefetch)."""
-    from .common import run_live_scheduler
+    cross-layer speculative prefetch). Returns a RunStats."""
+    from .common import record_run, run_live_scheduler
     _, stats, _ = run_live_scheduler(policy=policy, prefetch=prefetch)
+    record_run(f"fig6.live.{policy}{'.pf' if prefetch else ''}", stats)
     return stats
 
 
@@ -123,8 +124,8 @@ def main() -> None:
             trace, CacheConfig(trace.shape[1], 2, "random"), E)
         emit("live.mixtral_reduced.lru_any", lru_any * 1e6,
              f"random={rnd_any:.3f} (untrained router: near-chance reuse)")
-        served_lru = live_serving("lru")["hit_rate"]
-        served_rnd = live_serving("random")["hit_rate"]
+        served_lru = live_serving("lru").hit_rate
+        served_rnd = live_serving("random").hit_rate
         emit("live.mixtral_reduced.served_lru_hit_rate", served_lru * 1e6,
              f"random={served_rnd:.3f} (batched scheduler, 4 slots sharing "
              f"one cache; per-assignment hit rate of the serving engine)")
@@ -134,15 +135,15 @@ def main() -> None:
         # is near-perfect on the slowly-moving residual stream)
         pf = live_serving("lru", prefetch=True)
         emit("live.mixtral_reduced.served_lru_prefetch_hit_rate",
-             pf["hit_rate"] * 1e6,
+             pf.hit_rate * 1e6,
              f"baseline={served_lru:.3f} "
-             f"pred_acc={pf['prediction_accuracy']:.3f} "
-             f"issued={pf['prefetch_issued']} "
-             f"spec_hits={pf['prefetch_hits']} "
-             f"wasted={pf['prefetch_wasted']}")
-        assert pf["hit_rate"] > served_lru, \
+             f"pred_acc={pf.prediction_accuracy:.3f} "
+             f"issued={pf.prefetch_issued} "
+             f"spec_hits={pf.prefetch_hits} "
+             f"wasted={pf.prefetch_wasted}")
+        assert pf.hit_rate > served_lru, \
             ("prefetch must beat the no-prefetch baseline",
-             pf["hit_rate"], served_lru)
+             pf.hit_rate, served_lru)
 
 
 if __name__ == "__main__":

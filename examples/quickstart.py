@@ -6,13 +6,11 @@ collaborative engine, and prints the cache behaviour the paper is about.
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import CacheConfig, get_config, reduced
+from repro.config import CacheConfig
 from repro.core import NumpyCache, TraceConfig, synthetic_trace, trace_stats
-from repro.models import init_params
-from repro.serving import CollaborativeEngine, EngineConfig
+from repro.serving import build
 
 
 def main():
@@ -31,34 +29,30 @@ def main():
                 c.access(l, trace[t, l])
         print(f"  (14,4) {policy:6s} hit rate = {c.hit_rate:.3f}")
 
-    # 2. End-to-end: a reduced Mixtral served with the cache + CPU tier.
-    cfg = reduced(get_config("mixtral-8x7b"))
-    params = init_params(cfg, key)
-    eng = CollaborativeEngine(
-        cfg, params,
-        EngineConfig(cache=CacheConfig(num_indexes=cfg.num_layers,
-                                       num_ways=2), capacity=128), key=key)
-    prompt = np.asarray(jax.random.randint(key, (1, 16), 0, cfg.vocab_size))
+    # 2. End-to-end: a reduced Mixtral served with the cache + CPU tier,
+    # via the one-call serving façade.
+    eng, _ = build("mixtral-8x7b", cache=dict(num_ways=2),
+                   serving=dict(capacity=128))
+    prompt = np.asarray(jax.random.randint(key, (1, 16), 0,
+                                           eng.cfg.vocab_size))
     out, stats = eng.generate(prompt, steps=24)
     print(f"generated {out.shape[1]} tokens; "
-          f"cache hit rate {stats['hit_rate']:.3f}, "
-          f"{stats['fetched_experts']} post-fetches, "
-          f"{stats['host_assignments']} host-tier expert runs")
+          f"cache hit rate {stats.hit_rate:.3f}, "
+          f"{stats.fetched_experts} post-fetches, "
+          f"{stats.host_assignments} host-tier expert runs")
 
     # 3. Cross-layer speculative prefetch: layer l+1's router runs on
     # layer l's output and the predicted experts are reserved + streamed
     # one layer early. Same tokens, higher demand hit rate.
-    eng_pf = CollaborativeEngine(
-        cfg, params,
-        EngineConfig(cache=CacheConfig(num_indexes=cfg.num_layers,
-                                       num_ways=2), capacity=128,
-                     prefetch=True), key=key)
+    eng_pf, _ = build("mixtral-8x7b", cache=dict(num_ways=2),
+                      serving=dict(capacity=128, prefetch=True),
+                      params=eng.params)          # same weights: bit-exact
     out_pf, stats_pf = eng_pf.generate(prompt, steps=24)
     assert (out_pf == out).all(), "prefetch must never change tokens"
-    print(f"with speculative prefetch: hit rate {stats_pf['hit_rate']:.3f} "
-          f"(was {stats['hit_rate']:.3f}), prediction accuracy "
-          f"{stats_pf['prediction_accuracy']:.3f}, "
-          f"{stats_pf['prefetch_wasted']} wasted fetches "
+    print(f"with speculative prefetch: hit rate {stats_pf.hit_rate:.3f} "
+          f"(was {stats.hit_rate:.3f}), prediction accuracy "
+          f"{stats_pf.prediction_accuracy:.3f}, "
+          f"{stats_pf.prefetch_wasted} wasted fetches "
           f"— identical tokens")
 
 

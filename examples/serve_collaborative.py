@@ -1,7 +1,9 @@
 """Paper workflow end-to-end: cache-policy and geometry sweep on a live
 (reduced) Phi-3.5-MoE model, mirroring the shape of paper Fig. 5/6 — now
-served through the continuous-batching scheduler: 4 request slots share
-one expert cache, requests admit and retire without draining the batch.
+served through the continuous-batching scheduler via the ``build()``
+façade: 4 request slots share one expert cache, requests admit and retire
+without draining the batch, and prompts warm the cache through the
+chunked-prefill pipeline.
 
     PYTHONPATH=src python examples/serve_collaborative.py
 """
@@ -10,10 +12,9 @@ import time
 import jax
 import numpy as np
 
-from repro.config import CacheConfig, get_config, reduced
+from repro.config import get_config, reduced
 from repro.models import init_params
-from repro.serving import CollaborativeEngine, ContinuousBatchingScheduler, \
-    EngineConfig
+from repro.serving import build
 
 SLOTS = 4
 REQUESTS = 6
@@ -21,9 +22,8 @@ NEW_TOKENS = 16
 
 
 def main():
-    key = jax.random.PRNGKey(1)
     cfg = reduced(get_config("phi35-moe"))
-    params = init_params(cfg, key)
+    params = init_params(cfg, jax.random.PRNGKey(1))
     rng = np.random.default_rng(1)
 
     E = cfg.moe.num_experts
@@ -35,13 +35,11 @@ def main():
         for policy in ("lru", "fifo", "random"):
             for prefetch in ((False, True) if policy == "lru"
                              else (False,)):
-                ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=ways,
-                                   policy=policy)
-                eng = CollaborativeEngine(
-                    cfg, params, EngineConfig(cache=ccfg, max_batch=SLOTS,
-                                              capacity=128,
-                                              prefetch=prefetch), key=key)
-                sched = ContinuousBatchingScheduler(eng)
+                _, sched = build(
+                    cfg, cache=dict(num_ways=ways, policy=policy),
+                    serving=dict(max_batch=SLOTS, capacity=128,
+                                 prefetch=prefetch),
+                    seed=1, params=params)
                 for r in range(REQUESTS):
                     plen = int(rng.integers(8, 17))
                     sched.submit(rng.integers(0, cfg.vocab_size, plen),
@@ -53,9 +51,9 @@ def main():
                 total = sum(len(o) for o in outs.values())
                 print(f"  (N={cfg.num_layers:2d},M={ways}) {policy:>7s} "
                       f"{'on' if prefetch else 'off':>3s} "
-                      f"{stats['hit_rate']:9.3f} "
-                      f"{stats['prefetch_hits']:8d} "
-                      f"{stats['prediction_accuracy']:8.3f} {total/dt:7.1f}")
+                      f"{stats.hit_rate:9.3f} "
+                      f"{stats.prefetch_hits:8d} "
+                      f"{stats.prediction_accuracy:8.3f} {total/dt:7.1f}")
     print("(wall tok/s on this CPU container is not the paper metric — the "
           "calibrated benchmark is benchmarks/fig5_throughput.py; pf=on "
           "rows add the cross-layer speculative expert prefetch)")

@@ -3,10 +3,12 @@ continuous batching, or the plain generic path for non-MoE archs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --tokens 64 [--ways 4 --indexes 8 --policy lru] \
-        [--concurrency 4 --requests 8]
+        [--concurrency 4 --requests 8] [--temperature 0.8 --top-p 0.95]
 
 Reduced configs by default (this is a CPU container); the full configs are
 exercised via the dry-run. Prints tokens/s and the paper's cache counters.
+``--temperature > 0`` turns on per-request sampling (seeded per request:
+request r uses seed ``--seed + r``); the default is greedy decoding.
 """
 from __future__ import annotations
 
@@ -17,10 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import CacheConfig, get_config, reduced
+from repro.config import get_config, reduced
 from repro.models import decode_step, init_params, prefill
-from repro.serving import CollaborativeEngine, ContinuousBatchingScheduler, \
-    EngineConfig
+from repro.serving import SamplingParams, build
 
 
 def main() -> None:
@@ -37,8 +38,22 @@ def main() -> None:
                     help="scheduler slots (padded decode batch T)")
     ap.add_argument("--requests", type=int, default=None,
                     help="total requests to serve (default: concurrency*2)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="> 0: per-request temperature sampling "
+                         "(0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="cache-warming chunked-prefill chunk "
+                         "(0 = bypass prefill, cold cache)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if not 0.0 < args.top_p <= 1.0:
+        ap.error(f"--top-p must be in (0, 1], got {args.top_p}")
+    if args.top_k < 0:
+        ap.error(f"--top-k must be >= 0, got {args.top_k}")
+    if args.temperature < 0:
+        ap.error(f"--temperature must be >= 0, got {args.temperature}")
 
     cfg = reduced(get_config(args.arch))
     key = jax.random.PRNGKey(args.seed)
@@ -47,34 +62,52 @@ def main() -> None:
         jax.random.randint(key, (args.batch, args.prompt), 0, cfg.vocab_size),
         np.int32)
 
+    # any sampling knob enables sampling (top-k/top-p without an explicit
+    # temperature sample at T=1.0 rather than being silently ignored)
+    sample_on = args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
+    temp = args.temperature if args.temperature > 0 else 1.0
+
     if cfg.moe is not None and cfg.moe_every == 1 and not cfg.is_encdec:
         n = args.indexes if args.indexes is not None else cfg.num_layers // 2
-        ccfg = CacheConfig(num_indexes=n, num_ways=args.ways,
-                           policy=args.policy)
         R = args.requests or args.concurrency * 2
         print(f"[serve] collaborative engine: {cfg.name} cache=(N={n}, "
               f"M={args.ways}, {args.policy}) slots={args.concurrency} "
-              f"requests={R}")
-        eng = CollaborativeEngine(cfg, params, EngineConfig(
-            cache=ccfg, max_batch=args.concurrency,
-            capacity=args.prompt + args.tokens + 1), key=key)
-        sched = ContinuousBatchingScheduler(eng)
+              f"requests={R} "
+              f"sampling={f'T={temp}' if sample_on else 'greedy'}")
+        _, sched = build(
+            cfg,
+            cache=dict(num_indexes=n, num_ways=args.ways,
+                       policy=args.policy),
+            serving=dict(max_batch=args.concurrency,
+                         capacity=args.prompt + args.tokens + 1,
+                         prefill_chunk=args.prefill_chunk),
+            seed=args.seed, params=params)
         rng = np.random.default_rng(args.seed)
         for r in range(R):
             plen = int(rng.integers(max(args.prompt // 2, 1),
                                     args.prompt + 1))
+            sp = SamplingParams(greedy=False, temperature=temp,
+                                top_k=args.top_k, top_p=args.top_p,
+                                seed=args.seed + r) if sample_on \
+                else SamplingParams()
             sched.submit(rng.integers(0, cfg.vocab_size, plen),
-                         max_new_tokens=args.tokens)
+                         max_new_tokens=args.tokens, sampling=sp)
         t0 = time.time()
         outs = sched.run()
         dt = time.time() - t0
         stats = sched.stats
         total = sum(len(o) for o in outs.values())
-        print(f"  served {len(outs)} requests / {total} tokens in {dt:.2f}s "
-              f"({total / dt:.1f} tok/s wall, {stats['steps']} decode steps)")
-        print(f"  cache hit rate: {stats['hit_rate']:.3f} "
-              f"(hits={stats['hits']} accesses={stats['accesses']} "
-              f"fetches={stats['fetched_experts']})")
+        print(f"  served {stats.requests_finished} requests / {total} tokens "
+              f"in {dt:.2f}s ({total / dt:.1f} tok/s wall, "
+              f"{stats.steps} decode steps)")
+        print(f"  cache hit rate: {stats.hit_rate:.3f} "
+              f"(hits={stats.hits} accesses={stats.accesses} "
+              f"fetches={stats.fetched_experts})")
+        if stats.prefill_accesses:
+            print(f"  prefill warming: {stats.prefill_tokens} tokens / "
+                  f"{stats.prefill_chunks} chunks, hit rate "
+                  f"{stats.prefill_hit_rate:.3f} "
+                  f"({stats.prefill_fetched} fetches)")
     else:
         print(f"[serve] generic path: {cfg.name}")
         batch = {"tokens": jnp.asarray(prompt)}

@@ -1,5 +1,9 @@
+from .api import build
 from .engine import CollaborativeEngine, EngineConfig
+from .sampling import GREEDY, SamplingParams
 from .scheduler import ContinuousBatchingScheduler, Request
+from .stats import EngineStats, RunStats
 
-__all__ = ["CollaborativeEngine", "EngineConfig",
-           "ContinuousBatchingScheduler", "Request"]
+__all__ = ["build", "CollaborativeEngine", "EngineConfig",
+           "ContinuousBatchingScheduler", "Request",
+           "SamplingParams", "GREEDY", "EngineStats", "RunStats"]

@@ -11,33 +11,38 @@ whose cache state threads functionally (donated buffers).
 With ``EngineConfig.prefetch`` the decode scan becomes a *software
 pipeline* with cross-layer speculative prefetch (DAOP / Pre-gated style):
 after layer *l*'s FFN, layer *l+1*'s router runs on layer *l*'s output
-hidden state — an approximation of its real input one attention block
-later — and the predicted top-k experts are reserved in the cache and
-streamed in while layer *l+1*'s attention computes. Reservations land at
-the next probe, so a prediction made at layer *l* can only serve demand
-hits from layer *l+1* on (the live-path twin of the simulator's async
-fetch engine). Prefetch changes residency and counters, never numerics.
+hidden state and the predicted top-k experts are reserved in the cache and
+streamed in while layer *l+1*'s attention computes. Prefetch changes
+residency and counters, never numerics.
+
+Prefill is *request-shaped*: :meth:`prefill_chunked` additionally routes
+the prompt through the staged probe → execute → commit pipeline in token
+chunks, so the prompt's own expert-routing warms the shared cache before
+the first decode step (the paper's long-prompt scenario). The hidden
+states, KV cache and first-token logits come from the one shared jitted
+prefill trace in both modes, so chunked warming changes cache residency
+and the ``prefill_*`` stat channel — never the generated tokens.
 
 The engine is *batch-capable*: one decode step serves up to
 ``EngineConfig.max_batch`` concurrent requests, each at its own sequence
-position (per-slot KV positions), all sharing ONE expert cache — the
-paper's single-request workflow generalized to continuous batching. The
-request lifecycle (admission, retirement, queueing) lives in
+position (per-slot KV positions), all sharing ONE expert cache. The
+request lifecycle (admission, streaming, retirement) lives in
 repro.serving.scheduler; the engine exposes the batch-state primitives it
 needs: ``init_slots`` / ``prefill_request`` / ``write_slot`` /
-``decode_batch`` / ``select_tokens``.
+``decode_batch`` / ``select_tokens``. Sampling is per-request: there is no
+engine-wide greedy/temperature knob — ``select_tokens`` is a vectorized
+per-slot sampler driven by a ``[T]`` :class:`SamplingParams` batch.
 
-The engine exposes the counters the paper reports — per-layer and
-aggregate hit rates, host-computed assignment counts, fetch volume — plus
-the prefetch channel (issued / manufactured-hit / wasted fetches and
-next-layer prediction accuracy), consumed by the fig5/fig6 benchmarks in
-live-model mode, benchmarks/decode_prefetch, and
-examples/serve_collaborative.
+Counters are typed: :attr:`stats` snapshots an immutable
+:class:`~repro.serving.stats.EngineStats` with separate demand, prefetch
+and prefill channels plus per-layer series, consumed by the fig5/fig6
+benchmarks in live-model mode, benchmarks/decode_prefetch, and the
+examples.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -46,20 +51,48 @@ import numpy as np
 from repro.config import CacheConfig, ModelConfig
 from repro.core import collaborative as collab
 from repro.models import transformer
+from repro.models import attention as attn
 from repro.models.layers import rmsnorm
-from repro.models.moe import route
+from repro.models.moe import moe_apply, route
+from .sampling import GREEDY, SamplingParams, batch_arrays, fold_keys, \
+    sample_tokens
+from .stats import EngineStats
 
 Params = Dict[str, Any]
 
 
 @dataclass(frozen=True)
 class EngineConfig:
+    """Engine geometry and pipeline toggles.
+
+    Sampling is deliberately NOT here: it is a per-request property
+    (:class:`~repro.serving.sampling.SamplingParams` on ``Request``), not
+    an engine property.
+    """
     cache: CacheConfig
     max_batch: int = 1            # concurrent request slots (T)
     capacity: int = 512           # KV capacity
-    greedy: bool = True           # False -> temperature sampling (needs key)
-    temperature: float = 1.0      # sampling temperature when greedy=False
     prefetch: bool = False        # cross-layer speculative expert prefetch
+    prefill_chunk: int = 8        # cache-warming prefill chunk (0 = bypass)
+
+    def __post_init__(self):
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0, got {self.prefill_chunk}")
+
+
+def _one_prompt(prompt) -> np.ndarray:
+    """Normalize a single request's prompt to [1, P]; reject batches (a
+    [B, P] batch would otherwise silently concatenate into one prompt)."""
+    prompt = np.asarray(prompt, np.int32)
+    if prompt.ndim == 2 and prompt.shape[0] == 1:
+        prompt = prompt[0]
+    if prompt.ndim != 1:
+        raise ValueError(
+            f"per-request prefill serves ONE prompt: expected shape [P] or "
+            f"[1, P], got {prompt.shape}; use engine.prefill / generate "
+            f"for static batches")
+    return prompt.reshape(1, -1)
 
 
 class CollaborativeEngine:
@@ -92,14 +125,29 @@ class CollaborativeEngine:
         self.fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
         self._decode = jax.jit(self._decode_step, donate_argnums=(1, 2))
         self._write = jax.jit(self._write_slot, donate_argnums=(0,))
+        self._prefill = jax.jit(self._prefill_trace,
+                                static_argnames=("want_trace",))
+        self._warm = jax.jit(self._warm_chunk, donate_argnums=(0,))
         L = cfg.num_layers
-        self.stats = {"hits": 0, "accesses": 0, "host_assignments": 0,
-                      "fetched_experts": 0, "tokens": 0, "steps": 0,
-                      "prefetch_issued": 0, "prefetch_hits": 0,
-                      "prefetch_wasted": 0, "predicted": 0,
-                      "predicted_correct": 0,
-                      "per_layer_hits": np.zeros(L, np.int64),
-                      "per_layer_accesses": np.zeros(L, np.int64)}
+        self._counters = {
+            "hits": 0, "accesses": 0, "host_assignments": 0,
+            "fetched_experts": 0, "tokens": 0, "steps": 0,
+            "prefetch_issued": 0, "prefetch_hits": 0, "prefetch_wasted": 0,
+            "predicted": 0, "predicted_correct": 0,
+            "prefill_hits": 0, "prefill_accesses": 0, "prefill_fetched": 0,
+            "prefill_tokens": 0, "prefill_chunks": 0}
+        self._per_layer_hits = np.zeros(L, np.int64)
+        self._per_layer_accesses = np.zeros(L, np.int64)
+
+    # -- typed stats -------------------------------------------------------
+    @property
+    def stats(self) -> EngineStats:
+        """Immutable snapshot of the engine counters (typed; derived rates
+        and the per-layer hit-rate array live on EngineStats)."""
+        return EngineStats(
+            per_layer_hits=tuple(int(x) for x in self._per_layer_hits),
+            per_layer_accesses=tuple(int(x) for x in self._per_layer_accesses),
+            **self._counters)
 
     def _tiers(self, fast) -> collab.ExpertTiers:
         s1, s3, s2, state = fast
@@ -151,7 +199,6 @@ class CollaborativeEngine:
             x, tiers, layer, pred_prev, rep_prev, issued_prev = carry
             lp, st = xs["params"], xs["state"]
             h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-            from repro.models import attention as attn
             o, new_st = attn.decode_attention(lp["attn"], h, st, pos, cfg,
                                               slot.window)
             x = x + o
@@ -242,28 +289,214 @@ class CollaborativeEngine:
                    slot: int) -> Params:
         return self._write(batch_state, one_state, jnp.asarray(slot, jnp.int32))
 
+    # -- prefill: one shared trace, two cache modes ------------------------
+    def _prefill_trace(self, tokens, plen, want_trace: bool = False):
+        """Full-prompt forward for the homogeneous MoE stack.
+
+        tokens [B, capacity] (prompt left-aligned, zero-padded); plen —
+        traced scalar count of real prompt tokens. Mirrors the backbone's
+        prefill mode (chunked-flash attention + dense host-tier MoE) and
+        — under the static ``want_trace`` flag — additionally emits the
+        per-layer routing trace the cache-warming path replays: router
+        picks and post-ln2 hidden states for every position (the bypass
+        path skips the O(L*S*D) trace materialization entirely). The
+        mirror is pinned by a bitwise KV + logits parity test against
+        ``model.prefill`` (test_serving_api) — keep this body in lockstep
+        with ``transformer._apply_layer``'s prefill branch. First-token
+        logits are read at position ``plen - 1`` — the last *real* prompt
+        token (pad positions are causally masked out of every real
+        position's attention).
+
+        Returns (logits [B, 1, V], decode state with pos=plen,
+        trace {top_i [L, B, S, K], top_w [L, B, S, K], h2 [L, B, S, D]}
+        — or None without ``want_trace``).
+        """
+        cfg = self.cfg
+        params = self.params
+        B, S = tokens.shape
+        K = cfg.moe.top_k
+        slots, _, _ = transformer.build_slots(cfg)
+        slot = slots[0]
+        x = transformer._embed_inputs(params, {"tokens": tokens}, cfg)
+        positions = jnp.arange(S)[None]
+
+        def body(x, lp):
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            o = attn.self_attention(lp["attn"], h, positions, cfg,
+                                    slot.window)
+            # rebuild k/v for the decode cache (cheap projections, same as
+            # the backbone's prefill mode)
+            q, k, v = attn._project_qkv(lp["attn"], h, cfg)
+            _, k = attn._rope_qk(q, k, positions, cfg)
+            x = x + o
+            h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            f, _ = moe_apply(lp["moe"], h2, cfg.moe,
+                             capacity_factor=cfg.moe.serve_capacity_factor)
+            x = x + f
+            out = {"k": k, "v": v}
+            if want_trace:
+                # the routing trace: same router on the same h2 as
+                # moe_apply just consulted
+                _, top_i, top_w = route(lp["moe"]["router"],
+                                        h2.reshape(B * S, -1), K)
+                out.update(top_i=top_i.reshape(B, S, K),
+                           top_w=top_w.reshape(B, S, K), h2=h2)
+            return x, out
+
+        x, seq = jax.lax.scan(body, x, params["scan"]["s0"])
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        h_last = jax.lax.dynamic_slice_in_dim(x, plen - 1, 1, axis=1)
+        logits = transformer.lm_logits(params, h_last, cfg)
+        state = {"scan": {"s0": {"k": seq["k"], "v": seq["v"]}},
+                 "pos": jnp.asarray(plen, jnp.int32)}
+        trace = {"top_i": seq["top_i"], "top_w": seq["top_w"],
+                 "h2": seq["h2"]} if want_trace else None
+        return logits, state, trace
+
+    def _padded_prefill(self, tokens, want_trace: bool = False):
+        """Validate, pad to capacity and run the prefill trace.
+        tokens [B, P] -> (logits [B, 1, V], state, routing trace|None)."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B, P = tokens.shape
+        cap = self.ecfg.capacity
+        if not 1 <= P < cap:
+            raise ValueError(
+                f"prompt length {P} outside [1, capacity={cap}) — decode "
+                f"needs at least one free KV slot")
+        pad = jnp.zeros((B, cap - P), tokens.dtype)
+        return self._prefill(jnp.concatenate([tokens, pad], 1),
+                             jnp.asarray(P, jnp.int32),
+                             want_trace=want_trace)
+
+    def prefill(self, tokens: jax.Array) -> Tuple[jax.Array, Params]:
+        """Bypass prefill (tiers untouched: the cache stays cold until
+        decode). tokens [B, P] -> (last-real-position logits [B, 1, V],
+        decode state with pos=P)."""
+        logits, state, _ = self._padded_prefill(tokens)
+        return logits, state
+
+    def _warm_chunk(self, fast, top_i, top_w, h2, active):
+        """Route one prompt chunk through probe → execute → commit.
+
+        top_i/top_w [L, C, K]; h2 [L, C, D]; active [C] (False = pad rows
+        beyond the prompt). The chunk's C tokens play the role of the T
+        decode rows: the probe's demand accesses and the commit's
+        post-fetch warm the shared tiers exactly as a decode step would;
+        execute's grouped FFN output has no consumer here (the hidden
+        states come from the shared prefill trace, keeping chunked and
+        bypass prefill bit-identical), so XLA prunes the matmuls and what
+        remains is the pipeline's *data movement* — the per-unique-expert
+        weight gathers and slot writes. Returns (fast, per-layer stats).
+        """
+        ccfg = self.ecfg.cache
+        tiers = self._tiers(fast)
+
+        def body(carry, xs):
+            tiers, layer = carry
+            pr = collab.probe(tiers, layer, xs["top_i"], ccfg, active=active)
+            _, host_w = collab.execute(tiers, layer, xs["h2"], xs["top_w"],
+                                       pr, ccfg)
+            tiers, fetch = collab.commit(tiers, layer, pr, host_w, ccfg)
+            return (tiers, layer + 1), collab._stats(pr, fetch)
+
+        (tiers, _), stats = jax.lax.scan(
+            body, (tiers, jnp.zeros((), jnp.int32)),
+            {"top_i": top_i, "top_w": top_w, "h2": h2})
+        new_fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
+        return new_fast, stats
+
+    def prefill_chunked(self, prompt: np.ndarray,
+                        chunk: Optional[int] = None
+                        ) -> Tuple[jax.Array, Params]:
+        """Cache-warming chunked prefill (ROADMAP's long-prompt item).
+
+        Runs the prompt through the shared prefill trace (bit-identical
+        hidden states / KV / logits to :meth:`prefill`), then replays the
+        prompt's routing trace through the staged probe/execute/commit
+        pipeline in ``chunk``-token chunks, in prompt order — so the
+        shared expert cache is warm before the first decode step. The
+        warming accesses are accounted in the separate ``prefill_*`` stat
+        channel; decode-channel counters and generated tokens are
+        untouched by construction (residency changes never change logits).
+        """
+        chunk = self.ecfg.prefill_chunk if chunk is None else int(chunk)
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        prompt = _one_prompt(prompt)
+        P = prompt.shape[1]
+        logits, state, trace = self._padded_prefill(prompt, want_trace=True)
+
+        # replay the routing trace chunk by chunk (fixed [L, chunk, ...]
+        # shapes: the warm step compiles once per chunk size; only the
+        # python trip count varies with prompt length). The trace stays
+        # device-resident and the stats convert after the loop — no
+        # device->host sync between chunks on the admission path.
+        top_i = trace["top_i"][:, 0]                    # [L, S, K]
+        top_w = trace["top_w"][:, 0]
+        h2 = trace["h2"][:, 0]                          # [L, S, D]
+        n_chunks = -(-P // chunk)
+        pad_to = n_chunks * chunk
+        if pad_to > top_i.shape[1]:
+            ext = ((0, 0), (0, pad_to - top_i.shape[1]), (0, 0))
+            top_i, top_w, h2 = (jnp.pad(a, ext) for a in (top_i, top_w, h2))
+        chunk_stats = []
+        for ci in range(n_chunks):
+            s = ci * chunk
+            active = jnp.arange(s, s + chunk) < P
+            self.fast, wstats = self._warm(
+                self.fast, top_i[:, s:s + chunk], top_w[:, s:s + chunk],
+                h2[:, s:s + chunk], active)
+            chunk_stats.append(wstats)
+        for ci, wstats in enumerate(chunk_stats):
+            self._accumulate_prefill(wstats, min(chunk, P - ci * chunk))
+        self._counters["prefill_chunks"] += n_chunks
+        return logits, state
+
     def prefill_request(self, prompt: np.ndarray,
+                        sampling: SamplingParams = GREEDY,
                         key=None) -> Tuple[int, Params]:
         """Prefill one request; returns (first token, decode state with
-        pos=len(prompt), B=1). The first token is greedy unless the engine
-        samples (``greedy=False``) and a key is provided."""
-        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
-        P = prompt.shape[1]
-        assert 1 <= P < self.ecfg.capacity, (P, self.ecfg.capacity)
-        logits, state = self.prefill(jnp.asarray(prompt))
-        tok = int(np.asarray(self.select_tokens(logits[:, P - 1], key))[0])
+        pos=len(prompt), B=1). Uses the cache-warming chunked path when
+        ``EngineConfig.prefill_chunk > 0``, the cold bypass otherwise —
+        the first token is identical either way. The token is selected
+        with the request's own SamplingParams (``key``: the request's
+        first-step PRNG key; required for non-greedy sampling)."""
+        prompt = _one_prompt(prompt)
+        if self.ecfg.prefill_chunk > 0:
+            logits, state = self.prefill_chunked(prompt)
+        else:
+            logits, state = self.prefill(jnp.asarray(prompt))
+        keys = None if key is None else np.asarray(key).reshape(1, 2)
+        tok = int(np.asarray(
+            self.select_tokens(logits[:, 0], [sampling], keys))[0])
         return tok, state
 
-    def select_tokens(self, logits: jax.Array, key=None) -> jax.Array:
-        """Next-token selection from step logits [T, V]: argmax when
-        ``greedy``, else temperature sampling (requires a PRNG key)."""
-        if self.ecfg.greedy:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        if key is None:
-            raise ValueError("greedy=False sampling needs a PRNG key")
-        t = max(self.ecfg.temperature, 1e-6)
-        return jax.random.categorical(
-            key, logits.astype(jnp.float32) / t, axis=-1).astype(jnp.int32)
+    # -- vectorized per-slot sampling --------------------------------------
+    def select_tokens(self, logits: jax.Array,
+                      sampling: Union[None, SamplingParams,
+                                      Sequence[SamplingParams]] = None,
+                      keys=None) -> jax.Array:
+        """Next-token selection from step logits [T, V], one
+        SamplingParams per row (a scalar broadcasts; None = all greedy).
+        keys [T, 2] uint32 — per-row step keys, required as soon as any
+        row samples. Returns [T] int32."""
+        T = logits.shape[0]
+        if sampling is None:
+            sampling = [GREEDY] * T
+        elif isinstance(sampling, SamplingParams):
+            sampling = [sampling] * T
+        if len(sampling) != T:
+            raise ValueError(f"params batch {len(sampling)} != rows {T}")
+        greedy, temp, top_k, top_p = batch_arrays(sampling)
+        if greedy.all():
+            # the dominant path: skip the sampling graph (sorts, softmax,
+            # discarded categorical draw) entirely
+            return jnp.argmax(logits.astype(jnp.float32), -1) \
+                .astype(jnp.int32)
+        if keys is None:
+            raise ValueError("non-greedy sampling needs per-row keys")
+        return sample_tokens(logits, greedy, temp, top_k, top_p,
+                             jnp.asarray(keys))
 
     def decode_batch(self, tokens, state: Params, active
                      ) -> Tuple[jax.Array, Params]:
@@ -277,71 +510,59 @@ class CollaborativeEngine:
         return logits, state
 
     def _accumulate(self, stats, n_active: int) -> None:
+        c = self._counters
         for k in ("hits", "accesses", "fetched_experts", "prefetch_issued",
                   "prefetch_hits", "prefetch_wasted", "predicted",
                   "predicted_correct"):
-            self.stats[k] += int(np.asarray(stats[k]).sum())
-        self.stats["host_assignments"] += int(
+            c[k] += int(np.asarray(stats[k]).sum())
+        c["host_assignments"] += int(
             np.asarray(stats["host_flops_assignments"]).sum())
         # scan stacks one entry per layer: accumulate the per-layer series
         # the aggregates above collapse
-        self.stats["per_layer_hits"] += np.asarray(stats["hits"], np.int64)
-        self.stats["per_layer_accesses"] += np.asarray(stats["accesses"],
-                                                       np.int64)
-        self.stats["tokens"] += n_active
-        self.stats["steps"] += 1
+        self._per_layer_hits += np.asarray(stats["hits"], np.int64)
+        self._per_layer_accesses += np.asarray(stats["accesses"], np.int64)
+        c["tokens"] += n_active
+        c["steps"] += 1
 
-    @property
-    def per_layer_hit_rates(self) -> np.ndarray:
-        """Demand hit rate per MoE layer ([num_layers] float; layers with
-        zero accesses — e.g. nothing decoded yet — report 0.0)."""
-        acc = self.stats["per_layer_accesses"]
-        return np.where(acc > 0,
-                        self.stats["per_layer_hits"] / np.maximum(acc, 1),
-                        0.0)
-
-    @property
-    def prediction_accuracy(self) -> float:
-        """Share of speculative next-layer predictions the next layer's
-        real router confirmed (0.0 when prefetch never predicted)."""
-        return self.stats["predicted_correct"] / max(
-            self.stats["predicted"], 1)
+    def _accumulate_prefill(self, stats, n_tokens: int) -> None:
+        """Fold one warm chunk's per-layer stats into the prefill channel
+        (kept apart from the decode demand channel on purpose)."""
+        c = self._counters
+        c["prefill_hits"] += int(np.asarray(stats["hits"]).sum())
+        c["prefill_accesses"] += int(np.asarray(stats["accesses"]).sum())
+        c["prefill_fetched"] += int(
+            np.asarray(stats["fetched_experts"]).sum())
+        c["prefill_tokens"] += n_tokens
 
     # -- static-batch convenience path ------------------------------------
-    def prefill(self, tokens: jax.Array) -> Tuple[jax.Array, Params]:
-        """Standard prefill (tiers untouched: prefill is compute-bound and
-        runs from the host tier on real hardware; cache serves decode)."""
-        from repro.models import model as model_lib
-        B, P = tokens.shape
-        cap = self.ecfg.capacity
-        pad = jnp.zeros((B, cap - P), tokens.dtype)
-        logits, state = model_lib.prefill(
-            self.params, {"tokens": jnp.concatenate([tokens, pad], 1)},
-            self.cfg)
-        state["pos"] = jnp.asarray(P, jnp.int32)
-        return logits, state
-
     def generate(self, prompt: np.ndarray, steps: int,
-                 key=None) -> Tuple[np.ndarray, Dict[str, float]]:
-        """Static-batch generation: all prompt rows start and stop together
-        (the scheduler path interleaves requests instead)."""
-        key = key if key is not None else jax.random.PRNGKey(0)
+                 sampling: SamplingParams = GREEDY,
+                 key=None) -> Tuple[np.ndarray, EngineStats]:
+        """Static-batch generation: all prompt rows start and stop
+        together with one shared SamplingParams (the scheduler path
+        interleaves requests with per-request sampling instead). Uses
+        bypass prefill — the warming path is per-request."""
+        base = np.asarray(jax.random.PRNGKey(sampling.seed)
+                          if sampling.seed is not None else
+                          (key if key is not None else jax.random.PRNGKey(0)))
         B, P = prompt.shape
         logits, state = self.prefill(jnp.asarray(prompt))
         state["pos"] = jnp.full((B,), P, jnp.int32)
-        key, sub = jax.random.split(key)
-        tok = self.select_tokens(logits[:, P - 1], sub)[:, None]
+
+        def step_keys(i):
+            if sampling.greedy:               # greedy: no key derivation
+                return None
+            row0 = np.asarray(jax.random.fold_in(base, i))
+            return fold_keys(np.broadcast_to(row0, (B, 2)), np.arange(B))
+
+        tok = self.select_tokens(logits[:, 0], sampling, step_keys(0))[:, None]
         active = jnp.ones((B,), bool)
         out = [np.asarray(tok)]
-        for _ in range(steps - 1):
+        for i in range(steps - 1):
             logits, state, self.fast, stats = self._decode(tok, state,
                                                            self.fast, active)
-            key, sub = jax.random.split(key)
-            tok = self.select_tokens(logits[:, 0], sub)[:, None]
+            tok = self.select_tokens(logits[:, 0], sampling,
+                                     step_keys(i + 1))[:, None]
             out.append(np.asarray(tok))
             self._accumulate(stats, B)
-        hit_rate = self.stats["hits"] / max(self.stats["accesses"], 1)
-        return np.concatenate(out, 1), {
-            **self.stats, "hit_rate": hit_rate,
-            "prediction_accuracy": self.prediction_accuracy,
-            "per_layer_hit_rates": self.per_layer_hit_rates}
+        return np.concatenate(out, 1), self.stats

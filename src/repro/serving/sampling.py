@@ -1,0 +1,114 @@
+"""Per-request sampling: typed parameters and a vectorized per-slot sampler.
+
+The serving surface treats the *request* as the unit of adaptivity (DAOP /
+HybriMoE style): every request carries its own :class:`SamplingParams`
+(greedy / temperature / top-k / top-p, optional seed), and one vectorized
+sampler draws the whole slot batch's next tokens in a single jitted call
+driven by a ``[T]`` params batch — there is no engine-wide sampling knob.
+
+Reproducibility is *per request*, not per batch: each request owns a PRNG
+chain seeded from ``SamplingParams.seed`` (or a scheduler-split fallback),
+and its i-th generated token always draws from ``fold_in(base, i)`` —
+independent of slot placement, batch composition or admission order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SamplingParams", "GREEDY", "batch_arrays", "sample_tokens",
+           "request_key", "fold_keys"]
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """How one request turns logits into tokens.
+
+    greedy       — argmax decoding; all other knobs are ignored.
+    temperature  — softmax temperature (>0) when sampling.
+    top_k        — keep only the k highest-probability tokens (0 = off).
+    top_p        — nucleus sampling: keep the smallest prefix of the
+                   sorted distribution whose mass reaches p (1.0 = off).
+    seed         — per-request PRNG seed; None derives one from the
+                   scheduler's key chain at admission.
+    """
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.greedy and self.temperature <= 0:
+            raise ValueError(f"temperature must be > 0, got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+def batch_arrays(params: Sequence[SamplingParams]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """[T] SamplingParams -> (greedy [T]b, temperature [T]f32,
+    top_k [T]i32, top_p [T]f32) — the params batch the sampler consumes."""
+    return (np.array([p.greedy for p in params], bool),
+            np.array([p.temperature for p in params], np.float32),
+            np.array([p.top_k for p in params], np.int32),
+            np.array([p.top_p for p in params], np.float32))
+
+
+def request_key(params: SamplingParams, fallback) -> np.ndarray:
+    """Base PRNG key of one request's sampling chain ([2] uint32)."""
+    if params.seed is not None:
+        return np.asarray(jax.random.PRNGKey(params.seed))
+    return np.asarray(fallback)
+
+
+@jax.jit
+def fold_keys(bases: jax.Array, counts: jax.Array) -> jax.Array:
+    """Per-slot step keys: fold each request's token index into its base
+    chain. bases [T, 2] uint32; counts [T] int32 -> [T, 2] uint32."""
+    return jax.vmap(jax.random.fold_in)(bases, counts)
+
+
+@jax.jit
+def sample_tokens(logits: jax.Array, greedy: jax.Array,
+                  temperature: jax.Array, top_k: jax.Array,
+                  top_p: jax.Array, keys: jax.Array) -> jax.Array:
+    """Vectorized per-slot next-token selection.
+
+    logits [T, V]; greedy/temperature/top_k/top_p [T] (the params batch);
+    keys [T, 2] uint32 (per-slot step keys; ignored for greedy rows).
+    Returns [T] int32. Greedy rows take argmax of the raw logits; sampling
+    rows apply temperature, then the row's top-k cut, then the row's
+    nucleus (top-p) cut, and draw categorically with the row's own key —
+    rows never share randomness.
+    """
+    lg = logits.astype(jnp.float32)
+    V = lg.shape[-1]
+    arg = jnp.argmax(lg, -1).astype(jnp.int32)
+
+    scaled = lg / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: threshold at each row's k-th largest scaled logit (k=0 -> off)
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]
+    keff = jnp.where((top_k <= 0) | (top_k > V), V, top_k)
+    kth = jnp.take_along_axis(srt, (keff - 1)[:, None], axis=-1)
+    masked = jnp.where(scaled < kth, -jnp.inf, scaled)
+    # top-p: keep the smallest sorted prefix reaching mass p (the top
+    # token always survives: its preceding cumulative mass is 0 < p)
+    srt_m = jnp.sort(masked, axis=-1)[:, ::-1]
+    ps = jax.nn.softmax(srt_m, axis=-1)
+    csum = jnp.cumsum(ps, axis=-1)
+    keep = (csum - ps) < top_p[:, None]
+    pth = jnp.min(jnp.where(keep, srt_m, jnp.inf), axis=-1, keepdims=True)
+    masked = jnp.where(masked < pth, -jnp.inf, masked)
+
+    drawn = jax.vmap(lambda k, l: jax.random.categorical(k, l))(keys, masked)
+    return jnp.where(greedy, arg, drawn.astype(jnp.int32))

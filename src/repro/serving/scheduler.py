@@ -6,51 +6,75 @@ workflow to T = ``EngineConfig.max_batch`` concurrent *slots* over ONE
 shared expert cache:
 
   * admission   — a queued request claims a free slot: its prompt is
-                  prefilled (B=1) and the resulting KV state is scattered
-                  into the slot's rows of the batch decode state.
+                  prefilled (B=1, cache-warming chunked prefill by
+                  default) and the resulting KV state is scattered into
+                  the slot's rows of the batch decode state.
   * decode tick — every step decodes the whole padded slot batch in one
                   jitted call; each slot sits at its own KV position
                   (per-slot ``pos`` vector) and inactive slots are masked
-                  out of the shared expert cache, the stats and the output.
-  * retirement  — a request finishes on ``max_new_tokens`` or ``eos_id``;
-                  its slot frees immediately and the next queued request
-                  is admitted on the same tick (continuous batching: the
-                  batch never drains to refill).
+                  out of the shared expert cache, the stats and the
+                  output. Next tokens are drawn by the engine's
+                  vectorized per-slot sampler, each row under its own
+                  request's SamplingParams and PRNG chain.
+  * retirement  — a request finishes on ``max_new_tokens``, ``eos_id`` or
+                  one of its ``stop_sequences``; its slot frees
+                  immediately and the next queued request is admitted on
+                  the same tick (continuous batching: the batch never
+                  drains to refill).
 
-Everything here is host-side orchestration (numpy + python lists) around
-the engine's jitted primitives — the scheduler adds no traced code, so the
-decode step compiles exactly once per (T, capacity) geometry.
+Callers observe tokens as they decode: :meth:`stream` yields
+``(rid, token, done)`` events in emission order, and each request may
+carry an ``on_token`` callback invoked at append time. Everything here is
+host-side orchestration (numpy + python lists) around the engine's jitted
+primitives — the scheduler adds no traced code, so the decode step
+compiles exactly once per (T, capacity) geometry.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, Iterator, List, Optional, \
+    Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .engine import CollaborativeEngine
+from .engine import CollaborativeEngine, _one_prompt
+from .sampling import GREEDY, SamplingParams, fold_keys, request_key
+from .stats import RunStats
 
-__all__ = ["Request", "ContinuousBatchingScheduler"]
+__all__ = ["Request", "ContinuousBatchingScheduler", "StreamEvent"]
+
+StreamEvent = Tuple[int, int, bool]          # (rid, token, done)
 
 
 @dataclass
 class Request:
-    """One generation request and its accumulated output."""
+    """One generation request: prompt, per-request sampling, termination
+    conditions, optional streaming callback, and accumulated output."""
     rid: int
     prompt: np.ndarray                  # [P] int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    sampling: SamplingParams = GREEDY
+    stop_sequences: Tuple[Tuple[int, ...], ...] = ()
+    on_token: Optional[Callable[[int, bool], None]] = None
     generated: List[int] = field(default_factory=list)
 
     @property
     def done(self) -> bool:
         if len(self.generated) >= self.max_new_tokens:
             return True
-        return (self.eos_id is not None and len(self.generated) > 0
-                and self.generated[-1] == self.eos_id)
+        if not self.generated:
+            return False
+        if self.eos_id is not None and self.generated[-1] == self.eos_id:
+            return True
+        for seq in self.stop_sequences:
+            n = len(seq)
+            if n and len(self.generated) >= n \
+                    and tuple(self.generated[-n:]) == tuple(seq):
+                return True
+        return False
 
     @property
     def output(self) -> np.ndarray:
@@ -60,9 +84,12 @@ class Request:
 class ContinuousBatchingScheduler:
     """Slot-based continuous batching for :class:`CollaborativeEngine`.
 
-    ``key`` seeds the sampling chain used when the engine's ``greedy`` is
-    False (temperature sampling); one subkey is split off per decode tick
-    and per admission, so scheduler runs are reproducible per seed."""
+    ``key`` seeds the fallback per-request sampling chains (requests whose
+    SamplingParams carry no explicit ``seed``); a request's i-th token
+    always draws from ``fold_in(request_base, i)``, so runs are
+    reproducible per (scheduler seed, admission order) and — for
+    explicitly seeded requests — per request, independent of batch
+    composition."""
 
     def __init__(self, engine: CollaborativeEngine, key=None):
         self.engine = engine
@@ -73,7 +100,9 @@ class ContinuousBatchingScheduler:
         self._next = np.zeros((self.num_slots, 1), np.int32)
         self._rid = 0
         self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._bases = np.zeros((self.num_slots, 2), np.uint32)
         self.finished: List[Request] = []
+        self._submitted = 0
 
     def _split(self):
         self._key, sub = jax.random.split(self._key)
@@ -81,10 +110,34 @@ class ContinuousBatchingScheduler:
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
-               eos_id: Optional[int] = None) -> Request:
-        req = Request(self._rid, np.asarray(prompt, np.int32).reshape(-1),
-                      int(max_new_tokens), eos_id)
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               stop_sequences: Sequence[Sequence[int]] = (),
+               on_token: Optional[Callable[[int, bool], None]] = None
+               ) -> Request:
+        """Queue one request. Validates the prompt against the engine
+        geometry here — at submission — so an oversized request fails
+        fast with a clear error instead of mid-run after other requests
+        already decoded."""
+        prompt = _one_prompt(prompt)[0]      # [P]; rejects [B, P] batches
+        plen, cap = prompt.shape[0], self.engine.ecfg.capacity
+        if plen < 1:
+            raise ValueError("prompt must contain at least one token")
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if plen + max_new_tokens > cap:
+            raise ValueError(
+                f"prompt length {plen} + max_new_tokens {max_new_tokens} "
+                f"exceeds engine KV capacity {cap}; shorten the prompt or "
+                f"raise EngineConfig.capacity")
+        req = Request(self._rid, prompt, int(max_new_tokens), eos_id,
+                      sampling if sampling is not None else GREEDY,
+                      tuple(tuple(int(t) for t in s)
+                            for s in stop_sequences),
+                      on_token)
         self._rid += 1
+        self._submitted += 1
         self.queue.append(req)
         return req
 
@@ -106,56 +159,86 @@ class ContinuousBatchingScheduler:
         self.finished.extend(out)
         return out
 
-    def _admit(self) -> None:
+    def _append(self, req: Request, tok: int,
+                events: List[StreamEvent]) -> None:
+        req.generated.append(tok)
+        done = req.done
+        events.append((req.rid, tok, done))
+        if req.on_token is not None:
+            req.on_token(tok, done)
+
+    def _admit(self, events: List[StreamEvent]) -> None:
         for t in range(self.num_slots):
             if self.slots[t] is None and self.queue:
                 req = self.queue.popleft()
+                base = request_key(req.sampling, self._split())
+                self._bases[t] = base
                 first_tok, one_state = self.engine.prefill_request(
-                    req.prompt, key=self._split())
+                    req.prompt, sampling=req.sampling,
+                    key=jax.random.fold_in(base, 0))
                 self.state = self.engine.write_slot(self.state, one_state, t)
-                req.generated.append(first_tok)
+                self._append(req, first_tok, events)
                 self._next[t, 0] = first_tok
                 self.slots[t] = req
 
     # -- the decode loop ---------------------------------------------------
-    def step(self) -> List[Request]:
+    def _tick(self) -> Tuple[List[Request], List[StreamEvent]]:
         """One scheduler tick: retire -> admit -> one padded decode step.
-        Returns the requests that finished on this tick."""
+        Returns (requests finished this tick, stream events in order)."""
+        events: List[StreamEvent] = []
         finished = self._retire()
-        self._admit()
+        self._admit(events)
         finished += self._retire()       # an admitted req may already be done
         active = self.active_mask
         if active.any():
             logits, self.state = self.engine.decode_batch(
                 self._next, self.state, active)
+            params = [r.sampling if r is not None else GREEDY
+                      for r in self.slots]
+            if all(p.greedy for p in params):
+                keys = None                   # greedy: skip key derivation
+            else:
+                counts = np.array([len(r.generated) if r is not None else 0
+                                   for r in self.slots], np.int32)
+                keys = fold_keys(self._bases, counts)
             toks = np.asarray(jax.device_get(self.engine.select_tokens(
-                logits[:, 0], key=self._split()))).astype(np.int32)
+                logits[:, 0], params, keys))).astype(np.int32)
             for t, req in enumerate(self.slots):
                 if req is None:
                     continue
-                req.generated.append(int(toks[t]))
+                self._append(req, int(toks[t]), events)
                 self._next[t, 0] = toks[t]
+        return finished, events
+
+    def step(self) -> List[Request]:
+        """One tick; returns the requests that finished on it."""
+        finished, _ = self._tick()
         return finished
+
+    def stream(self) -> Iterator[StreamEvent]:
+        """Drain queue + slots, yielding ``(rid, token, done)`` the moment
+        each token is decoded — a request's events arrive in generation
+        order and its final event (and only that one) carries
+        ``done=True``. Requests interleave exactly as the continuous batch
+        decodes them."""
+        while self.queue or any(s is not None for s in self.slots):
+            _, events = self._tick()
+            for ev in events:
+                yield ev
+        self._retire()
 
     def run(self) -> Dict[int, np.ndarray]:
         """Drain queue + slots to completion; returns {rid: output tokens}."""
-        while self.queue or any(s is not None for s in self.slots):
-            self.step()
-        self._retire()
+        for _ in self.stream():
+            pass
         return {r.rid: r.output for r in self.finished}
 
     @property
-    def stats(self) -> Dict[str, float]:
-        """Engine counters plus derived rates. Every division is guarded:
-        a run that never decoded (zero accesses / zero predictions /
-        prefetch disabled) reports 0.0 rates instead of dividing by
-        zero."""
-        s = dict(self.engine.stats)
-        s["hit_rate"] = s["hits"] / max(s["accesses"], 1)
-        s["prefetch_hit_rate"] = s["prefetch_hits"] / max(s["accesses"], 1)
-        s["prediction_accuracy"] = (
-            s["predicted_correct"] / max(s["predicted"], 1))
-        s["prefetch_waste_rate"] = (
-            s["prefetch_wasted"] / max(s["prefetch_issued"], 1))
-        s["per_layer_hit_rates"] = self.engine.per_layer_hit_rates
-        return s
+    def stats(self) -> RunStats:
+        """Typed run statistics: request accounting + an immutable engine
+        counter snapshot (rates zero-guarded on EngineStats)."""
+        return RunStats(engine=self.engine.stats,
+                        requests_submitted=self._submitted,
+                        requests_finished=len(self.finished),
+                        requests_active=self.num_active,
+                        requests_queued=len(self.queue))

@@ -1,0 +1,130 @@
+"""Typed serving statistics.
+
+Replaces the string-keyed stats dicts of the engine and the scheduler:
+:class:`EngineStats` is an immutable snapshot of the engine's counters
+(demand + prefetch + prefill channels, per-layer series), and
+:class:`RunStats` wraps one scheduler run around it with request-level
+accounting. Both are frozen dataclasses with typed integer counters,
+zero-guarded derived-rate properties, and a ``to_json()`` that emits only
+JSON-native types — array-valued series (the per-layer hit-rate vector)
+live behind properties, never mixed into a scalar dict, so the export
+round-trips through ``json.dumps``/``json.loads`` exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = ["EngineStats", "RunStats"]
+
+
+@dataclass(frozen=True)
+class EngineStats:
+    """Counters of one :class:`~repro.serving.CollaborativeEngine`.
+
+    Decode (demand) channel: ``hits`` / ``accesses`` / ``host_assignments``
+    / ``fetched_experts`` over decode-step expert assignments, plus
+    ``tokens`` (active decoded tokens) and ``steps`` (padded batch steps).
+    Prefetch channel: cross-layer speculation counters. Prefill channel:
+    the cache-warming chunked-prefill accesses — kept separate so decode
+    demand hit rates stay comparable with and without warming.
+    """
+    # decode demand channel
+    hits: int = 0
+    accesses: int = 0
+    host_assignments: int = 0
+    fetched_experts: int = 0
+    tokens: int = 0
+    steps: int = 0
+    # cross-layer speculative prefetch channel
+    prefetch_issued: int = 0
+    prefetch_hits: int = 0
+    prefetch_wasted: int = 0
+    predicted: int = 0
+    predicted_correct: int = 0
+    # chunked-prefill (cache warming) channel
+    prefill_hits: int = 0
+    prefill_accesses: int = 0
+    prefill_fetched: int = 0
+    prefill_tokens: int = 0
+    prefill_chunks: int = 0
+    # per-MoE-layer demand series (tuples: immutable + JSON-native)
+    per_layer_hits: Tuple[int, ...] = ()
+    per_layer_accesses: Tuple[int, ...] = ()
+
+    # -- derived rates (all zero-guarded) ---------------------------------
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.accesses, 1)
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Share of demand accesses served by a landed reservation."""
+        return self.prefetch_hits / max(self.accesses, 1)
+
+    @property
+    def prefetch_waste_rate(self) -> float:
+        return self.prefetch_wasted / max(self.prefetch_issued, 1)
+
+    @property
+    def prediction_accuracy(self) -> float:
+        return self.predicted_correct / max(self.predicted, 1)
+
+    @property
+    def prefill_hit_rate(self) -> float:
+        return self.prefill_hits / max(self.prefill_accesses, 1)
+
+    @property
+    def per_layer_hit_rates(self) -> np.ndarray:
+        """Demand hit rate per MoE layer ([num_layers] float; layers with
+        zero accesses report 0.0). Array-valued: exposed as a property so
+        the scalar counters and ``to_json()`` stay array-free."""
+        acc = np.asarray(self.per_layer_accesses, np.int64)
+        hit = np.asarray(self.per_layer_hits, np.int64)
+        return np.where(acc > 0, hit / np.maximum(acc, 1), 0.0)
+
+    def to_json(self) -> Dict:
+        """JSON-native export: int counters, float rates, list series."""
+        d = {k: int(v) for k, v in asdict(self).items()
+             if not isinstance(v, tuple)}
+        d.update(
+            hit_rate=float(self.hit_rate),
+            prefetch_hit_rate=float(self.prefetch_hit_rate),
+            prefetch_waste_rate=float(self.prefetch_waste_rate),
+            prediction_accuracy=float(self.prediction_accuracy),
+            prefill_hit_rate=float(self.prefill_hit_rate),
+            per_layer_hits=[int(x) for x in self.per_layer_hits],
+            per_layer_accesses=[int(x) for x in self.per_layer_accesses],
+            per_layer_hit_rates=[float(x) for x in self.per_layer_hit_rates],
+        )
+        return d
+
+
+@dataclass(frozen=True)
+class RunStats:
+    """One scheduler run: request accounting around an EngineStats
+    snapshot. Engine counters and rates are reachable directly
+    (``run.hit_rate`` delegates to ``run.engine.hit_rate``)."""
+    engine: EngineStats = field(default_factory=EngineStats)
+    requests_submitted: int = 0
+    requests_finished: int = 0
+    requests_active: int = 0
+    requests_queued: int = 0
+
+    def __getattr__(self, name):
+        # delegate unknown attributes to the engine snapshot so call sites
+        # read run.hits / run.hit_rate without the .engine hop
+        if name.startswith("__"):
+            raise AttributeError(name)
+        return getattr(self.engine, name)
+
+    def to_json(self) -> Dict:
+        return {
+            "requests_submitted": int(self.requests_submitted),
+            "requests_finished": int(self.requests_finished),
+            "requests_active": int(self.requests_active),
+            "requests_queued": int(self.requests_queued),
+            "engine": self.engine.to_json(),
+        }

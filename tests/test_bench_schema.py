@@ -1,0 +1,100 @@
+"""Benchmark JSON artifact schema: the ``--json`` outputs are validated
+against ``RunStats.to_json()`` / ``EngineStats.to_json()``.
+
+Pins two contracts: (a) typed stats export only JSON-native types and
+round-trip through ``json.dumps``/``json.loads`` exactly (the old
+string-keyed dict mixed a numpy array into the scalar channel and made
+``json.dumps`` raise), and (b) ``benchmarks.common.dump_json`` writes the
+``{"results": [...], "runs": [...]}`` schema CI archives, with every run
+entry shaped like a typed-stats export.
+"""
+import importlib
+import json
+import pathlib
+import sys
+
+import pytest
+
+from repro.serving import EngineStats, RunStats
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+common = importlib.import_module("benchmarks.common")
+
+SAMPLE = EngineStats(hits=7, accesses=12, host_assignments=5,
+                     fetched_experts=3, tokens=6, steps=3,
+                     prefetch_issued=4, prefetch_hits=2, prefetch_wasted=1,
+                     predicted=8, predicted_correct=6,
+                     prefill_hits=9, prefill_accesses=20, prefill_fetched=4,
+                     prefill_tokens=10, prefill_chunks=2,
+                     per_layer_hits=(3, 4), per_layer_accesses=(6, 6))
+
+ENGINE_KEYS = {
+    "hits", "accesses", "host_assignments", "fetched_experts", "tokens",
+    "steps", "prefetch_issued", "prefetch_hits", "prefetch_wasted",
+    "predicted", "predicted_correct", "prefill_hits", "prefill_accesses",
+    "prefill_fetched", "prefill_tokens", "prefill_chunks",
+    "hit_rate", "prefetch_hit_rate", "prefetch_waste_rate",
+    "prediction_accuracy", "prefill_hit_rate",
+    "per_layer_hits", "per_layer_accesses", "per_layer_hit_rates",
+}
+RUN_KEYS = {"requests_submitted", "requests_finished", "requests_active",
+            "requests_queued", "engine"}
+
+
+def test_engine_stats_json_round_trips():
+    d = SAMPLE.to_json()
+    assert set(d) == ENGINE_KEYS
+    assert json.loads(json.dumps(d)) == d        # exact round-trip
+    for k, v in d.items():
+        assert isinstance(v, (int, float, list)), (k, type(v))
+    assert d["hit_rate"] == pytest.approx(7 / 12)
+    assert d["per_layer_hit_rates"] == [0.5, 4 / 6]
+    assert d["prefill_hit_rate"] == pytest.approx(9 / 20)
+
+
+def test_run_stats_delegate_and_round_trip():
+    rs = RunStats(engine=SAMPLE, requests_submitted=3, requests_finished=2,
+                  requests_active=1, requests_queued=0)
+    # engine counters and rates reachable without the .engine hop
+    assert rs.hits == 7 and rs.hit_rate == pytest.approx(7 / 12)
+    d = rs.to_json()
+    assert set(d) == RUN_KEYS
+    assert set(d["engine"]) == ENGINE_KEYS
+    assert json.loads(json.dumps(d)) == d
+
+
+def test_zero_guarded_rates_on_empty_stats():
+    """A run that never decoded reports 0.0 rates, not ZeroDivisionError."""
+    s = EngineStats()
+    assert s.hit_rate == s.prefetch_hit_rate == 0.0
+    assert s.prediction_accuracy == s.prefetch_waste_rate == 0.0
+    assert s.prefill_hit_rate == 0.0
+    assert s.per_layer_hit_rates.shape == (0,)
+    json.dumps(RunStats().to_json())
+
+
+def test_dump_json_schema(tmp_path, monkeypatch):
+    """dump_json writes {"results", "runs"} with run entries validating
+    against the RunStats.to_json() schema."""
+    monkeypatch.setattr(common, "_RESULTS", [])
+    monkeypatch.setattr(common, "_RUNS", [])
+    common.emit("bench.micro", 12.5, "derived=1")
+    common.record_run("bench.run",
+                      RunStats(engine=SAMPLE, requests_submitted=2,
+                               requests_finished=2))
+    path = tmp_path / "BENCH_test.json"
+    common.dump_json(str(path))
+    doc = json.loads(path.read_text())
+
+    assert set(doc) == {"results", "runs"}
+    assert doc["results"] == [
+        {"name": "bench.micro", "us": 12.5, "derived": "derived=1"}]
+    (run,) = doc["runs"]
+    assert run["name"] == "bench.run"
+    assert set(run["stats"]) == RUN_KEYS
+    assert set(run["stats"]["engine"]) == ENGINE_KEYS
+    # EngineStats exports (decode_prefetch's generate() path) validate too
+    common.record_run("bench.engine_only", SAMPLE)
+    common.dump_json(str(path))
+    doc = json.loads(path.read_text())
+    assert set(doc["runs"][1]["stats"]) == ENGINE_KEYS

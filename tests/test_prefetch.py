@@ -273,14 +273,14 @@ def test_prefetch_changes_residency_never_logits(setup):
     out_off, s_off = _engine(cfg, params, False).generate(prompt, steps=16)
     out_on, s_on = _engine(cfg, params, True).generate(prompt, steps=16)
     np.testing.assert_array_equal(out_off, out_on)
-    assert s_on["hit_rate"] > s_off["hit_rate"]
-    assert s_on["prefetch_issued"] > 0
-    assert s_on["prefetch_hits"] > 0
-    assert s_off["prefetch_issued"] == s_off["prefetch_hits"] == 0
+    assert s_on.hit_rate > s_off.hit_rate
+    assert s_on.prefetch_issued > 0
+    assert s_on.prefetch_hits > 0
+    assert s_off.prefetch_issued == s_off.prefetch_hits == 0
     # accounting identity holds with prefetch enabled: every access is
     # either a demand hit or a host-computed assignment
-    assert s_on["accesses"] == s_on["hits"] + s_on["host_assignments"]
-    assert s_on["prefetch_hits"] <= s_on["hits"]
+    assert s_on.accesses == s_on.hits + s_on.host_assignments
+    assert s_on.prefetch_hits <= s_on.hits
 
 
 def test_per_layer_hit_rates_reported(setup):
@@ -289,11 +289,11 @@ def test_per_layer_hit_rates_reported(setup):
     prompt = np.asarray(jax.random.randint(
         jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size), np.int32)
     _, stats = eng.generate(prompt, steps=12)
-    rates = stats["per_layer_hit_rates"]
+    rates = stats.per_layer_hit_rates
     assert rates.shape == (cfg.num_layers,)
     assert ((rates >= 0) & (rates <= 1)).all()
-    assert stats["per_layer_hits"].sum() == stats["hits"]
-    assert stats["per_layer_accesses"].sum() == stats["accesses"]
+    assert sum(stats.per_layer_hits) == stats.hits
+    assert sum(stats.per_layer_accesses) == stats.accesses
 
 
 def test_scheduler_prefetch_counters_monotone(setup):
@@ -303,8 +303,8 @@ def test_scheduler_prefetch_counters_monotone(setup):
     eng = _engine(cfg, params, True, max_batch=2)
     sched = ContinuousBatchingScheduler(eng)
     s = sched.stats
-    assert s["hit_rate"] == 0.0 and s["prediction_accuracy"] == 0.0
-    assert s["prefetch_waste_rate"] == 0.0          # zero-division guarded
+    assert s.hit_rate == 0.0 and s.prediction_accuracy == 0.0
+    assert s.prefetch_waste_rate == 0.0             # zero-division guarded
     rng = np.random.default_rng(0)
     for _ in range(3):
         sched.submit(rng.integers(0, cfg.vocab_size, 6), max_new_tokens=5)
@@ -314,32 +314,36 @@ def test_scheduler_prefetch_counters_monotone(setup):
         cur = sched.stats
         for k in ("prefetch_issued", "prefetch_hits", "prefetch_wasted",
                   "predicted", "predicted_correct", "hits", "accesses"):
-            assert cur[k] >= prev[k], k
+            assert getattr(cur, k) >= getattr(prev, k), k
         prev = cur
-    assert prev["prefetch_issued"] > 0
-    assert prev["predicted"] > 0
-    assert 0.0 <= prev["prediction_accuracy"] <= 1.0
+    assert prev.prefetch_issued > 0
+    assert prev.predicted > 0
+    assert 0.0 <= prev.prediction_accuracy <= 1.0
 
 
-def test_sampling_honors_greedy_knob(setup):
-    """greedy=False samples with temperature through the scheduler's key
-    chain: reproducible per key, and actually different from greedy
+def test_sampling_honors_per_request_params(setup):
+    """Per-request SamplingParams drive the scheduler's sampler:
+    reproducible per request seed, and actually different from greedy
     argmax decoding at high temperature."""
+    from repro.serving import SamplingParams
     cfg, params = setup
 
     def run(key_seed, greedy, temperature=8.0):
-        eng = _engine(cfg, params, greedy=greedy, temperature=temperature)
+        eng = _engine(cfg, params)
         sched = ContinuousBatchingScheduler(
             eng, key=jax.random.PRNGKey(key_seed))
-        r = sched.submit(np.arange(6, dtype=np.int32), max_new_tokens=10)
+        sp = SamplingParams() if greedy else SamplingParams(
+            greedy=False, temperature=temperature, seed=key_seed)
+        r = sched.submit(np.arange(6, dtype=np.int32), max_new_tokens=10,
+                         sampling=sp)
         return sched.run()[r.rid]
 
     a = run(11, greedy=False)
     b = run(11, greedy=False)
-    np.testing.assert_array_equal(a, b)             # same key -> same draw
+    np.testing.assert_array_equal(a, b)             # same seed -> same draw
     g1 = run(11, greedy=True)
     g2 = run(99, greedy=True)
-    np.testing.assert_array_equal(g1, g2)           # greedy ignores the key
+    np.testing.assert_array_equal(g1, g2)           # greedy ignores the seed
     c = run(12, greedy=False)
     assert not (np.array_equal(a, g1) and np.array_equal(c, g1)), \
-        "temperature sampling must not collapse to argmax for every key"
+        "temperature sampling must not collapse to argmax for every seed"

@@ -53,9 +53,10 @@ def test_four_concurrent_requests_share_one_cache(setup):
         assert len(outs[r.rid]) == 6
     stats = sched.stats
     # every decode step served the full batch through the one cache
-    assert stats["accesses"] == stats["hits"] + stats["host_assignments"]
-    assert stats["tokens"] == 4 * 5               # 5 decode ticks per request
-    assert 0.0 <= stats["hit_rate"] <= 1.0
+    assert stats.accesses == stats.hits + stats.host_assignments
+    assert stats.tokens == 4 * 5                  # 5 decode ticks per request
+    assert 0.0 <= stats.hit_rate <= 1.0
+    assert stats.requests_submitted == stats.requests_finished == 4
 
 
 def test_slots_recycle_when_requests_outnumber_slots(setup):

@@ -48,9 +48,9 @@ def test_full_cache_reaches_full_hit_rate_after_warmup(setup):
     # E experts per layer, so nothing is ever evicted
     E, L = cfg.moe.num_experts, cfg.num_layers
     cold_bound = L * E
-    expected = (stats["accesses"] - cold_bound) / stats["accesses"]
-    assert stats["hit_rate"] >= expected - 1e-6
-    assert stats["fetched_experts"] <= cold_bound
+    expected = (stats.accesses - cold_bound) / stats.accesses
+    assert stats.hit_rate >= expected - 1e-6
+    assert stats.fetched_experts <= cold_bound
 
 
 def test_lru_beats_static_random_on_average(setup):
@@ -72,7 +72,7 @@ def test_lru_beats_static_random_on_average(setup):
             p = np.asarray(jax.random.randint(
                 jax.random.PRNGKey(seed), (1, 8), 0, cfg.vocab_size))
             eng.generate(p, steps=16)
-        return eng.stats["hits"] / max(eng.stats["accesses"], 1)
+        return eng.stats.hit_rate
 
     lru = aggregate("lru", 3)               # placement key is unused by LRU
     rnd = np.mean([aggregate("random", k) for k in (3, 5)])
@@ -83,5 +83,5 @@ def test_stats_accounting_consistent(setup):
     cfg, params, prompt = setup
     eng = _engine(cfg, params)
     _, stats = eng.generate(prompt, steps=12)
-    assert stats["accesses"] == stats["hits"] + stats["host_assignments"]
-    assert stats["fetched_experts"] <= stats["host_assignments"]
+    assert stats.accesses == stats.hits + stats.host_assignments
+    assert stats.fetched_experts <= stats.host_assignments
