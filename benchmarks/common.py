@@ -17,7 +17,9 @@ _RUNS: List[dict] = []
 def run_live_scheduler(policy: str = "lru", slots: int = 4,
                        requests: int = 6, new_tokens: int = 12,
                        arch: str = "mixtral-8x7b", seed: int = 0,
-                       prefetch: bool = False, prefill_chunk: int = 8):
+                       prefetch: bool = False, prefetch_min_prob: float = 0.0,
+                       prefill_chunk: int = 8, host_compute: bool = False,
+                       host_threads: int = 8, host_backend: str = "jax"):
     """Serve `requests` random prompts through the continuous-batching
     scheduler on a reduced live model (one shared expert cache, grouped
     gmm execution, per-slot KV positions, cache-warming chunked prefill,
@@ -31,7 +33,11 @@ def run_live_scheduler(policy: str = "lru", slots: int = 4,
     _, sched = build(cfg, cache=dict(policy=policy),
                      serving=dict(max_batch=slots, capacity=64,
                                   prefetch=prefetch,
-                                  prefill_chunk=prefill_chunk),
+                                  prefetch_min_prob=prefetch_min_prob,
+                                  prefill_chunk=prefill_chunk,
+                                  host_compute=host_compute,
+                                  host_threads=host_threads,
+                                  host_backend=host_backend),
                      seed=seed)
     rng = np.random.default_rng(seed)
     for _ in range(requests):

@@ -49,15 +49,19 @@ def live_trace(steps: int = 200):
     return capture_trace(cfg, params, toks), cfg.moe.num_experts
 
 
-def live_serving(policy: str, prefetch: bool = False):
+def live_serving(policy: str, prefetch: bool = False,
+                 prefetch_min_prob: float = 0.0):
     """Measured stats of the real serving path: the batched engine +
     continuous-batching scheduler, 4 concurrent requests sharing one
     expert cache (grouped gmm execution, per-slot KV positions, optional
-    cross-layer speculative prefetch). Returns a RunStats."""
+    cross-layer speculative prefetch, optionally confidence-gated).
+    Returns (outputs {rid: tokens}, RunStats)."""
     from .common import record_run, run_live_scheduler
-    _, stats, _ = run_live_scheduler(policy=policy, prefetch=prefetch)
-    record_run(f"fig6.live.{policy}{'.pf' if prefetch else ''}", stats)
-    return stats
+    outs, stats, _ = run_live_scheduler(policy=policy, prefetch=prefetch,
+                                        prefetch_min_prob=prefetch_min_prob)
+    gate = f".gate{prefetch_min_prob}" if prefetch_min_prob else ""
+    record_run(f"fig6.live.{policy}{'.pf' if prefetch else ''}{gate}", stats)
+    return outs, stats
 
 
 def prefetch_uplift_sim() -> None:
@@ -124,8 +128,9 @@ def main() -> None:
             trace, CacheConfig(trace.shape[1], 2, "random"), E)
         emit("live.mixtral_reduced.lru_any", lru_any * 1e6,
              f"random={rnd_any:.3f} (untrained router: near-chance reuse)")
-        served_lru = live_serving("lru").hit_rate
-        served_rnd = live_serving("random").hit_rate
+        _, s_lru = live_serving("lru")
+        served_lru = s_lru.hit_rate
+        served_rnd = live_serving("random")[1].hit_rate
         emit("live.mixtral_reduced.served_lru_hit_rate", served_lru * 1e6,
              f"random={served_rnd:.3f} (batched scheduler, 4 slots sharing "
              f"one cache; per-assignment hit rate of the serving engine)")
@@ -133,7 +138,7 @@ def main() -> None:
         # the demand hit rate must strictly improve (the pre-gating
         # predictor runs layer l+1's router one layer early; its accuracy
         # is near-perfect on the slowly-moving residual stream)
-        pf = live_serving("lru", prefetch=True)
+        outs_pf, pf = live_serving("lru", prefetch=True)
         emit("live.mixtral_reduced.served_lru_prefetch_hit_rate",
              pf.hit_rate * 1e6,
              f"baseline={served_lru:.3f} "
@@ -144,6 +149,39 @@ def main() -> None:
         assert pf.hit_rate > served_lru, \
             ("prefetch must beat the no-prefetch baseline",
              pf.hit_rate, served_lru)
+        # confidence-gated prefetch: thresholding reservations on router
+        # probability cuts the speculative transfer volume — and with it
+        # prefetch_wasted, the only source of cache pollution — while the
+        # generated tokens stay IDENTICAL (gating changes residency,
+        # never logits). The untrained reduced router's one-layer-ahead
+        # predictions are near-perfect (pred_acc above), so the ungated
+        # baseline often has zero waste to begin with; the waste assert
+        # is strict exactly when there is waste to cut.
+        GATE = 0.35                      # ~p75 pick prob, untrained
+        outs_g, pfg = live_serving("lru", prefetch=True,
+                                   prefetch_min_prob=GATE)
+        emit("live.mixtral_reduced.served_lru_prefetch_gated_wasted",
+             pfg.prefetch_wasted * 1e6,
+             f"ungated_wasted={pf.prefetch_wasted} gate={GATE} "
+             f"issued={pfg.prefetch_issued} vs {pf.prefetch_issued} "
+             f"predicted={pfg.predicted} vs {pf.predicted} "
+             f"hit_rate={pfg.hit_rate:.3f}")
+        assert sorted(outs_g) == sorted(outs_pf)
+        for rid in outs_pf:
+            np.testing.assert_array_equal(outs_g[rid], outs_pf[rid])
+        assert pfg.predicted < pf.predicted, \
+            ("the gate must suppress low-confidence predictions",
+             pfg.predicted, pf.predicted)
+        assert pfg.prefetch_issued < pf.prefetch_issued, \
+            ("the gate must cut the speculative transfer volume",
+             pfg.prefetch_issued, pf.prefetch_issued)
+        assert pfg.prefetch_wasted <= pf.prefetch_wasted, \
+            ("gating must never add waste",
+             pfg.prefetch_wasted, pf.prefetch_wasted)
+        if pf.prefetch_wasted:
+            assert pfg.prefetch_wasted < pf.prefetch_wasted, \
+                ("confidence gating must cut wasted prefetches",
+                 pfg.prefetch_wasted, pf.prefetch_wasted)
 
 
 if __name__ == "__main__":

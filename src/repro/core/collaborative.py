@@ -255,6 +255,21 @@ def _gather_group_weights(tiers: ExpertTiers, layer, pr: ProbeResult,
     return (w1, w3, w2), (host_w1, host_w3, host_w2)
 
 
+def _stage_dispatch(x: jax.Array, K: int, pr: ProbeResult
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Assemble the [G, A, D] per-unique-expert dispatch buffer for one
+    layer's assignments. Returns (tok [A] — token row per assignment,
+    xbuf). ONE copy of this math feeds execute(), the offloaded variant
+    and the hostexec dispatcher — the bit-exactness contracts between
+    those paths ride on it."""
+    T = x.shape[0]
+    tok = jnp.repeat(jnp.arange(T), K)
+    xa = x[tok]                                            # [A, D]
+    A, G = pr.flat_e.shape[0], pr.rep_e.shape[0]
+    xbuf = jnp.zeros((G, A, x.shape[-1]), x.dtype).at[pr.gid, pr.pos].set(xa)
+    return tok, xbuf
+
+
 def execute(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
             top_w: jax.Array, pr: ProbeResult, ccfg: CacheConfig
             ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
@@ -264,11 +279,8 @@ def execute(tiers: ExpertTiers, layer: jax.Array, x: jax.Array,
     reused by commit()'s post-fetch so each expert's host read happens
     once per step)."""
     T, K = top_w.shape
-    tok = jnp.repeat(jnp.arange(T), K)
-    xa = x[tok]                                            # [A, D]
+    tok, xbuf = _stage_dispatch(x, K, pr)
     w, host_w = _gather_group_weights(tiers, layer, pr, ccfg)
-    A, G = pr.flat_e.shape[0], pr.rep_e.shape[0]
-    xbuf = jnp.zeros((G, A, x.shape[-1]), x.dtype).at[pr.gid, pr.pos].set(xa)
     ybuf = moe_ffn(xbuf, *w)                               # [G, A, D]
     y = _combine(ybuf, pr.gid, pr.pos, tok, top_w, pr.valid, T, x.dtype)
     return y, host_w
@@ -432,15 +444,11 @@ def collaborative_moe_offloaded(tiers: ExpertTiers, layer: jax.Array,
     gid, pos, rep_e = pr.gid, pr.pos, pr.rep_e
     resident, way = pr.resident, pr.res_way
 
-    tok = jnp.repeat(jnp.arange(T), K)
-    xa = x[tok]
+    tok, xbuf = _stage_dispatch(x, K, pr)
     slots = jnp.where(resident,
                       cache_lib.slot_id(layer, jnp.maximum(way, 0),
                                         ccfg.num_ways), 0)
     e_ix = jnp.maximum(rep_e, 0)
-    A = pr.flat_e.shape[0]
-    xbuf = jnp.zeros((rep_e.shape[0], A, x.shape[-1]), x.dtype) \
-        .at[gid, pos].set(xa)
 
     # device path (resident groups): reads only the HBM slot buffers
     ybuf_dev = moe_ffn(xbuf, tiers.slot_w1[slots], tiers.slot_w3[slots],

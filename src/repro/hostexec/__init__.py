@@ -1,0 +1,26 @@
+"""Live host-execution subsystem: compute cache-miss experts on the CPU.
+
+The live-path twin of the calibrated simulator's CPU lane
+(``core/costmodel.cpu_expert_ms`` / ``core/simulator``): on a cache miss
+the engine can ship the *activations* to a multithreaded host executor
+instead of paying the expert weight transfer. Three pieces:
+
+  * :mod:`executor`  — thread-pool SwiGLU FFN over the numpy expert
+    table, bridged into the jitted step via ``jax.pure_callback``.
+  * :mod:`policy`    — the cost-model split (CPU compute vs
+    fetch+cache-insert) from :class:`repro.core.costmodel
+    .PaperModelTimings`, compiled to a per-group-size decision table.
+  * :mod:`dispatch`  — the dispatcher stage slotted into the
+    probe/execute/commit pipeline: partitions each step's unique-expert
+    groups into GPU-hit / CPU-miss / fetch sets and merges the outputs.
+
+Enabled via ``EngineConfig(host_compute=True, host_threads=...,
+host_backend="jax"|"callback")``; counted in the
+``EngineStats.cpu_expert_calls`` / ``cpu_tokens`` channel.
+"""
+from .dispatch import dispatch_execute, dispatch_plan
+from .executor import HostExpertExecutor, host_expert_ffn
+from .policy import HostDispatchPolicy, timings_for
+
+__all__ = ["dispatch_execute", "dispatch_plan", "HostExpertExecutor",
+           "host_expert_ffn", "HostDispatchPolicy", "timings_for"]

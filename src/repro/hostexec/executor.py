@@ -1,0 +1,92 @@
+"""Multithreaded host-side expert FFN executor.
+
+The live twin of the cost model's CPU lane: the full expert table lives as
+numpy arrays in host memory and cache-miss experts' SwiGLU FFNs run here,
+on a thread pool, while the accelerator keeps the hit experts. Only the
+``[G, A, D]`` activation dispatch buffer crosses the boundary (the paper's
+0.11 ms round-trip) — weights never move.
+
+The executor is bridged into the jitted decode step with
+``jax.pure_callback`` (see repro.hostexec.dispatch): the callback receives
+the step's unique-expert groups plus a run mask and returns the host
+outputs, which the dispatcher scatter-selects against the device outputs.
+Group tasks are independent row-blocks of the output buffer, so the pool
+workers write disjoint slices; numpy matmul releases the GIL, giving real
+CPU parallelism — the live analogue of the paper's OMP_NUM_THREADS knob
+that :func:`repro.core.costmodel.cpu_expert_ms` calibrates.
+
+Math runs in float32 (numpy has no native bfloat16 arithmetic) and casts
+back to the activation dtype, so the callback lane is numerically close
+to — but not bitwise-identical with — the device lane. Callers that need
+bit-exactness use the in-graph fallback (``host_backend="jax"``).
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["HostExpertExecutor", "host_expert_ffn"]
+
+
+def host_expert_ffn(x: np.ndarray, w1: np.ndarray, w3: np.ndarray,
+                    w2: np.ndarray) -> np.ndarray:
+    """SwiGLU expert FFN for one group: x [C, D] -> [C, D], float32."""
+    h1 = x @ w1
+    h = (h1 / (1.0 + np.exp(-h1))) * (x @ w3)     # silu(x@w1) * (x@w3)
+    return h @ w2
+
+
+class HostExpertExecutor:
+    """Thread-pool expert FFN over the numpy host expert table.
+
+    w1/w3: [L, E, D, F]; w2: [L, E, F, D] — converted to float32 once at
+    construction (the compute dtype of the CPU lane). ``threads`` sizes
+    the pool; 1 runs inline (no pool, no handoff overhead).
+    """
+
+    def __init__(self, w1, w3, w2, threads: int = 8):
+        self.w1 = np.asarray(w1, np.float32)
+        self.w3 = np.asarray(w3, np.float32)
+        self.w2 = np.asarray(w2, np.float32)
+        self.threads = max(1, int(threads))
+        self._pool: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(max_workers=self.threads,
+                               thread_name_prefix="hostexec")
+            if self.threads > 1 else None)
+        # host-side telemetry: a floor, not a ledger — pure_callback may
+        # legally re-invoke, so the exact count lives in the traced
+        # EngineStats channel; these confirm the pool really ran
+        self.calls = 0
+        self.groups = 0
+
+    def compute_groups(self, layer, rep_e, run, xbuf) -> np.ndarray:
+        """One step's host lane: compute the masked groups' FFNs.
+
+        layer — scalar int; rep_e [G] unique expert per group (-1 pad);
+        run [G] bool — groups dispatched to the CPU; xbuf [G, A, D]
+        activation dispatch buffer. Returns [G, A, D] in xbuf's dtype,
+        zeros for groups the mask skips (the dispatcher never reads
+        those rows)."""
+        layer = int(layer)
+        rep_e = np.asarray(rep_e)
+        todo = np.nonzero(np.asarray(run))[0]
+        out = np.zeros(xbuf.shape, np.float32)
+        if todo.size:
+            x32 = np.asarray(xbuf, np.float32)
+
+            def one(g: int) -> None:
+                e = int(rep_e[g])
+                out[g] = host_expert_ffn(x32[g], self.w1[layer, e],
+                                         self.w3[layer, e],
+                                         self.w2[layer, e])
+
+            if self._pool is not None and todo.size > 1:
+                list(self._pool.map(one, todo))
+            else:
+                for g in todo:
+                    one(g)
+        self.calls += 1
+        self.groups += int(todo.size)
+        return out.astype(xbuf.dtype)

@@ -3,7 +3,9 @@ continuous batching, or the plain generic path for non-MoE archs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --tokens 64 [--ways 4 --indexes 8 --policy lru] \
-        [--concurrency 4 --requests 8] [--temperature 0.8 --top-p 0.95]
+        [--concurrency 4 --requests 8] [--temperature 0.8 --top-p 0.95] \
+        [--prefetch --prefetch-min-prob 0.2] \
+        [--host-compute --host-threads 8 --host-backend callback]
 
 Reduced configs by default (this is a CPU container); the full configs are
 exercised via the dry-run. Prints tokens/s and the paper's cache counters.
@@ -46,6 +48,23 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="cache-warming chunked-prefill chunk "
                          "(0 = bypass prefill, cold cache)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="cross-layer speculative expert prefetch")
+    ap.add_argument("--prefetch-min-prob", type=float, default=0.0,
+                    help="confidence gate: only reserve predicted experts "
+                         "whose router probability clears this threshold "
+                         "(implies --prefetch when > 0)")
+    ap.add_argument("--host-compute", action="store_true",
+                    help="compute cache-miss experts on the CPU when the "
+                         "cost model favors it over the weight fetch "
+                         "(repro.hostexec)")
+    ap.add_argument("--host-threads", type=int, default=8,
+                    help="host executor threads (also the cost model's "
+                         "OMP thread count)")
+    ap.add_argument("--host-backend", default="callback",
+                    choices=["callback", "jax"],
+                    help="host lane: real numpy thread pool (callback) or "
+                         "the bit-exact in-graph fallback (jax)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if not 0.0 < args.top_p <= 1.0:
@@ -70,17 +89,27 @@ def main() -> None:
     if cfg.moe is not None and cfg.moe_every == 1 and not cfg.is_encdec:
         n = args.indexes if args.indexes is not None else cfg.num_layers // 2
         R = args.requests or args.concurrency * 2
+        prefetch = args.prefetch or args.prefetch_min_prob > 0
         print(f"[serve] collaborative engine: {cfg.name} cache=(N={n}, "
               f"M={args.ways}, {args.policy}) slots={args.concurrency} "
               f"requests={R} "
-              f"sampling={f'T={temp}' if sample_on else 'greedy'}")
+              f"sampling={f'T={temp}' if sample_on else 'greedy'}"
+              + (f" prefetch(min_prob={args.prefetch_min_prob})"
+                 if prefetch else "")
+              + (f" host_compute({args.host_backend}, "
+                 f"{args.host_threads}t)" if args.host_compute else ""))
         _, sched = build(
             cfg,
             cache=dict(num_indexes=n, num_ways=args.ways,
                        policy=args.policy),
             serving=dict(max_batch=args.concurrency,
                          capacity=args.prompt + args.tokens + 1,
-                         prefill_chunk=args.prefill_chunk),
+                         prefill_chunk=args.prefill_chunk,
+                         prefetch=prefetch,
+                         prefetch_min_prob=args.prefetch_min_prob,
+                         host_compute=args.host_compute,
+                         host_threads=args.host_threads,
+                         host_backend=args.host_backend),
             seed=args.seed, params=params)
         rng = np.random.default_rng(args.seed)
         for r in range(R):
@@ -108,6 +137,16 @@ def main() -> None:
                   f"{stats.prefill_chunks} chunks, hit rate "
                   f"{stats.prefill_hit_rate:.3f} "
                   f"({stats.prefill_fetched} fetches)")
+        if prefetch:
+            print(f"  prefetch: issued={stats.prefetch_issued} "
+                  f"spec_hits={stats.prefetch_hits} "
+                  f"wasted={stats.prefetch_wasted} "
+                  f"pred_acc={stats.prediction_accuracy:.3f}")
+        if args.host_compute:
+            print(f"  host execution: {stats.cpu_expert_calls} expert "
+                  f"groups / {stats.cpu_tokens} assignments on CPU "
+                  f"(offload rate {stats.cpu_offload_rate:.3f}, "
+                  f"backend={args.host_backend})")
     else:
         print(f"[serve] generic path: {cfg.name}")
         batch = {"tokens": jnp.asarray(prompt)}

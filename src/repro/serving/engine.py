@@ -12,8 +12,17 @@ With ``EngineConfig.prefetch`` the decode scan becomes a *software
 pipeline* with cross-layer speculative prefetch (DAOP / Pre-gated style):
 after layer *l*'s FFN, layer *l+1*'s router runs on layer *l*'s output
 hidden state and the predicted top-k experts are reserved in the cache and
-streamed in while layer *l+1*'s attention computes. Prefetch changes
-residency and counters, never numerics.
+streamed in while layer *l+1*'s attention computes
+(``prefetch_min_prob`` confidence-gates the reservations on router
+probability). Prefetch changes residency and counters, never numerics.
+
+With ``EngineConfig.host_compute`` the execute stage becomes the hybrid
+CPU/GPU dispatcher of :mod:`repro.hostexec`: cache-miss expert groups the
+calibrated cost model favors ship their activations to a multithreaded
+host executor instead of paying the weight fetch, counted in the
+``cpu_expert_calls`` / ``cpu_tokens`` stats channel. Cache bookkeeping is
+identical on every lane; the in-graph ``host_backend="jax"`` keeps tokens
+bit-identical to the all-GPU path.
 
 Prefill is *request-shaped*: :meth:`prefill_chunked` additionally routes
 the prompt through the staged probe → execute → commit pipeline in token
@@ -73,12 +82,29 @@ class EngineConfig:
     max_batch: int = 1            # concurrent request slots (T)
     capacity: int = 512           # KV capacity
     prefetch: bool = False        # cross-layer speculative expert prefetch
+    prefetch_min_prob: float = 0.0  # confidence gate on reservations
     prefill_chunk: int = 8        # cache-warming prefill chunk (0 = bypass)
+    # live host execution (repro.hostexec): compute cache-miss experts on
+    # the CPU when the cost model favors it over the weight fetch
+    host_compute: bool = False
+    host_threads: int = 8         # executor pool / cost-model thread count
+    host_backend: str = "jax"     # "jax" (in-graph, bit-exact) | "callback"
 
     def __post_init__(self):
         if self.prefill_chunk < 0:
             raise ValueError(
                 f"prefill_chunk must be >= 0, got {self.prefill_chunk}")
+        if not 0.0 <= self.prefetch_min_prob < 1.0:
+            raise ValueError(
+                f"prefetch_min_prob must be in [0, 1), got "
+                f"{self.prefetch_min_prob}")
+        if self.host_threads < 1:
+            raise ValueError(
+                f"host_threads must be >= 1, got {self.host_threads}")
+        if self.host_backend not in ("jax", "callback"):
+            raise ValueError(
+                f"host_backend must be 'jax' or 'callback', got "
+                f"{self.host_backend!r}")
 
 
 def _one_prompt(prompt) -> np.ndarray:
@@ -123,6 +149,29 @@ class CollaborativeEngine:
             num_experts=cfg.moe.num_experts, key=key)
         self._host = (tiers.host_w1, tiers.host_w3, tiers.host_w2)
         self.fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
+
+        # live host execution: cost-model split table + (callback backend)
+        # the multithreaded numpy executor over the host expert table
+        self.host_executor = None
+        self.dispatch_policy = None
+        self._dispatch_execute = None
+        self._cpu_table = None
+        if ecfg.host_compute:
+            from repro import hostexec
+            self._dispatch_execute = hostexec.dispatch_execute
+            self.dispatch_policy = hostexec.HostDispatchPolicy(
+                hostexec.timings_for(cfg.name), ecfg.host_threads)
+            table = self.dispatch_policy.decision_table(
+                ecfg.max_batch * cfg.moe.top_k)
+            self._cpu_table = jnp.asarray(table)
+            if ecfg.host_backend == "callback" and table.any():
+                # an all-False table can never dispatch: skip the executor
+                # so the step pays no per-layer host round-trip for nothing
+                # (the in-graph path is the exact no-op)
+                self.host_executor = hostexec.HostExpertExecutor(
+                    moe_p["w1"], moe_p["w3"], moe_p["w2"],
+                    threads=ecfg.host_threads)
+
         self._decode = jax.jit(self._decode_step, donate_argnums=(1, 2))
         self._write = jax.jit(self._write_slot, donate_argnums=(0,))
         self._prefill = jax.jit(self._prefill_trace,
@@ -135,7 +184,8 @@ class CollaborativeEngine:
             "prefetch_issued": 0, "prefetch_hits": 0, "prefetch_wasted": 0,
             "predicted": 0, "predicted_correct": 0,
             "prefill_hits": 0, "prefill_accesses": 0, "prefill_fetched": 0,
-            "prefill_tokens": 0, "prefill_chunks": 0}
+            "prefill_tokens": 0, "prefill_chunks": 0,
+            "cpu_expert_calls": 0, "cpu_tokens": 0, "miss_expert_groups": 0}
         self._per_layer_hits = np.zeros(L, np.int64)
         self._per_layer_accesses = np.zeros(L, np.int64)
 
@@ -206,10 +256,21 @@ class CollaborativeEngine:
             _, top_i, top_w = route(lp["moe"]["router"],
                                     h2[:, 0].astype(jnp.float32), K)
 
-            # staged collaborative MoE: probe -> execute -> commit
+            # staged collaborative MoE: probe -> dispatch/execute -> commit
             pr = collab.probe(tiers, layer, top_i, ccfg, active=active)
-            y, host_w = collab.execute(tiers, layer, h2[:, 0], top_w, pr,
-                                       ccfg)
+            if self.ecfg.host_compute:
+                # hybrid dispatcher (repro.hostexec): GPU-hit groups run
+                # the grouped kernels, CPU-miss groups the host executor,
+                # cost-model-chosen; cache warming identical either way
+                y, host_w, dstats = self._dispatch_execute(
+                    tiers, layer, h2[:, 0], top_w, pr, ccfg,
+                    self._cpu_table, self.host_executor)
+            else:
+                y, host_w = collab.execute(tiers, layer, h2[:, 0], top_w,
+                                           pr, ccfg)
+                dstats = {"cpu_expert_calls": jnp.zeros((), jnp.int32),
+                          "cpu_tokens": jnp.zeros((), jnp.int32),
+                          "miss_expert_groups": jnp.zeros((), jnp.int32)}
             tiers, fetch = collab.commit(tiers, layer, pr, host_w, ccfg)
             x = x + y[:, None].astype(x.dtype)
 
@@ -231,10 +292,17 @@ class CollaborativeEngine:
                 # later) — the DAOP-style one-layer lookahead; the
                 # reservation's transfer hides under layer l+1's attention
                 h_pred = rmsnorm(xs["ln2_next"], x, cfg.norm_eps)
-                _, pred_i, _ = route(xs["router_next"],
-                                     h_pred[:, 0].astype(jnp.float32), K)
-                pred_i = jnp.where(xs["has_next"] & active[:, None],
-                                   pred_i, -1).astype(jnp.int32)
+                pred_p, pred_i, _ = route(xs["router_next"],
+                                          h_pred[:, 0].astype(jnp.float32), K)
+                gate = xs["has_next"] & active[:, None]
+                if self.ecfg.prefetch_min_prob > 0.0:
+                    # confidence gate: only reserve picks whose router
+                    # probability clears the threshold — mispredictions
+                    # are the only source of cache pollution, and low-
+                    # confidence picks are where they live
+                    p_pick = jnp.take_along_axis(pred_p, pred_i, axis=1)
+                    gate = gate & (p_pick >= self.ecfg.prefetch_min_prob)
+                pred_i = jnp.where(gate, pred_i, -1).astype(jnp.int32)
                 tiers, rep_p, issued, n_issued = collab.prefetch(
                     tiers, layer + 1, pred_i, ccfg, active=active)
             else:
@@ -248,6 +316,7 @@ class CollaborativeEngine:
 
             stats = {
                 **collab._stats(pr, fetch),
+                **dstats,
                 "prefetch_issued": n_issued,
                 "prefetch_wasted": wasted,
                 "predicted": predicted,
@@ -513,7 +582,8 @@ class CollaborativeEngine:
         c = self._counters
         for k in ("hits", "accesses", "fetched_experts", "prefetch_issued",
                   "prefetch_hits", "prefetch_wasted", "predicted",
-                  "predicted_correct"):
+                  "predicted_correct", "cpu_expert_calls", "cpu_tokens",
+                  "miss_expert_groups"):
             c[k] += int(np.asarray(stats[k]).sum())
         c["host_assignments"] += int(
             np.asarray(stats["host_flops_assignments"]).sum())

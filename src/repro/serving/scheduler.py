@@ -21,6 +21,10 @@ shared expert cache:
                   immediately and the next queued request is admitted on
                   the same tick (continuous batching: the batch never
                   drains to refill).
+  * cancellation — :meth:`cancel` retires a queued or in-flight request
+                  mid-decode: the slot frees for the next admission, a
+                  terminal ``(rid, -1, done=True)`` event is emitted,
+                  and no further tokens are decoded for it.
 
 Callers observe tokens as they decode: :meth:`stream` yields
 ``(rid, token, done)`` events in emission order, and each request may
@@ -60,9 +64,12 @@ class Request:
     stop_sequences: Tuple[Tuple[int, ...], ...] = ()
     on_token: Optional[Callable[[int, bool], None]] = None
     generated: List[int] = field(default_factory=list)
+    cancelled: bool = False
 
     @property
     def done(self) -> bool:
+        if self.cancelled:
+            return True
         if len(self.generated) >= self.max_new_tokens:
             return True
         if not self.generated:
@@ -103,6 +110,8 @@ class ContinuousBatchingScheduler:
         self._bases = np.zeros((self.num_slots, 2), np.uint32)
         self.finished: List[Request] = []
         self._submitted = 0
+        self._cancel_events: List[StreamEvent] = []
+        self._cancel_done: List[Request] = []
 
     def _split(self):
         self._key, sub = jax.random.split(self._key)
@@ -141,6 +150,47 @@ class ContinuousBatchingScheduler:
         self.queue.append(req)
         return req
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or in-flight request mid-decode.
+
+        An in-flight request's slot frees IMMEDIATELY — the next tick's
+        admission can hand it to a waiting request without the cancelled
+        one decoding another token. The request retires with a terminal
+        ``(rid, -1, done=True)`` stream event, delivered ahead of the
+        next tick's events (-1, never a real token: every generated
+        token was already streamed exactly once); its ``on_token``
+        callback fires once more with ``(-1, True)``. Returns True if
+        the request was found live (queued or in a slot), False if
+        unknown or already finished — cancelling is idempotent and never
+        raises."""
+        req = None
+        for r in self.queue:
+            if r.rid == rid:
+                req = r
+                self.queue.remove(r)
+                break
+        if req is None:
+            for t, r in enumerate(self.slots):
+                if r is not None and r.rid == rid:
+                    if r.done:
+                        # finished on the last tick, awaiting retirement:
+                        # its terminal done=True event already streamed —
+                        # emitting a second one would break the
+                        # one-terminal-event contract
+                        return False
+                    req = r
+                    self.slots[t] = None          # slot free for admission
+                    break
+        if req is None:
+            return False
+        req.cancelled = True                      # done; rejects new tokens
+        self.finished.append(req)
+        self._cancel_done.append(req)             # next _tick reports it
+        self._cancel_events.append((req.rid, -1, True))
+        if req.on_token is not None:
+            req.on_token(-1, True)
+        return True
+
     # -- slot bookkeeping --------------------------------------------------
     @property
     def active_mask(self) -> np.ndarray:
@@ -177,16 +227,29 @@ class ContinuousBatchingScheduler:
                     req.prompt, sampling=req.sampling,
                     key=jax.random.fold_in(base, 0))
                 self.state = self.engine.write_slot(self.state, one_state, t)
-                self._append(req, first_tok, events)
+                # claim the slot BEFORE the first-token callback fires so
+                # an on_token handler that calls cancel() finds the
+                # request live (cancel then frees the slot right here)
                 self._next[t, 0] = first_tok
                 self.slots[t] = req
+                self._append(req, first_tok, events)
 
     # -- the decode loop ---------------------------------------------------
     def _tick(self) -> Tuple[List[Request], List[StreamEvent]]:
         """One scheduler tick: retire -> admit -> one padded decode step.
         Returns (requests finished this tick, stream events in order)."""
         events: List[StreamEvent] = []
-        finished = self._retire()
+        finished: List[Request] = []
+        if self._cancel_events:
+            # terminal events of cancellations since the last tick drain
+            # first — a cancelled request's done=True precedes everything
+            # the tick decodes — and the cancelled requests count toward
+            # this tick's finished return like any other retirement
+            events.extend(self._cancel_events)
+            self._cancel_events.clear()
+            finished.extend(self._cancel_done)
+            self._cancel_done.clear()
+        finished += self._retire()
         self._admit(events)
         finished += self._retire()       # an admitted req may already be done
         active = self.active_mask
@@ -221,7 +284,8 @@ class ContinuousBatchingScheduler:
         order and its final event (and only that one) carries
         ``done=True``. Requests interleave exactly as the continuous batch
         decodes them."""
-        while self.queue or any(s is not None for s in self.slots):
+        while self.queue or self._cancel_events \
+                or any(s is not None for s in self.slots):
             _, events = self._tick()
             for ev in events:
                 yield ev

@@ -29,7 +29,9 @@ class EngineStats:
     ``tokens`` (active decoded tokens) and ``steps`` (padded batch steps).
     Prefetch channel: cross-layer speculation counters. Prefill channel:
     the cache-warming chunked-prefill accesses — kept separate so decode
-    demand hit rates stay comparable with and without warming.
+    demand hit rates stay comparable with and without warming. Host
+    channel: miss-expert groups the hybrid dispatcher ran on the CPU
+    (``cpu_expert_calls``) and their token assignments (``cpu_tokens``).
     """
     # decode demand channel
     hits: int = 0
@@ -50,6 +52,13 @@ class EngineStats:
     prefill_fetched: int = 0
     prefill_tokens: int = 0
     prefill_chunks: int = 0
+    # live host-execution channel (repro.hostexec): cache-miss expert
+    # groups the cost-model dispatcher ran on the CPU, the token
+    # assignments they carried, and the total executed non-resident
+    # groups (CPU + fetch lanes — only counted while the dispatcher runs)
+    cpu_expert_calls: int = 0
+    cpu_tokens: int = 0
+    miss_expert_groups: int = 0
     # per-MoE-layer demand series (tuples: immutable + JSON-native)
     per_layer_hits: Tuple[int, ...] = ()
     per_layer_accesses: Tuple[int, ...] = ()
@@ -77,6 +86,11 @@ class EngineStats:
         return self.prefill_hits / max(self.prefill_accesses, 1)
 
     @property
+    def cpu_offload_rate(self) -> float:
+        """Share of miss assignments the dispatcher computed on the CPU."""
+        return self.cpu_tokens / max(self.host_assignments, 1)
+
+    @property
     def per_layer_hit_rates(self) -> np.ndarray:
         """Demand hit rate per MoE layer ([num_layers] float; layers with
         zero accesses report 0.0). Array-valued: exposed as a property so
@@ -95,6 +109,7 @@ class EngineStats:
             prefetch_waste_rate=float(self.prefetch_waste_rate),
             prediction_accuracy=float(self.prediction_accuracy),
             prefill_hit_rate=float(self.prefill_hit_rate),
+            cpu_offload_rate=float(self.cpu_offload_rate),
             per_layer_hits=[int(x) for x in self.per_layer_hits],
             per_layer_accesses=[int(x) for x in self.per_layer_accesses],
             per_layer_hit_rates=[float(x) for x in self.per_layer_hit_rates],

@@ -26,6 +26,7 @@ SAMPLE = EngineStats(hits=7, accesses=12, host_assignments=5,
                      predicted=8, predicted_correct=6,
                      prefill_hits=9, prefill_accesses=20, prefill_fetched=4,
                      prefill_tokens=10, prefill_chunks=2,
+                     cpu_expert_calls=2, cpu_tokens=3, miss_expert_groups=3,
                      per_layer_hits=(3, 4), per_layer_accesses=(6, 6))
 
 ENGINE_KEYS = {
@@ -33,8 +34,9 @@ ENGINE_KEYS = {
     "steps", "prefetch_issued", "prefetch_hits", "prefetch_wasted",
     "predicted", "predicted_correct", "prefill_hits", "prefill_accesses",
     "prefill_fetched", "prefill_tokens", "prefill_chunks",
+    "cpu_expert_calls", "cpu_tokens", "miss_expert_groups",
     "hit_rate", "prefetch_hit_rate", "prefetch_waste_rate",
-    "prediction_accuracy", "prefill_hit_rate",
+    "prediction_accuracy", "prefill_hit_rate", "cpu_offload_rate",
     "per_layer_hits", "per_layer_accesses", "per_layer_hit_rates",
 }
 RUN_KEYS = {"requests_submitted", "requests_finished", "requests_active",
@@ -50,6 +52,7 @@ def test_engine_stats_json_round_trips():
     assert d["hit_rate"] == pytest.approx(7 / 12)
     assert d["per_layer_hit_rates"] == [0.5, 4 / 6]
     assert d["prefill_hit_rate"] == pytest.approx(9 / 20)
+    assert d["cpu_offload_rate"] == pytest.approx(3 / 5)
 
 
 def test_run_stats_delegate_and_round_trip():
@@ -69,6 +72,7 @@ def test_zero_guarded_rates_on_empty_stats():
     assert s.hit_rate == s.prefetch_hit_rate == 0.0
     assert s.prediction_accuracy == s.prefetch_waste_rate == 0.0
     assert s.prefill_hit_rate == 0.0
+    assert s.cpu_offload_rate == 0.0
     assert s.per_layer_hit_rates.shape == (0,)
     json.dumps(RunStats().to_json())
 
@@ -98,3 +102,43 @@ def test_dump_json_schema(tmp_path, monkeypatch):
     common.dump_json(str(path))
     doc = json.loads(path.read_text())
     assert set(doc["runs"][1]["stats"]) == ENGINE_KEYS
+
+
+def test_host_compute_artifact_shape_and_cost_model(tmp_path, monkeypatch):
+    """BENCH_host_compute.json: the CI smoke artifact carries the
+    host-execution channel in every run entry, and the benchmark's
+    miss-handling cost model obeys the dispatcher's decision rule (the
+    self-check's foundation): per-group savings are positive exactly when
+    the policy prefers the CPU."""
+    host_compute = importlib.import_module("benchmarks.host_compute")
+    from repro.core.costmodel import MIXTRAL_TIMINGS
+    from repro.hostexec import HostDispatchPolicy
+
+    monkeypatch.setattr(common, "_RESULTS", [])
+    monkeypatch.setattr(common, "_RUNS", [])
+    common.record_run("host_compute.off", SAMPLE)
+    common.record_run("host_compute.on", SAMPLE)
+    path = tmp_path / "BENCH_host_compute.json"
+    common.dump_json(str(path))
+    doc = json.loads(path.read_text())
+    assert [r["name"] for r in doc["runs"]] == ["host_compute.off",
+                                                "host_compute.on"]
+    for run in doc["runs"]:
+        stats = run["stats"]
+        assert set(stats) == ENGINE_KEYS
+        assert {"cpu_expert_calls", "cpu_tokens",
+                "cpu_offload_rate"} <= set(stats)
+
+    # SAMPLE dispatched 2 one-plus-token groups at 8 threads (CPU-favored
+    # on the paper's Mixtral timings): the modeled miss handling drops
+    pol = HostDispatchPolicy(MIXTRAL_TIMINGS, threads=8)
+    assert pol.prefers_cpu(1)
+    ms_off, ms_on = host_compute.miss_handling_ms(SAMPLE, pol)
+    assert ms_on < ms_off
+    # one thread: the cost model prefers the fetch, and a run that
+    # dispatched nothing to the CPU models no reduction
+    none = EngineStats(hits=7, accesses=12, host_assignments=5,
+                       fetched_experts=3, steps=3)
+    ms_off0, ms_on0 = host_compute.miss_handling_ms(
+        none, HostDispatchPolicy(MIXTRAL_TIMINGS, threads=1))
+    assert ms_on0 == ms_off0

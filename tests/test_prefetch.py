@@ -321,6 +321,33 @@ def test_scheduler_prefetch_counters_monotone(setup):
     assert 0.0 <= prev.prediction_accuracy <= 1.0
 
 
+def test_confidence_gate_cuts_reservations_never_tokens(setup):
+    """prefetch_min_prob thresholds reservations on router probability:
+    a strict gate suppresses predictions (and with them speculative
+    transfers and any waste) while the generated tokens stay identical —
+    gating changes residency, never logits."""
+    cfg, params = setup
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab_size), np.int32)
+
+    def run(min_prob):
+        eng = _engine(cfg, params, True, max_batch=2,
+                      prefetch_min_prob=min_prob)
+        return eng.generate(prompt, steps=12)
+
+    out_open, s_open = run(0.0)
+    out_gate, s_gate = run(0.35)
+    out_shut, s_shut = run(0.999)
+    np.testing.assert_array_equal(out_open, out_gate)
+    np.testing.assert_array_equal(out_open, out_shut)
+    assert 0 < s_gate.predicted < s_open.predicted
+    assert s_gate.prefetch_wasted <= s_open.prefetch_wasted
+    # a gate above every achievable pick probability disables prefetch
+    # entirely (router probs on 8 experts never reach 0.999 here)
+    assert s_shut.predicted == s_shut.prefetch_issued == 0
+    assert s_shut.prefetch_wasted == 0
+
+
 def test_sampling_honors_per_request_params(setup):
     """Per-request SamplingParams drive the scheduler's sampler:
     reproducible per request seed, and actually different from greedy

@@ -140,6 +140,98 @@ def test_batched_step_matches_single_request_logits(setup):
             rtol=2e-2, atol=2e-2)
 
 
+def test_cancel_mid_decode_frees_slot_and_admits_waiting(setup):
+    """cancel(rid) mid-decode: the request stops decoding immediately, a
+    terminal (rid, token, done=True) event is emitted, and the freed slot
+    admits a waiting request on the next tick."""
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=2)
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [sched.submit(p, max_new_tokens=8)
+            for p in _prompts(cfg, 3, seed=3)]
+    sched.step()                                  # r0, r1 in flight
+    assert sched.num_active == 2 and len(sched.queue) == 1
+    victim = reqs[0]
+    n_before = len(victim.generated)
+    assert sched.cancel(victim.rid)
+    assert victim.done and victim.cancelled
+    # slot freed immediately; no further tokens for the cancelled request
+    assert sched.num_active == 1
+    finished, events = sched._tick()
+    # -1 sentinel: every real token was already streamed exactly once
+    assert events[0] == (victim.rid, -1, True)
+    assert victim in finished                     # step() reports it done
+    assert len(victim.generated) == n_before      # token stream rejected
+    # the waiting request took the freed slot on that same tick
+    assert sched.num_active == 2
+    assert any(s is not None and s.rid == reqs[2].rid for s in sched.slots)
+    outs = sched.run()
+    assert sorted(outs) == [r.rid for r in reqs]
+    assert len(outs[victim.rid]) == n_before < 8
+    for r in (reqs[1], reqs[2]):
+        assert len(outs[r.rid]) == 8
+    # cancelling again (or an unknown rid) is a no-op, not an error
+    assert not sched.cancel(victim.rid)
+    assert not sched.cancel(10_000)
+
+
+def test_cancel_from_on_token_callback_at_admission(setup):
+    """An on_token handler that cancels its own request on the FIRST
+    token (content-filter style) must take effect: the request is live in
+    its slot when the callback fires, so cancel() frees it and no decode
+    tokens follow."""
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=1)
+    sched = ContinuousBatchingScheduler(eng)
+    req = sched.submit(
+        _prompts(cfg, 1, seed=7)[0], max_new_tokens=8,
+        on_token=lambda tok, done: done or sched.cancel(req.rid))
+    outs = sched.run()
+    assert req.cancelled
+    assert len(outs[req.rid]) == 1                # the prefill token only
+    assert sched.stats.requests_finished == 1
+
+
+def test_cancel_finished_request_awaiting_retirement_is_noop(setup):
+    """A request that finished on the last tick but still occupies its
+    slot (retirement happens at the next tick's start) already streamed
+    its terminal event — cancel() must refuse rather than emit a second
+    done=True."""
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=1)
+    sched = ContinuousBatchingScheduler(eng)
+    req = sched.submit(_prompts(cfg, 1, seed=6)[0], max_new_tokens=2)
+    sched.step()                          # admit + first decode -> done
+    assert req.done and sched.slots[0] is req
+    assert not sched.cancel(req.rid)
+    assert not sched._cancel_events
+    assert not req.cancelled
+    sched.step()                          # normal retirement
+    assert sched.finished == [req]
+
+
+def test_cancel_queued_request_and_stream_terminal_event(setup):
+    """A queued request cancels without ever decoding: stream() delivers
+    exactly one event for it — (rid, -1, done=True) — and on_token fires
+    once with done=True."""
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=1)
+    sched = ContinuousBatchingScheduler(eng)
+    seen = []
+    r0 = sched.submit(_prompts(cfg, 1, seed=4)[0], max_new_tokens=3)
+    rq = sched.submit(_prompts(cfg, 1, seed=5)[0], max_new_tokens=3,
+                      on_token=lambda tok, done: seen.append((tok, done)))
+    assert sched.cancel(rq.rid)                   # still queued: no tokens
+    assert seen == [(-1, True)]
+    events = list(sched.stream())
+    ev_rq = [e for e in events if e[0] == rq.rid]
+    assert ev_rq == [(rq.rid, -1, True)]
+    done_flags = [e for e in events if e[0] == r0.rid]
+    assert len(done_flags) == 3 and done_flags[-1][2]
+    assert sorted(r.rid for r in sched.finished) == [r0.rid, rq.rid]
+    assert rq.output.size == 0
+
+
 def test_staggered_positions_decode_correctly(setup):
     """Slots at different KV positions (different prompt lengths) coexist:
     the scheduler output for each request equals its solo scheduler run."""
