@@ -16,11 +16,12 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
-    from . import (decode_prefetch, fig2_patterns, fig5_throughput,
-                   fig6_hitrate, kernels_micro, table1_compute_comm,
-                   table5_energy)
+    from . import (admission_overlap, decode_prefetch, fig2_patterns,
+                   fig5_throughput, fig6_hitrate, host_compute,
+                   kernels_micro, table1_compute_comm, table5_energy)
     sections = [table1_compute_comm, fig2_patterns, fig5_throughput,
-                fig6_hitrate, table5_energy, kernels_micro, decode_prefetch]
+                fig6_hitrate, table5_energy, kernels_micro, decode_prefetch,
+                host_compute, admission_overlap]
     if not args.skip_roofline:
         from . import roofline
         sections.append(roofline)

@@ -149,7 +149,7 @@ def capture_trace(cfg, params, tokens, top_k: Optional[int] = None) -> np.ndarra
                 _, top_i, _ = route(lp["moe"]["router"],
                                     h[0].astype(jnp.float32), K)
                 picks.append(np.asarray(top_i))
-            x, _, _ = transformer._apply_layer(lp, x, slot, cfg, positions,
-                                               "train", None, None)
+            x, _, _, _ = transformer._apply_layer(lp, x, slot, cfg, positions,
+                                                  "train", None, None)
     # [L_moe, S, K] -> [S, L_moe, K]
     return np.stack(picks).transpose(1, 0, 2)

@@ -20,6 +20,7 @@ that the jitted dispatcher can gather from (`decision_table`).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -35,11 +36,18 @@ def timings_for(name: str) -> PaperModelTimings:
 
     Reduced configs keep the arch name (``reduced()`` only shrinks the
     geometry), so the live engine maps straight onto the paper's measured
-    testbed numbers; unknown archs fall back to the Mixtral timings (the
-    paper's primary target)."""
+    testbed numbers. Unknown archs fall back to the Mixtral timings (the
+    paper's primary target) with a ``UserWarning`` — the fallback
+    mis-costs host-dispatch decisions for non-paper models, and that must
+    never happen silently."""
     for key, tm in PAPER_TIMINGS.items():
         if name == key or name.startswith(tm.name):
             return tm
+    warnings.warn(
+        f"no calibrated paper timings for arch {name!r}: falling back to "
+        f"the Mixtral 8x7B timings ({MIXTRAL_TIMINGS.name}) — host-dispatch "
+        f"cost decisions for this model are uncalibrated",
+        UserWarning, stacklevel=2)
     return MIXTRAL_TIMINGS
 
 

@@ -48,6 +48,16 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="cache-warming chunked-prefill chunk "
                          "(0 = bypass prefill, cold cache)")
+    ap.add_argument("--admit-chunks-per-tick", type=int, default=0,
+                    help="overlapped admission: advance a newly admitted "
+                         "request's cache-warming replay by at most this "
+                         "many chunks per tick between decode steps, so "
+                         "established requests keep decoding while it "
+                         "warms (0 = synchronous admission)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the scheduler queue; a full queue blocks "
+                         "submit() (backpressure) instead of growing "
+                         "without limit")
     ap.add_argument("--prefetch", action="store_true",
                     help="cross-layer speculative expert prefetch")
     ap.add_argument("--prefetch-min-prob", type=float, default=0.0,
@@ -96,6 +106,10 @@ def main() -> None:
               f"sampling={f'T={temp}' if sample_on else 'greedy'}"
               + (f" prefetch(min_prob={args.prefetch_min_prob})"
                  if prefetch else "")
+              + (f" overlap_admit({args.admit_chunks_per_tick} chunks/tick)"
+                 if args.admit_chunks_per_tick else "")
+              + (f" max_queue={args.max_queue}"
+                 if args.max_queue is not None else "")
               + (f" host_compute({args.host_backend}, "
                  f"{args.host_threads}t)" if args.host_compute else ""))
         _, sched = build(
@@ -105,12 +119,13 @@ def main() -> None:
             serving=dict(max_batch=args.concurrency,
                          capacity=args.prompt + args.tokens + 1,
                          prefill_chunk=args.prefill_chunk,
+                         admit_chunks_per_tick=args.admit_chunks_per_tick,
                          prefetch=prefetch,
                          prefetch_min_prob=args.prefetch_min_prob,
                          host_compute=args.host_compute,
                          host_threads=args.host_threads,
                          host_backend=args.host_backend),
-            seed=args.seed, params=params)
+            seed=args.seed, params=params, max_queue=args.max_queue)
         rng = np.random.default_rng(args.seed)
         for r in range(R):
             plen = int(rng.integers(max(args.prompt // 2, 1),
@@ -126,9 +141,11 @@ def main() -> None:
         dt = time.time() - t0
         stats = sched.stats
         total = sum(len(o) for o in outs.values())
+        assert total == stats.generated_tokens, (total, stats.generated_tokens)
         print(f"  served {stats.requests_finished} requests / {total} tokens "
               f"in {dt:.2f}s ({total / dt:.1f} tok/s wall, "
-              f"{stats.steps} decode steps)")
+              f"{stats.steps} decode steps, "
+              f"{stats.admission_stalls} admission stalls)")
         print(f"  cache hit rate: {stats.hit_rate:.3f} "
               f"(hits={stats.hits} accesses={stats.accesses} "
               f"fetches={stats.fetched_experts})")

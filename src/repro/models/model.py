@@ -79,8 +79,8 @@ def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
                                    "train", remat=remat)
         aux = jnp.zeros((), jnp.float32)
     else:
-        x, _, aux = transformer.backbone(params, batch, cfg, "train",
-                                         remat=remat)
+        x, _, aux, _ = transformer.backbone(params, batch, cfg, "train",
+                                            remat=remat)
     xent = _xent_chunked(params, x, batch["labels"], cfg)
     coef = cfg.moe.aux_loss_coef if cfg.moe is not None else 0.0
     return xent + coef * aux, {"xent": xent, "aux": aux}
@@ -98,8 +98,8 @@ def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
                                        "prefill", remat=False)
         lm = encdec.lm_logits
     else:
-        x, state, _ = transformer.backbone(params, batch, cfg, "prefill",
-                                           remat=False)
+        x, state, _, _ = transformer.backbone(params, batch, cfg, "prefill",
+                                              remat=False)
         lm = transformer.lm_logits
     logits = lm(params, x[:, -1:, :], cfg)
     return logits, state
@@ -113,7 +113,7 @@ def decode_step(params: Params, state: Params, batch: Dict[str, jax.Array],
                                        "decode", state=state)
         lm = encdec.lm_logits
     else:
-        x, state, _ = transformer.backbone(params, batch, cfg, "decode",
-                                           state=state)
+        x, state, _, _ = transformer.backbone(params, batch, cfg, "decode",
+                                              state=state)
         lm = transformer.lm_logits
     return lm(params, x, cfg), state

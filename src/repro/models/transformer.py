@@ -29,7 +29,7 @@ from . import attention as attn
 from . import ssm
 from .layers import embed_lookup, embed_params, ffn_apply, ffn_params, \
     logits_from_embed, rmsnorm, rmsnorm_params, _dense_init
-from .moe import moe_apply, moe_params
+from .moe import moe_apply, moe_params, route
 
 Params = Dict[str, Any]
 
@@ -135,9 +135,20 @@ def init_state(cfg: ModelConfig, batch: int, capacity: int) -> Params:
 # --------------------------------------------------------------------------
 
 def _apply_layer(lp: Params, x: jax.Array, slot: Slot, cfg: ModelConfig,
-                 positions, mode: str, state: Optional[Params], pos
-                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Returns (x, new_state, aux_loss)."""
+                 positions, mode: str, state: Optional[Params], pos,
+                 want_trace: bool = False
+                 ) -> Tuple[jax.Array, Optional[Params], jax.Array,
+                            Optional[Params]]:
+    """Returns (x, new_state, aux_loss, routing trace).
+
+    ``want_trace`` (prefill-mode MoE slots only) additionally emits the
+    per-layer routing trace — ``top_i``/``top_w`` [B, S, K] and the
+    post-ln2 hidden states ``h2`` [B, S, D] — that the serving engine's
+    cache-warming replay consumes (repro.serving.engine). The trace is
+    derived from the SAME router weights and the SAME h2 that moe_apply
+    consults, so replaying it reproduces the prompt's expert demand
+    exactly; emitting it never changes x / new_state / aux. Trace is None
+    everywhere else (the default skips the O(L*S*D) materialization)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     new_state = None
@@ -162,6 +173,7 @@ def _apply_layer(lp: Params, x: jax.Array, slot: Slot, cfg: ModelConfig,
         else:
             o, _ = ssm.mamba_apply(lp["mamba"], h, cfg)
     x = x + o
+    trace = None
     if _slot_has_ffn(cfg, slot):
         h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
         if slot.is_moe:
@@ -169,12 +181,19 @@ def _apply_layer(lp: Params, x: jax.Array, slot: Slot, cfg: ModelConfig,
             # prefill-dropped token would diverge from the decode path
             cf = None if mode == "train" else cfg.moe.serve_capacity_factor
             f, aux = moe_apply(lp["moe"], h2, cfg.moe, capacity_factor=cf)
+            if want_trace and mode == "prefill":
+                B, S, _ = h2.shape
+                K = cfg.moe.top_k
+                _, top_i, top_w = route(lp["moe"]["router"],
+                                        h2.reshape(B * S, -1), K)
+                trace = {"top_i": top_i.reshape(B, S, K),
+                         "top_w": top_w.reshape(B, S, K), "h2": h2}
         else:
             f = ffn_apply(lp["ffn"], h2)
         x = x + f
     x = constrain_sp(x) if mode == "train" else \
         constrain(x, ("pod", "data"), None, None)
-    return x, new_state, aux
+    return x, new_state, aux, trace
 
 
 # --------------------------------------------------------------------------
@@ -205,9 +224,21 @@ def _positions(batch: Dict[str, jax.Array], cfg: ModelConfig, S: int, B: int):
 
 def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
              mode: str, state: Optional[Params] = None,
-             remat: bool = True) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Runs embedding + all layers. Returns (hidden, new_state, aux)."""
+             remat: bool = True, want_trace: bool = False
+             ) -> Tuple[jax.Array, Optional[Params], jax.Array,
+                        Optional[Params]]:
+    """Runs embedding + all layers. Returns (hidden, new_state, aux, trace).
+
+    ``want_trace`` (prefill mode only) collects every MoE layer's routing
+    trace into a pytree mirroring the scan/rem param structure:
+    ``trace["scan"]["s{j}"]`` holds ``top_i``/``top_w`` [G, B, S, K] and
+    ``h2`` [G, B, S, D] for MoE slot j (plus ``trace["rem"]`` for
+    remainder MoE layers). This is the ONE prefill implementation — the
+    serving engine replays the trace to warm its expert cache; there is no
+    hand-mirrored copy of the prefill branch anywhere else. Trace is None
+    without the flag (and the trace materialization is skipped)."""
     slots, G, R = build_slots(cfg)
+    want_trace = want_trace and mode == "prefill"
     x = _embed_inputs(params, batch, cfg)
     B, S = x.shape[0], x.shape[1]
     pos = state["pos"] if mode == "decode" else None
@@ -224,34 +255,43 @@ def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
         lp_group = xs["params"]
         st_group = xs.get("state")
         new_sts = {}
+        traces = {}
         for j, slot in enumerate(slots):
             st = st_group[f"s{j}"] if st_group is not None else None
             layer_fn = functools.partial(_apply_layer, slot=slot, cfg=cfg,
                                          positions=positions, mode=mode,
-                                         state=st, pos=pos)
+                                         state=st, pos=pos,
+                                         want_trace=want_trace)
             if nested:
                 layer_fn = jax.checkpoint(layer_fn)
-            x, new_st, a = layer_fn(lp_group[f"s{j}"], x)
+            x, new_st, a, tr = layer_fn(lp_group[f"s{j}"], x)
             if new_st is not None:
                 new_sts[f"s{j}"] = new_st
+            if tr is not None:
+                traces[f"s{j}"] = tr
             aux = aux + a
-        return (x, aux), new_sts
+        return (x, aux), (new_sts, traces)
 
     body = jax.checkpoint(group_body) if (remat and mode == "train") else group_body
 
     xs: Dict[str, Any] = {"params": params["scan"]}
     if mode == "decode":
         xs["state"] = state["scan"]
-    (x, aux), scan_states = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    (x, aux), (scan_states, scan_traces) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs)
 
     rem_states = {}
+    rem_traces = {}
     for j in range(R):
         slot = slots[j % len(slots)]
         st = state["rem"][f"r{j}"] if mode == "decode" else None
-        x, new_st, a = _apply_layer(params["rem"][f"r{j}"], x, slot, cfg,
-                                    positions, mode, st, pos)
+        x, new_st, a, tr = _apply_layer(params["rem"][f"r{j}"], x, slot, cfg,
+                                        positions, mode, st, pos,
+                                        want_trace=want_trace)
         if new_st is not None:
             rem_states[f"r{j}"] = new_st
+        if tr is not None:
+            rem_traces[f"r{j}"] = tr
         aux = aux + a
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
@@ -263,7 +303,12 @@ def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
             new_state["rem"] = rem_states
         new_state["pos"] = (state["pos"] + 1) if mode == "decode" \
             else jnp.asarray(S, jnp.int32)
-    return x, new_state, aux
+    trace = None
+    if want_trace:
+        trace = {"scan": scan_traces}
+        if rem_traces:
+            trace["rem"] = rem_traces
+    return x, new_state, aux, trace
 
 
 def lm_logits(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:

@@ -28,7 +28,8 @@ def build(arch: Union[str, ModelConfig], *,
           serving: Union[None, EngineConfig, Dict] = None,
           seed: int = 0,
           params=None,
-          reduce: bool = True
+          reduce: bool = True,
+          max_queue: Optional[int] = None
           ) -> Tuple[CollaborativeEngine, ContinuousBatchingScheduler]:
     """Build the collaborative engine + continuous-batching scheduler.
 
@@ -41,13 +42,16 @@ def build(arch: Union[str, ModelConfig], *,
     serving — EngineConfig (its ``cache`` is replaced when ``cache`` is
               also given), or a dict of EngineConfig overrides
               (``max_batch`` / ``capacity`` / ``prefetch`` /
-              ``prefill_chunk``).
+              ``prefill_chunk`` / ``admit_chunks_per_tick``).
     seed    — seeds parameter init, static cache placement and the
               scheduler's fallback sampling chains.
     params  — pre-initialized parameters (skips ``init_params``).
     reduce  — apply :func:`repro.config.reduced` (the CPU-container
               geometry) to arch-id lookups; pass False to serve the full
               config.
+    max_queue — bound the scheduler's waiting line (None = unbounded);
+              a full queue makes ``submit(..., block=False)`` raise
+              :class:`~repro.serving.scheduler.QueueFull`.
 
     Returns ``(engine, scheduler)``.
     """
@@ -81,5 +85,5 @@ def build(arch: Union[str, ModelConfig], *,
         params = init_params(cfg, key)
     engine = CollaborativeEngine(cfg, params, ecfg, key=key)
     scheduler = ContinuousBatchingScheduler(
-        engine, key=jax.random.fold_in(key, 1))
+        engine, key=jax.random.fold_in(key, 1), max_queue=max_queue)
     return engine, scheduler

@@ -24,13 +24,19 @@ host executor instead of paying the weight fetch, counted in the
 identical on every lane; the in-graph ``host_backend="jax"`` keeps tokens
 bit-identical to the all-GPU path.
 
-Prefill is *request-shaped*: :meth:`prefill_chunked` additionally routes
-the prompt through the staged probe → execute → commit pipeline in token
-chunks, so the prompt's own expert-routing warms the shared cache before
-the first decode step (the paper's long-prompt scenario). The hidden
-states, KV cache and first-token logits come from the one shared jitted
-prefill trace in both modes, so chunked warming changes cache residency
-and the ``prefill_*`` stat channel — never the generated tokens.
+Prefill is *request-shaped* and resumable: :meth:`start_prefill` runs the
+one shared prefill trace (the backbone's prefill mode with the routing
+trace emitted — there is no second prefill implementation) and returns a
+:class:`PrefillTicket`; :meth:`advance_prefill` replays the prompt's
+routing trace through the staged probe → execute → commit pipeline chunk
+by chunk, so the prompt's own expert-routing warms the shared cache
+before the first decode step (the paper's long-prompt scenario) — all at
+once on the synchronous path (:meth:`prefill_chunked`), or one
+``EngineConfig.admit_chunks_per_tick`` slice per scheduler tick on the
+overlapped-admission path. The hidden states, KV cache and first-token
+logits come from the trace in every mode, so warming — however paced —
+changes cache residency and the ``prefill_*`` stat channel, never the
+generated tokens.
 
 The engine is *batch-capable*: one decode step serves up to
 ``EngineConfig.max_batch`` concurrent requests, each at its own sequence
@@ -62,7 +68,7 @@ from repro.core import collaborative as collab
 from repro.models import transformer
 from repro.models import attention as attn
 from repro.models.layers import rmsnorm
-from repro.models.moe import moe_apply, route
+from repro.models.moe import route
 from .sampling import GREEDY, SamplingParams, batch_arrays, fold_keys, \
     sample_tokens
 from .stats import EngineStats
@@ -84,6 +90,13 @@ class EngineConfig:
     prefetch: bool = False        # cross-layer speculative expert prefetch
     prefetch_min_prob: float = 0.0  # confidence gate on reservations
     prefill_chunk: int = 8        # cache-warming prefill chunk (0 = bypass)
+    # overlapped admission: a newly admitted request advances its
+    # cache-warming replay by at most this many chunks per scheduler tick
+    # BETWEEN decode steps (its slot sits in the PREFILLING phase until
+    # the replay drains), so established requests keep decoding while the
+    # newcomer warms. 0 = synchronous admission (the whole replay runs on
+    # the admission tick — head-of-line blocking on long prompts).
+    admit_chunks_per_tick: int = 0
     # live host execution (repro.hostexec): compute cache-miss experts on
     # the CPU when the cost model favors it over the weight fetch
     host_compute: bool = False
@@ -94,6 +107,10 @@ class EngineConfig:
         if self.prefill_chunk < 0:
             raise ValueError(
                 f"prefill_chunk must be >= 0, got {self.prefill_chunk}")
+        if self.admit_chunks_per_tick < 0:
+            raise ValueError(
+                f"admit_chunks_per_tick must be >= 0, got "
+                f"{self.admit_chunks_per_tick}")
         if not 0.0 <= self.prefetch_min_prob < 1.0:
             raise ValueError(
                 f"prefetch_min_prob must be in [0, 1), got "
@@ -105,6 +122,38 @@ class EngineConfig:
             raise ValueError(
                 f"host_backend must be 'jax' or 'callback', got "
                 f"{self.host_backend!r}")
+
+
+@dataclass(eq=False)
+class PrefillTicket:
+    """Resumable cache-warming prefill for ONE request (identity
+    semantics: a generated ``__eq__`` over the held device arrays would
+    raise, like Request's ndarray prompt).
+
+    Produced by :meth:`CollaborativeEngine.start_prefill` after the shared
+    prefill trace ran (so ``logits`` and ``state`` are final — sampling the
+    first token never waits on warming); holds the prompt's routing trace
+    padded to whole chunks plus the replay cursor.
+    :meth:`CollaborativeEngine.advance_prefill` drives the replay — the
+    scheduler interleaves one ticket advance per tick between decode steps
+    so established requests keep decoding while the newcomer warms."""
+    prompt_len: int
+    chunk: int                    # warm-chunk token count (0 = bypass)
+    n_chunks: int
+    logits: jax.Array             # [1, 1, V] first-token logits
+    state: Params                 # decode state, pos = prompt_len
+    top_i: Optional[jax.Array] = None   # [L, n_chunks*chunk, K]
+    top_w: Optional[jax.Array] = None
+    h2: Optional[jax.Array] = None      # [L, n_chunks*chunk, D]
+    cursor: int = 0               # chunks already replayed
+
+    @property
+    def done(self) -> bool:
+        return self.cursor >= self.n_chunks
+
+    @property
+    def remaining(self) -> int:
+        return self.n_chunks - self.cursor
 
 
 def _one_prompt(prompt) -> np.ndarray:
@@ -184,7 +233,7 @@ class CollaborativeEngine:
             "prefetch_issued": 0, "prefetch_hits": 0, "prefetch_wasted": 0,
             "predicted": 0, "predicted_correct": 0,
             "prefill_hits": 0, "prefill_accesses": 0, "prefill_fetched": 0,
-            "prefill_tokens": 0, "prefill_chunks": 0,
+            "prefill_tokens": 0, "prefill_chunks": 0, "first_tokens": 0,
             "cpu_expert_calls": 0, "cpu_tokens": 0, "miss_expert_groups": 0}
         self._per_layer_hits = np.zeros(L, np.int64)
         self._per_layer_accesses = np.zeros(L, np.int64)
@@ -360,66 +409,32 @@ class CollaborativeEngine:
 
     # -- prefill: one shared trace, two cache modes ------------------------
     def _prefill_trace(self, tokens, plen, want_trace: bool = False):
-        """Full-prompt forward for the homogeneous MoE stack.
+        """Full-prompt forward: the backbone's prefill mode, directly.
 
         tokens [B, capacity] (prompt left-aligned, zero-padded); plen —
-        traced scalar count of real prompt tokens. Mirrors the backbone's
-        prefill mode (chunked-flash attention + dense host-tier MoE) and
-        — under the static ``want_trace`` flag — additionally emits the
-        per-layer routing trace the cache-warming path replays: router
-        picks and post-ln2 hidden states for every position (the bypass
-        path skips the O(L*S*D) trace materialization entirely). The
-        mirror is pinned by a bitwise KV + logits parity test against
-        ``model.prefill`` (test_serving_api) — keep this body in lockstep
-        with ``transformer._apply_layer``'s prefill branch. First-token
-        logits are read at position ``plen - 1`` — the last *real* prompt
-        token (pad positions are causally masked out of every real
-        position's attention).
+        traced scalar count of real prompt tokens. There is ONE prefill
+        implementation: ``transformer.backbone(mode="prefill")``, whose
+        ``want_trace`` flag additionally emits the per-layer routing
+        trace the cache-warming replay consumes (the bypass path skips
+        the O(L*S*D) trace materialization entirely). First-token logits
+        are read at position ``plen - 1`` — the last *real* prompt token
+        (pad positions are causally masked out of every real position's
+        attention).
 
         Returns (logits [B, 1, V], decode state with pos=plen,
         trace {top_i [L, B, S, K], top_w [L, B, S, K], h2 [L, B, S, D]}
         — or None without ``want_trace``).
         """
         cfg = self.cfg
-        params = self.params
-        B, S = tokens.shape
-        K = cfg.moe.top_k
-        slots, _, _ = transformer.build_slots(cfg)
-        slot = slots[0]
-        x = transformer._embed_inputs(params, {"tokens": tokens}, cfg)
-        positions = jnp.arange(S)[None]
-
-        def body(x, lp):
-            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-            o = attn.self_attention(lp["attn"], h, positions, cfg,
-                                    slot.window)
-            # rebuild k/v for the decode cache (cheap projections, same as
-            # the backbone's prefill mode)
-            q, k, v = attn._project_qkv(lp["attn"], h, cfg)
-            _, k = attn._rope_qk(q, k, positions, cfg)
-            x = x + o
-            h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
-            f, _ = moe_apply(lp["moe"], h2, cfg.moe,
-                             capacity_factor=cfg.moe.serve_capacity_factor)
-            x = x + f
-            out = {"k": k, "v": v}
-            if want_trace:
-                # the routing trace: same router on the same h2 as
-                # moe_apply just consulted
-                _, top_i, top_w = route(lp["moe"]["router"],
-                                        h2.reshape(B * S, -1), K)
-                out.update(top_i=top_i.reshape(B, S, K),
-                           top_w=top_w.reshape(B, S, K), h2=h2)
-            return x, out
-
-        x, seq = jax.lax.scan(body, x, params["scan"]["s0"])
-        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        x, state, _, trace = transformer.backbone(
+            self.params, {"tokens": tokens}, cfg, "prefill", remat=False,
+            want_trace=want_trace)
         h_last = jax.lax.dynamic_slice_in_dim(x, plen - 1, 1, axis=1)
-        logits = transformer.lm_logits(params, h_last, cfg)
-        state = {"scan": {"s0": {"k": seq["k"], "v": seq["v"]}},
-                 "pos": jnp.asarray(plen, jnp.int32)}
-        trace = {"top_i": seq["top_i"], "top_w": seq["top_w"],
-                 "h2": seq["h2"]} if want_trace else None
+        logits = transformer.lm_logits(self.params, h_last, cfg)
+        state = {"scan": state["scan"], "pos": jnp.asarray(plen, jnp.int32)}
+        # homogeneous stack: the one scanned slot's trace IS the engine's
+        # [L, B, S, ...] routing trace
+        trace = trace["scan"]["s0"] if want_trace else None
         return logits, state, trace
 
     def _padded_prefill(self, tokens, want_trace: bool = False):
@@ -474,32 +489,34 @@ class CollaborativeEngine:
         new_fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
         return new_fast, stats
 
-    def prefill_chunked(self, prompt: np.ndarray,
-                        chunk: Optional[int] = None
-                        ) -> Tuple[jax.Array, Params]:
-        """Cache-warming chunked prefill (ROADMAP's long-prompt item).
+    # -- resumable prefill: ticket primitives ------------------------------
+    def start_prefill(self, prompt: np.ndarray,
+                      chunk: Optional[int] = None) -> "PrefillTicket":
+        """Run the shared prefill trace once and open a resumable
+        cache-warming ticket.
 
-        Runs the prompt through the shared prefill trace (bit-identical
-        hidden states / KV / logits to :meth:`prefill`), then replays the
-        prompt's routing trace through the staged probe/execute/commit
-        pipeline in ``chunk``-token chunks, in prompt order — so the
-        shared expert cache is warm before the first decode step. The
-        warming accesses are accounted in the separate ``prefill_*`` stat
-        channel; decode-channel counters and generated tokens are
-        untouched by construction (residency changes never change logits).
-        """
+        The returned :class:`PrefillTicket` carries the first-token
+        logits, the request's decode state (pos=len(prompt)) and the
+        prompt's routing trace padded to whole ``chunk``-token chunks,
+        plus a chunk cursor. The caller drives the warming replay with
+        :meth:`advance_prefill` — one call per scheduler tick for
+        overlapped admission, or all at once for the synchronous path.
+        With ``chunk == 0`` (bypass prefill) no trace is materialized and
+        the ticket is born done."""
         chunk = self.ecfg.prefill_chunk if chunk is None else int(chunk)
-        if chunk < 1:
-            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if chunk < 0:
+            raise ValueError(f"chunk must be >= 0, got {chunk}")
         prompt = _one_prompt(prompt)
         P = prompt.shape[1]
+        if chunk == 0:
+            logits, state, _ = self._padded_prefill(prompt)
+            return PrefillTicket(prompt_len=P, chunk=0, n_chunks=0,
+                                 logits=logits, state=state)
         logits, state, trace = self._padded_prefill(prompt, want_trace=True)
-
-        # replay the routing trace chunk by chunk (fixed [L, chunk, ...]
-        # shapes: the warm step compiles once per chunk size; only the
-        # python trip count varies with prompt length). The trace stays
-        # device-resident and the stats convert after the loop — no
-        # device->host sync between chunks on the admission path.
+        # fixed [L, chunk, ...] shapes: the warm step compiles once per
+        # chunk size; only the chunk count varies with prompt length. The
+        # trace stays device-resident on the ticket — no device->host
+        # sync on the admission path.
         top_i = trace["top_i"][:, 0]                    # [L, S, K]
         top_w = trace["top_w"][:, 0]
         h2 = trace["h2"][:, 0]                          # [L, S, D]
@@ -508,37 +525,81 @@ class CollaborativeEngine:
         if pad_to > top_i.shape[1]:
             ext = ((0, 0), (0, pad_to - top_i.shape[1]), (0, 0))
             top_i, top_w, h2 = (jnp.pad(a, ext) for a in (top_i, top_w, h2))
-        chunk_stats = []
-        for ci in range(n_chunks):
-            s = ci * chunk
+        return PrefillTicket(prompt_len=P, chunk=chunk, n_chunks=n_chunks,
+                             logits=logits, state=state,
+                             top_i=top_i, top_w=top_w, h2=h2)
+
+    def advance_prefill(self, ticket: "PrefillTicket",
+                        max_chunks: int = 1) -> bool:
+        """Advance a ticket's cache-warming replay by up to ``max_chunks``
+        chunks through the staged probe/execute/commit pipeline, in prompt
+        order. Warming moves expert weights (shared-tier residency + the
+        ``prefill_*`` stat channel) and never touches the ticket's
+        logits/state — decode tokens are bit-identical however the replay
+        is paced. Returns True when the ticket is fully warmed."""
+        chunk, P = ticket.chunk, ticket.prompt_len
+        advanced = []
+        while ticket.cursor < ticket.n_chunks and len(advanced) < max_chunks:
+            s = ticket.cursor * chunk
             active = jnp.arange(s, s + chunk) < P
             self.fast, wstats = self._warm(
-                self.fast, top_i[:, s:s + chunk], top_w[:, s:s + chunk],
-                h2[:, s:s + chunk], active)
-            chunk_stats.append(wstats)
-        for ci, wstats in enumerate(chunk_stats):
-            self._accumulate_prefill(wstats, min(chunk, P - ci * chunk))
-        self._counters["prefill_chunks"] += n_chunks
-        return logits, state
+                self.fast, ticket.top_i[:, s:s + chunk],
+                ticket.top_w[:, s:s + chunk], ticket.h2[:, s:s + chunk],
+                active)
+            advanced.append((wstats, min(chunk, P - s)))
+            ticket.cursor += 1
+        # stats convert after the mini-loop: a full synchronous drain pays
+        # one device->host sync, the per-tick overlapped path one per tick
+        for wstats, n_tok in advanced:
+            self._accumulate_prefill(wstats, n_tok)
+        self._counters["prefill_chunks"] += len(advanced)
+        return ticket.done
+
+    def prefill_chunked(self, prompt: np.ndarray,
+                        chunk: Optional[int] = None
+                        ) -> Tuple[jax.Array, Params]:
+        """Cache-warming chunked prefill (ROADMAP's long-prompt item).
+
+        Runs the prompt through the shared prefill trace (bit-identical
+        hidden states / KV / logits to :meth:`prefill`), then drains the
+        whole warming replay synchronously — :meth:`start_prefill` +
+        :meth:`advance_prefill` in one call. The warming accesses land in
+        the separate ``prefill_*`` stat channel; decode-channel counters
+        and generated tokens are untouched by construction (residency
+        changes never change logits)."""
+        chunk = self.ecfg.prefill_chunk if chunk is None else int(chunk)
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        ticket = self.start_prefill(prompt, chunk)
+        self.advance_prefill(ticket, ticket.n_chunks)
+        return ticket.logits, ticket.state
+
+    def sample_first(self, ticket: "PrefillTicket",
+                     sampling: SamplingParams = GREEDY, key=None) -> int:
+        """Select a request's first token from its ticket's prefill
+        logits under the request's own SamplingParams (``key``: the
+        request's first-step PRNG key; required for non-greedy sampling).
+        Counted in the ``first_tokens`` channel — prefill-sampled tokens
+        are generated output, so token-based throughput must see them."""
+        keys = None if key is None else np.asarray(key).reshape(1, 2)
+        tok = int(np.asarray(
+            self.select_tokens(ticket.logits[:, 0], [sampling], keys))[0])
+        self._counters["first_tokens"] += 1
+        return tok
 
     def prefill_request(self, prompt: np.ndarray,
                         sampling: SamplingParams = GREEDY,
                         key=None) -> Tuple[int, Params]:
-        """Prefill one request; returns (first token, decode state with
-        pos=len(prompt), B=1). Uses the cache-warming chunked path when
-        ``EngineConfig.prefill_chunk > 0``, the cold bypass otherwise —
-        the first token is identical either way. The token is selected
-        with the request's own SamplingParams (``key``: the request's
-        first-step PRNG key; required for non-greedy sampling)."""
-        prompt = _one_prompt(prompt)
-        if self.ecfg.prefill_chunk > 0:
-            logits, state = self.prefill_chunked(prompt)
-        else:
-            logits, state = self.prefill(jnp.asarray(prompt))
-        keys = None if key is None else np.asarray(key).reshape(1, 2)
-        tok = int(np.asarray(
-            self.select_tokens(logits[:, 0], [sampling], keys))[0])
-        return tok, state
+        """Prefill one request synchronously; returns (first token, decode
+        state with pos=len(prompt), B=1). Uses the cache-warming chunked
+        path when ``EngineConfig.prefill_chunk > 0``, the cold bypass
+        otherwise — the first token is identical either way. The
+        overlapped-admission scheduler uses the underlying ticket
+        primitives directly instead."""
+        ticket = self.start_prefill(prompt)
+        self.advance_prefill(ticket, ticket.n_chunks)
+        tok = self.sample_first(ticket, sampling, key)
+        return tok, ticket.state
 
     # -- vectorized per-slot sampling --------------------------------------
     def select_tokens(self, logits: jax.Array,
@@ -626,6 +687,10 @@ class CollaborativeEngine:
             return fold_keys(np.broadcast_to(row0, (B, 2)), np.arange(B))
 
         tok = self.select_tokens(logits[:, 0], sampling, step_keys(0))[:, None]
+        # the B prefill-sampled tokens are generated output: count them in
+        # the first_tokens channel so token totals don't undercount by one
+        # per sequence
+        self._counters["first_tokens"] += B
         active = jnp.ones((B,), bool)
         out = [np.asarray(tok)]
         for i in range(steps - 1):

@@ -5,26 +5,40 @@ serving (HybriMoE, DAOP) interleaves many. This scheduler generalizes the
 workflow to T = ``EngineConfig.max_batch`` concurrent *slots* over ONE
 shared expert cache:
 
-  * admission   — a queued request claims a free slot: its prompt is
-                  prefilled (B=1, cache-warming chunked prefill by
-                  default) and the resulting KV state is scattered into
-                  the slot's rows of the batch decode state.
+  * admission   — a queued request claims a free slot: the shared prefill
+                  trace runs once (first token sampled immediately, KV
+                  state scattered into the slot's rows), then the slot
+                  enters the PREFILLING phase while its cache-warming
+                  replay drains. With
+                  ``EngineConfig.admit_chunks_per_tick > 0`` the replay
+                  advances at most that many chunks per tick BETWEEN
+                  decode steps — established slots keep decoding while
+                  the newcomer warms (no head-of-line blocking); with 0
+                  the replay drains synchronously on the admission tick.
   * decode tick — every step decodes the whole padded slot batch in one
                   jitted call; each slot sits at its own KV position
-                  (per-slot ``pos`` vector) and inactive slots are masked
-                  out of the shared expert cache, the stats and the
-                  output. Next tokens are drawn by the engine's
-                  vectorized per-slot sampler, each row under its own
-                  request's SamplingParams and PRNG chain.
+                  (per-slot ``pos`` vector) and inactive or PREFILLING
+                  slots are masked out of the shared expert cache, the
+                  stats and the output. Next tokens are drawn by the
+                  engine's vectorized per-slot sampler, each row under
+                  its own request's SamplingParams and PRNG chain.
   * retirement  — a request finishes on ``max_new_tokens``, ``eos_id`` or
                   one of its ``stop_sequences``; its slot frees
                   immediately and the next queued request is admitted on
                   the same tick (continuous batching: the batch never
                   drains to refill).
   * cancellation — :meth:`cancel` retires a queued or in-flight request
-                  mid-decode: the slot frees for the next admission, a
+                  mid-decode or mid-warm: the slot frees for the next
+                  admission (a PREFILLING slot's ticket is dropped), a
                   terminal ``(rid, -1, done=True)`` event is emitted,
                   and no further tokens are decoded for it.
+  * backpressure — ``max_queue`` bounds the waiting line:
+                  ``submit(..., block=False)`` raises :class:`QueueFull`
+                  when it is at capacity (counted in ``queue_rejected``),
+                  the blocking default drives ticks until space frees.
+                  :meth:`pause_admission` / :meth:`resume_admission` let
+                  a consumer hold new admissions (queued requests wait;
+                  in-flight slots keep decoding).
 
 Callers observe tokens as they decode: :meth:`stream` yields
 ``(rid, token, done)`` events in emission order, and each request may
@@ -43,19 +57,31 @@ from typing import Callable, Deque, Dict, Iterator, List, Optional, \
 import jax
 import numpy as np
 
-from .engine import CollaborativeEngine, _one_prompt
+from .engine import CollaborativeEngine, PrefillTicket, _one_prompt
 from .sampling import GREEDY, SamplingParams, fold_keys, request_key
 from .stats import RunStats
 
-__all__ = ["Request", "ContinuousBatchingScheduler", "StreamEvent"]
+__all__ = ["Request", "ContinuousBatchingScheduler", "StreamEvent",
+           "QueueFull"]
 
 StreamEvent = Tuple[int, int, bool]          # (rid, token, done)
 
 
-@dataclass
+class QueueFull(RuntimeError):
+    """Raised by ``submit(..., block=False)`` when the scheduler's
+    bounded queue (``max_queue``) is at capacity — the consumer's typed
+    backpressure signal."""
+
+
+@dataclass(eq=False)
 class Request:
     """One generation request: prompt, per-request sampling, termination
-    conditions, optional streaming callback, and accumulated output."""
+    conditions, optional streaming callback, and accumulated output.
+
+    Identity semantics (``eq=False``): ``rid`` is the key; a generated
+    ``__eq__`` would compare the ``np.ndarray`` prompt element-wise and
+    make ``req in queue`` / ``list.remove`` raise on two distinct
+    requests ("truth value of an array is ambiguous")."""
     rid: int
     prompt: np.ndarray                  # [P] int32
     max_new_tokens: int
@@ -96,13 +122,21 @@ class ContinuousBatchingScheduler:
     always draws from ``fold_in(request_base, i)``, so runs are
     reproducible per (scheduler seed, admission order) and — for
     explicitly seeded requests — per request, independent of batch
-    composition."""
+    composition. ``max_queue`` bounds the waiting line (None =
+    unbounded); see :meth:`submit` for the blocking/raising behaviour."""
 
-    def __init__(self, engine: CollaborativeEngine, key=None):
+    def __init__(self, engine: CollaborativeEngine, key=None,
+                 max_queue: Optional[int] = None):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.engine = engine
         self.num_slots = engine.ecfg.max_batch
+        self.max_queue = max_queue
         self.state = engine.init_slots()
         self.slots: List[Optional[Request]] = [None] * self.num_slots
+        # PREFILLING phase: slot t warms through _tickets[t] and is masked
+        # out of decode until the ticket drains (None = decoding/free)
+        self._tickets: List[Optional[PrefillTicket]] = [None] * self.num_slots
         self.queue: Deque[Request] = deque()
         self._next = np.zeros((self.num_slots, 1), np.int32)
         self._rid = 0
@@ -110,8 +144,15 @@ class ContinuousBatchingScheduler:
         self._bases = np.zeros((self.num_slots, 2), np.uint32)
         self.finished: List[Request] = []
         self._submitted = 0
-        self._cancel_events: List[StreamEvent] = []
-        self._cancel_done: List[Request] = []
+        self._paused = False
+        self._admission_stalls = 0
+        self._queue_rejected = 0
+        # events/retirements produced OUTSIDE a consumer-driven tick
+        # (cancellations, ticks driven by a blocking submit): buffered
+        # here and delivered at the start of the next tick so stream()
+        # never loses a token or a terminal done=True
+        self._pending_events: List[StreamEvent] = []
+        self._pending_done: List[Request] = []
 
     def _split(self):
         self._key, sub = jax.random.split(self._key)
@@ -122,12 +163,20 @@ class ContinuousBatchingScheduler:
                eos_id: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
                stop_sequences: Sequence[Sequence[int]] = (),
-               on_token: Optional[Callable[[int, bool], None]] = None
-               ) -> Request:
+               on_token: Optional[Callable[[int, bool], None]] = None,
+               block: bool = True) -> Request:
         """Queue one request. Validates the prompt against the engine
         geometry here — at submission — so an oversized request fails
         fast with a clear error instead of mid-run after other requests
-        already decoded."""
+        already decoded.
+
+        Bounded admission (``max_queue`` set): when the queue is at
+        capacity, ``block=True`` (default) drives scheduler ticks until a
+        queue slot frees — the natural backpressure for a synchronous
+        producer — while ``block=False`` raises :class:`QueueFull`
+        immediately (counted in ``queue_rejected``). A full queue with
+        admission paused raises :class:`QueueFull` in both modes: ticks
+        cannot drain it."""
         prompt = _one_prompt(prompt)[0]      # [P]; rejects [B, P] batches
         plen, cap = prompt.shape[0], self.engine.ecfg.capacity
         if plen < 1:
@@ -140,6 +189,20 @@ class ContinuousBatchingScheduler:
                 f"prompt length {plen} + max_new_tokens {max_new_tokens} "
                 f"exceeds engine KV capacity {cap}; shorten the prompt or "
                 f"raise EngineConfig.capacity")
+        while self.max_queue is not None \
+                and len(self.queue) >= self.max_queue:
+            if not block or self._paused:
+                self._queue_rejected += 1
+                raise QueueFull(
+                    f"scheduler queue is at max_queue={self.max_queue}"
+                    + (" and admission is paused" if self._paused else
+                       "; retry later or submit(block=True)"))
+            # drain work until space frees; the ticks' events/retirements
+            # re-enter the pending buffers so a later stream()/step()
+            # still delivers every token and terminal done=True
+            finished, events = self._tick()
+            self._pending_events.extend(events)
+            self._pending_done.extend(finished)
         req = Request(self._rid, prompt, int(max_new_tokens), eos_id,
                       sampling if sampling is not None else GREEDY,
                       tuple(tuple(int(t) for t in s)
@@ -150,19 +213,37 @@ class ContinuousBatchingScheduler:
         self.queue.append(req)
         return req
 
+    def pause_admission(self) -> None:
+        """Hold new admissions: queued requests stay queued (and keep
+        counting ``admission_stalls``) while in-flight slots decode and
+        PREFILLING slots keep warming. ``stream()``/``run()`` drain only
+        the in-flight work while paused — call :meth:`resume_admission`
+        to serve the queue again."""
+        self._paused = True
+
+    def resume_admission(self) -> None:
+        """Reopen admission; the next tick admits queued requests into
+        free slots as usual."""
+        self._paused = False
+
+    @property
+    def admission_paused(self) -> bool:
+        return self._paused
+
     def cancel(self, rid: int) -> bool:
-        """Cancel a queued or in-flight request mid-decode.
+        """Cancel a queued or in-flight request mid-decode or mid-warm.
 
         An in-flight request's slot frees IMMEDIATELY — the next tick's
         admission can hand it to a waiting request without the cancelled
-        one decoding another token. The request retires with a terminal
-        ``(rid, -1, done=True)`` stream event, delivered ahead of the
-        next tick's events (-1, never a real token: every generated
-        token was already streamed exactly once); its ``on_token``
-        callback fires once more with ``(-1, True)``. Returns True if
-        the request was found live (queued or in a slot), False if
-        unknown or already finished — cancelling is idempotent and never
-        raises."""
+        one decoding another token; a PREFILLING slot additionally drops
+        its warming ticket (no further chunks replay). The request
+        retires with a terminal ``(rid, -1, done=True)`` stream event,
+        delivered ahead of the next tick's events (-1, never a real
+        token: every generated token was already streamed exactly once);
+        its ``on_token`` callback fires once more with ``(-1, True)``.
+        Returns True if the request was found live (queued or in a slot),
+        False if unknown or already finished — cancelling is idempotent
+        and never raises."""
         req = None
         for r in self.queue:
             if r.rid == rid:
@@ -180,13 +261,14 @@ class ContinuousBatchingScheduler:
                         return False
                     req = r
                     self.slots[t] = None          # slot free for admission
+                    self._tickets[t] = None       # mid-warm: drop the ticket
                     break
         if req is None:
             return False
         req.cancelled = True                      # done; rejects new tokens
         self.finished.append(req)
-        self._cancel_done.append(req)             # next _tick reports it
-        self._cancel_events.append((req.rid, -1, True))
+        self._pending_done.append(req)            # next _tick reports it
+        self._pending_events.append((req.rid, -1, True))
         if req.on_token is not None:
             req.on_token(-1, True)
         return True
@@ -194,17 +276,31 @@ class ContinuousBatchingScheduler:
     # -- slot bookkeeping --------------------------------------------------
     @property
     def active_mask(self) -> np.ndarray:
+        """Occupied slots — decoding OR warming (PREFILLING)."""
         return np.array([s is not None for s in self.slots], bool)
+
+    @property
+    def decode_mask(self) -> np.ndarray:
+        """Slots that decode this tick: occupied and fully warmed (a
+        PREFILLING slot is masked out until its ticket drains)."""
+        return np.array([s is not None and tk is None
+                         for s, tk in zip(self.slots, self._tickets)], bool)
 
     @property
     def num_active(self) -> int:
         return int(self.active_mask.sum())
+
+    @property
+    def prefill_pending(self) -> int:
+        """Slots currently in the PREFILLING phase (warming mid-replay)."""
+        return sum(tk is not None for tk in self._tickets)
 
     def _retire(self) -> List[Request]:
         out = []
         for t, req in enumerate(self.slots):
             if req is not None and req.done:
                 self.slots[t] = None
+                self._tickets[t] = None   # done mid-warm: drop the replay
                 out.append(req)
         self.finished.extend(out)
         return out
@@ -218,46 +314,74 @@ class ContinuousBatchingScheduler:
             req.on_token(tok, done)
 
     def _admit(self, events: List[StreamEvent]) -> None:
+        if self._paused:
+            return
         for t in range(self.num_slots):
             if self.slots[t] is None and self.queue:
                 req = self.queue.popleft()
                 base = request_key(req.sampling, self._split())
                 self._bases[t] = base
-                first_tok, one_state = self.engine.prefill_request(
-                    req.prompt, sampling=req.sampling,
-                    key=jax.random.fold_in(base, 0))
-                self.state = self.engine.write_slot(self.state, one_state, t)
+                ticket = self.engine.start_prefill(req.prompt)
+                first_tok = self.engine.sample_first(
+                    ticket, req.sampling, key=jax.random.fold_in(base, 0))
+                self.state = self.engine.write_slot(self.state,
+                                                    ticket.state, t)
                 # claim the slot BEFORE the first-token callback fires so
                 # an on_token handler that calls cancel() finds the
                 # request live (cancel then frees the slot right here)
                 self._next[t, 0] = first_tok
                 self.slots[t] = req
+                self._tickets[t] = None if ticket.done else ticket
                 self._append(req, first_tok, events)
+
+    def _advance_prefills(self) -> None:
+        """Drive every PREFILLING slot's warming replay: the whole ticket
+        at once when ``admit_chunks_per_tick == 0`` (synchronous
+        admission), at most that many chunks otherwise — the overlapped
+        path that keeps decode ticks flowing under a long-prompt
+        admission. A drained ticket flips its slot into the decode set of
+        THIS tick (matching the synchronous path's admit-and-decode-same-
+        tick behaviour)."""
+        per_tick = self.engine.ecfg.admit_chunks_per_tick
+        for t, ticket in enumerate(self._tickets):
+            if ticket is None or self.slots[t] is None:
+                continue
+            budget = ticket.remaining if per_tick == 0 \
+                else min(per_tick, ticket.remaining)
+            if self.engine.advance_prefill(ticket, budget):
+                self._tickets[t] = None
 
     # -- the decode loop ---------------------------------------------------
     def _tick(self) -> Tuple[List[Request], List[StreamEvent]]:
-        """One scheduler tick: retire -> admit -> one padded decode step.
+        """One scheduler tick: retire -> admit -> advance warming -> one
+        padded decode step over the warmed slots.
         Returns (requests finished this tick, stream events in order)."""
         events: List[StreamEvent] = []
         finished: List[Request] = []
-        if self._cancel_events:
-            # terminal events of cancellations since the last tick drain
-            # first — a cancelled request's done=True precedes everything
-            # the tick decodes — and the cancelled requests count toward
-            # this tick's finished return like any other retirement
-            events.extend(self._cancel_events)
-            self._cancel_events.clear()
-            finished.extend(self._cancel_done)
-            self._cancel_done.clear()
+        if self._pending_events or self._pending_done:
+            # buffered events since the last consumer-driven tick drain
+            # first, in production order — a cancellation's done=True and
+            # everything a blocking submit() decoded precede what this
+            # tick decodes — and their retirements count toward this
+            # tick's finished return like any other
+            events.extend(self._pending_events)
+            self._pending_events.clear()
+            finished.extend(self._pending_done)
+            self._pending_done.clear()
         finished += self._retire()
         self._admit(events)
         finished += self._retire()       # an admitted req may already be done
-        active = self.active_mask
+        if self.queue:
+            # a request is waiting and no slot took it this tick (every
+            # slot busy, or admission paused): the head-of-line signal
+            self._admission_stalls += 1
+        self._advance_prefills()
+        active = self.decode_mask
         if active.any():
             logits, self.state = self.engine.decode_batch(
                 self._next, self.state, active)
-            params = [r.sampling if r is not None else GREEDY
-                      for r in self.slots]
+            params = [r.sampling if r is not None and tk is None else GREEDY
+                      for r, tk in zip(self.slots, self._tickets)]
             if all(p.greedy for p in params):
                 keys = None                   # greedy: skip key derivation
             else:
@@ -267,7 +391,7 @@ class ContinuousBatchingScheduler:
             toks = np.asarray(jax.device_get(self.engine.select_tokens(
                 logits[:, 0], params, keys))).astype(np.int32)
             for t, req in enumerate(self.slots):
-                if req is None:
+                if req is None or not active[t]:
                     continue
                 self._append(req, int(toks[t]), events)
                 self._next[t, 0] = toks[t]
@@ -283,8 +407,10 @@ class ContinuousBatchingScheduler:
         each token is decoded — a request's events arrive in generation
         order and its final event (and only that one) carries
         ``done=True``. Requests interleave exactly as the continuous batch
-        decodes them."""
-        while self.queue or self._cancel_events \
+        decodes them. While admission is paused the queue cannot drain:
+        stream() finishes the in-flight work and returns, leaving queued
+        requests waiting for :meth:`resume_admission`."""
+        while (self.queue and not self._paused) or self._pending_events \
                 or any(s is not None for s in self.slots):
             _, events = self._tick()
             for ev in events:
@@ -299,10 +425,14 @@ class ContinuousBatchingScheduler:
 
     @property
     def stats(self) -> RunStats:
-        """Typed run statistics: request accounting + an immutable engine
-        counter snapshot (rates zero-guarded on EngineStats)."""
+        """Typed run statistics: request accounting + the admission
+        channel + an immutable engine counter snapshot (rates
+        zero-guarded on EngineStats)."""
         return RunStats(engine=self.engine.stats,
                         requests_submitted=self._submitted,
                         requests_finished=len(self.finished),
                         requests_active=self.num_active,
-                        requests_queued=len(self.queue))
+                        requests_queued=len(self.queue),
+                        prefill_pending=self.prefill_pending,
+                        admission_stalls=self._admission_stalls,
+                        queue_rejected=self._queue_rejected)

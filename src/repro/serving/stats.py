@@ -52,6 +52,10 @@ class EngineStats:
     prefill_fetched: int = 0
     prefill_tokens: int = 0
     prefill_chunks: int = 0
+    # first tokens sampled from prefill logits (one per request / batch
+    # row) — kept apart from the decode-step ``tokens`` counter so decode
+    # rates stay per-step, but folded into ``generated_tokens`` totals
+    first_tokens: int = 0
     # live host-execution channel (repro.hostexec): cache-miss expert
     # groups the cost-model dispatcher ran on the CPU, the token
     # assignments they carried, and the total executed non-resident
@@ -64,6 +68,13 @@ class EngineStats:
     per_layer_accesses: Tuple[int, ...] = ()
 
     # -- derived rates (all zero-guarded) ---------------------------------
+    @property
+    def generated_tokens(self) -> int:
+        """Total generated output tokens: decode-step tokens plus the
+        first token of every request/row (sampled from prefill logits) —
+        the number token-based throughput should divide by."""
+        return self.tokens + self.first_tokens
+
     @property
     def hit_rate(self) -> float:
         return self.hits / max(self.accesses, 1)
@@ -104,6 +115,7 @@ class EngineStats:
         d = {k: int(v) for k, v in asdict(self).items()
              if not isinstance(v, tuple)}
         d.update(
+            generated_tokens=int(self.generated_tokens),
             hit_rate=float(self.hit_rate),
             prefetch_hit_rate=float(self.prefetch_hit_rate),
             prefetch_waste_rate=float(self.prefetch_waste_rate),
@@ -120,18 +132,29 @@ class EngineStats:
 @dataclass(frozen=True)
 class RunStats:
     """One scheduler run: request accounting around an EngineStats
-    snapshot. Engine counters and rates are reachable directly
-    (``run.hit_rate`` delegates to ``run.engine.hit_rate``)."""
+    snapshot — including the overlapped-admission channel
+    (``prefill_pending`` slots warming right now, cumulative
+    ``admission_stalls`` ticks with a request waiting in queue, and
+    ``queue_rejected`` bounded-admission rejections). Engine counters and
+    rates are reachable directly (``run.hit_rate`` delegates to
+    ``run.engine.hit_rate``)."""
     engine: EngineStats = field(default_factory=EngineStats)
     requests_submitted: int = 0
     requests_finished: int = 0
     requests_active: int = 0
     requests_queued: int = 0
+    prefill_pending: int = 0
+    admission_stalls: int = 0
+    queue_rejected: int = 0
 
     def __getattr__(self, name):
         # delegate unknown attributes to the engine snapshot so call sites
-        # read run.hits / run.hit_rate without the .engine hop
-        if name.startswith("__"):
+        # read run.hits / run.hit_rate without the .engine hop. "engine"
+        # itself (and dunders) must raise a plain AttributeError: during
+        # copy/pickle reconstruction the instance has no fields yet, and
+        # delegating the "engine" miss to self.engine would recurse
+        # forever
+        if name.startswith("__") or name == "engine":
             raise AttributeError(name)
         return getattr(self.engine, name)
 
@@ -141,5 +164,8 @@ class RunStats:
             "requests_finished": int(self.requests_finished),
             "requests_active": int(self.requests_active),
             "requests_queued": int(self.requests_queued),
+            "prefill_pending": int(self.prefill_pending),
+            "admission_stalls": int(self.admission_stalls),
+            "queue_rejected": int(self.queue_rejected),
             "engine": self.engine.to_json(),
         }

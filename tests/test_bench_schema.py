@@ -8,9 +8,11 @@ string-keyed dict mixed a numpy array into the scalar channel and made
 ``{"results": [...], "runs": [...]}`` schema CI archives, with every run
 entry shaped like a typed-stats export.
 """
+import copy
 import importlib
 import json
 import pathlib
+import pickle
 import sys
 
 import pytest
@@ -25,7 +27,7 @@ SAMPLE = EngineStats(hits=7, accesses=12, host_assignments=5,
                      prefetch_issued=4, prefetch_hits=2, prefetch_wasted=1,
                      predicted=8, predicted_correct=6,
                      prefill_hits=9, prefill_accesses=20, prefill_fetched=4,
-                     prefill_tokens=10, prefill_chunks=2,
+                     prefill_tokens=10, prefill_chunks=2, first_tokens=2,
                      cpu_expert_calls=2, cpu_tokens=3, miss_expert_groups=3,
                      per_layer_hits=(3, 4), per_layer_accesses=(6, 6))
 
@@ -33,14 +35,16 @@ ENGINE_KEYS = {
     "hits", "accesses", "host_assignments", "fetched_experts", "tokens",
     "steps", "prefetch_issued", "prefetch_hits", "prefetch_wasted",
     "predicted", "predicted_correct", "prefill_hits", "prefill_accesses",
-    "prefill_fetched", "prefill_tokens", "prefill_chunks",
+    "prefill_fetched", "prefill_tokens", "prefill_chunks", "first_tokens",
+    "generated_tokens",
     "cpu_expert_calls", "cpu_tokens", "miss_expert_groups",
     "hit_rate", "prefetch_hit_rate", "prefetch_waste_rate",
     "prediction_accuracy", "prefill_hit_rate", "cpu_offload_rate",
     "per_layer_hits", "per_layer_accesses", "per_layer_hit_rates",
 }
 RUN_KEYS = {"requests_submitted", "requests_finished", "requests_active",
-            "requests_queued", "engine"}
+            "requests_queued", "prefill_pending", "admission_stalls",
+            "queue_rejected", "engine"}
 
 
 def test_engine_stats_json_round_trips():
@@ -53,6 +57,8 @@ def test_engine_stats_json_round_trips():
     assert d["per_layer_hit_rates"] == [0.5, 4 / 6]
     assert d["prefill_hit_rate"] == pytest.approx(9 / 20)
     assert d["cpu_offload_rate"] == pytest.approx(3 / 5)
+    # first tokens fold into reported totals (tokens stays decode-only)
+    assert d["generated_tokens"] == d["tokens"] + d["first_tokens"] == 8
 
 
 def test_run_stats_delegate_and_round_trip():
@@ -64,6 +70,30 @@ def test_run_stats_delegate_and_round_trip():
     assert set(d) == RUN_KEYS
     assert set(d["engine"]) == ENGINE_KEYS
     assert json.loads(json.dumps(d)) == d
+
+
+def test_run_stats_survive_copy_and_pickle():
+    """Regression: the delegating __getattr__ used to recurse infinitely
+    on instances whose fields are not set yet (copy.copy / pickle
+    reconstruct via __new__ before filling the dict, then probe
+    attributes) — "engine" itself must raise a plain AttributeError
+    instead of delegating to self.engine."""
+    rs = RunStats(engine=SAMPLE, requests_submitted=3, requests_finished=2,
+                  prefill_pending=1, admission_stalls=4, queue_rejected=1)
+    for clone in (copy.copy(rs), copy.deepcopy(rs),
+                  pickle.loads(pickle.dumps(rs))):
+        assert clone.requests_submitted == 3
+        assert clone.engine == SAMPLE
+        assert clone.hits == 7                     # delegation still works
+        assert clone.hit_rate == pytest.approx(7 / 12)
+        assert clone.admission_stalls == 4
+        assert clone.to_json() == rs.to_json()
+    # a half-built instance raises AttributeError (not RecursionError)
+    empty = object.__new__(RunStats)
+    with pytest.raises(AttributeError):
+        empty.engine
+    with pytest.raises(AttributeError):
+        empty.hits
 
 
 def test_zero_guarded_rates_on_empty_stats():
@@ -102,6 +132,36 @@ def test_dump_json_schema(tmp_path, monkeypatch):
     common.dump_json(str(path))
     doc = json.loads(path.read_text())
     assert set(doc["runs"][1]["stats"]) == ENGINE_KEYS
+
+
+def test_admission_overlap_artifact_shape(tmp_path, monkeypatch):
+    """BENCH_admission_overlap.json: the CI smoke artifact pairs an
+    off/on run whose stats carry the overlapped-admission channel
+    (prefill_pending / admission_stalls / queue_rejected on the run,
+    first_tokens / generated_tokens on the engine) next to the
+    established-latency results."""
+    importlib.import_module("benchmarks.admission_overlap")  # importable
+    monkeypatch.setattr(common, "_RESULTS", [])
+    monkeypatch.setattr(common, "_RUNS", [])
+    for name in ("admission_overlap.off", "admission_overlap.on"):
+        common.emit(f"{name}.stall", 1234.5, "max established gap")
+        common.record_run(name, RunStats(engine=SAMPLE,
+                                         requests_submitted=3,
+                                         requests_finished=3,
+                                         admission_stalls=2))
+    path = tmp_path / "BENCH_admission_overlap.json"
+    common.dump_json(str(path))
+    doc = json.loads(path.read_text())
+    assert [r["name"] for r in doc["runs"]] == ["admission_overlap.off",
+                                                "admission_overlap.on"]
+    for run in doc["runs"]:
+        stats = run["stats"]
+        assert set(stats) == RUN_KEYS
+        assert {"prefill_pending", "admission_stalls",
+                "queue_rejected"} <= set(stats)
+        assert set(stats["engine"]) == ENGINE_KEYS
+        assert stats["engine"]["generated_tokens"] == \
+            stats["engine"]["tokens"] + stats["engine"]["first_tokens"]
 
 
 def test_host_compute_artifact_shape_and_cost_model(tmp_path, monkeypatch):

@@ -72,9 +72,16 @@ def test_decision_table_matches_policy_and_scales_with_tokens():
 
 
 def test_timings_for_resolves_reduced_arch_names():
-    assert timings_for("mixtral-8x7b") is MIXTRAL_TIMINGS
-    assert timings_for("phi35-moe") is PAPER_TIMINGS["phi35-moe"]
-    assert timings_for("unknown-arch") is MIXTRAL_TIMINGS
+    import warnings
+    # calibrated archs resolve silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert timings_for("mixtral-8x7b") is MIXTRAL_TIMINGS
+        assert timings_for("phi35-moe") is PAPER_TIMINGS["phi35-moe"]
+    # unknown archs still fall back to Mixtral, but never silently: the
+    # cost decisions are uncalibrated and the caller must hear about it
+    with pytest.warns(UserWarning, match="uncalibrated"):
+        assert timings_for("unknown-arch") is MIXTRAL_TIMINGS
 
 
 # ---------------------------------------------------------------------------

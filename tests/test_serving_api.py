@@ -164,14 +164,17 @@ def test_chunked_prefill_warms_first_decode_step(setup):
     assert warm > cold, (warm, cold)
 
 
-def test_prefill_trace_matches_backbone_prefill(setup):
-    """The engine's prefill trace re-derives the backbone's prefill mode
-    for the homogeneous stack (it must also emit the routing trace); this
-    pins the mirror: bitwise-identical KV state on the same padded
-    prompt, so drift in either implementation fails loudly."""
+def test_prefill_is_the_backbone_with_trace_emission(setup):
+    """There is ONE prefill implementation: the engine routes through
+    ``transformer.backbone(mode="prefill")``, whose ``want_trace`` flag
+    emits the routing trace. Pins (a) bitwise KV + logits parity between
+    the engine prefill and the backbone, (b) that emitting the trace
+    perturbs NOTHING (same KV, same logits bit for bit), and (c) that the
+    emitted trace is exactly the routing of the emitted h2."""
     import jax.numpy as jnp
     from repro.models import model as model_lib
     from repro.models import transformer
+    from repro.models.moe import route
     cfg, params = setup
     eng, _ = _build(cfg, params, prefill_chunk=0)
     prompt = _prompts(cfg, [24])[0]
@@ -185,14 +188,76 @@ def test_prefill_trace_matches_backbone_prefill(setup):
         lambda a, b: np.testing.assert_array_equal(np.asarray(a),
                                                    np.asarray(b)),
         st_engine["scan"], st_backbone["scan"])
-    # and the first-token logits: the backbone's hidden state at the last
+    # the first-token logits: the backbone's hidden state at the last
     # REAL prompt position produces bitwise the engine's prefill logits
-    x, _, _ = transformer.backbone(params, {"tokens": jnp.asarray(padded)},
-                                   cfg, "prefill", remat=False)
+    x, _, _, trace = transformer.backbone(
+        params, {"tokens": jnp.asarray(padded)}, cfg, "prefill",
+        remat=False, want_trace=True)
     lg_backbone = transformer.lm_logits(
         params, x[:, len(prompt) - 1:len(prompt)], cfg)
     np.testing.assert_array_equal(np.asarray(lg_engine),
                                   np.asarray(lg_backbone))
+    # trace emission changes nothing: the trace-bearing padded prefill
+    # returns the SAME logits and KV as the bypass call above
+    lg_t, st_t, tr = eng._padded_prefill(prompt[None], want_trace=True)
+    np.testing.assert_array_equal(np.asarray(lg_engine), np.asarray(lg_t))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        st_engine["scan"], st_t["scan"])
+    # and the trace is self-consistent: top_i/top_w ARE the routing of h2
+    L, K = cfg.num_layers, cfg.moe.top_k
+    assert tr["top_i"].shape == (L, 1, cap, K)
+    for layer in (0, L - 1):
+        lp = jax.tree.map(lambda a: a[layer], params["scan"]["s0"])
+        _, ti, tw = route(lp["moe"]["router"],
+                          tr["h2"][layer].reshape(cap, -1), K)
+        np.testing.assert_array_equal(np.asarray(ti),
+                                      np.asarray(tr["top_i"][layer, 0]))
+        np.testing.assert_array_equal(np.asarray(tw),
+                                      np.asarray(tr["top_w"][layer, 0]))
+
+
+def test_prefill_ticket_resumes_and_matches_monolithic(setup):
+    """start_prefill/advance_prefill are the resumable decomposition of
+    prefill_chunked: advancing a ticket one chunk at a time accumulates
+    exactly the same prefill channel (and the same logits/state) as the
+    one-call drain, and the cursor/done/remaining bookkeeping is sane."""
+    cfg, params = setup
+    prompt = _prompts(cfg, [22])[0]               # 3 chunks of 8
+
+    eng_a, _ = _build(cfg, params)
+    lg_a, st_a = eng_a.prefill_chunked(prompt, chunk=8)
+    s_a = eng_a.stats
+
+    eng_b, _ = _build(cfg, params)
+    ticket = eng_b.start_prefill(prompt, chunk=8)
+    assert ticket.n_chunks == 3 and ticket.remaining == 3
+    assert not ticket.done
+    np.testing.assert_array_equal(np.asarray(lg_a),
+                                  np.asarray(ticket.logits))
+    steps = 0
+    while not eng_b.advance_prefill(ticket, 1):
+        steps += 1
+        assert ticket.cursor == steps
+    assert steps == 2 and ticket.done and ticket.remaining == 0
+    s_b = eng_b.stats
+    for k in ("prefill_hits", "prefill_accesses", "prefill_fetched",
+              "prefill_tokens", "prefill_chunks"):
+        assert getattr(s_a, k) == getattr(s_b, k), k
+    assert s_b.prefill_tokens == 22 and s_b.prefill_chunks == 3
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        st_a, ticket.state)
+    # advancing a done ticket is a no-op
+    assert eng_b.advance_prefill(ticket, 5)
+    assert eng_b.stats.prefill_chunks == 3
+    # bypass geometry: chunk=0 tickets are born done, no trace held
+    eng_c, _ = _build(cfg, params, prefill_chunk=0)
+    t0 = eng_c.start_prefill(prompt)
+    assert t0.done and t0.n_chunks == 0 and t0.top_i is None
+    assert eng_c.stats.prefill_accesses == 0
 
 
 def test_prefill_chunk_size_does_not_change_residency_effect(setup):

@@ -82,6 +82,25 @@ def test_lru_beats_static_random_on_average(setup):
 def test_stats_accounting_consistent(setup):
     cfg, params, prompt = setup
     eng = _engine(cfg, params)
-    _, stats = eng.generate(prompt, steps=12)
+    out, stats = eng.generate(prompt, steps=12)
     assert stats.accesses == stats.hits + stats.host_assignments
     assert stats.fetched_experts <= stats.host_assignments
+
+
+def test_generate_counts_first_tokens(setup):
+    """The first token of every row is sampled from prefill logits, not a
+    decode step — it must still count toward token totals (the old
+    ``tokens``-only throughput undercounted by one per sequence)."""
+    cfg, params, prompt = setup
+    eng = _engine(cfg, params)
+    out, stats = eng.generate(prompt, steps=12)
+    B = prompt.shape[0]
+    assert out.shape == (B, 12)
+    assert stats.first_tokens == B
+    assert stats.tokens == B * 11                 # decode-step tokens only
+    assert stats.generated_tokens == B * 12 == out.size
+    # per-request path: prefill_request counts exactly one first token
+    eng2 = _engine(cfg, params)
+    eng2.prefill_request(prompt[0])
+    assert eng2.stats.first_tokens == 1
+    assert eng2.stats.tokens == 0
