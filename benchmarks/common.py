@@ -19,11 +19,14 @@ def run_live_scheduler(policy: str = "lru", slots: int = 4,
                        arch: str = "mixtral-8x7b", seed: int = 0,
                        prefetch: bool = False, prefetch_min_prob: float = 0.0,
                        prefill_chunk: int = 8, host_compute: bool = False,
-                       host_threads: int = 8, host_backend: str = "jax"):
+                       host_threads: int = 8, host_backend: str = "jax",
+                       **serving_overrides):
     """Serve `requests` random prompts through the continuous-batching
     scheduler on a reduced live model (one shared expert cache, grouped
     gmm execution, per-slot KV positions, cache-warming chunked prefill,
-    optional cross-layer speculative prefetch). Returns
+    optional cross-layer speculative prefetch). Extra keyword arguments
+    pass straight into ``EngineConfig`` (e.g. ``kv_paged=True``,
+    ``prefetch_rank_votes=False``). Returns
     (outputs, RunStats, wall_seconds)."""
     import numpy as np
     from repro.config import get_config, reduced
@@ -37,7 +40,8 @@ def run_live_scheduler(policy: str = "lru", slots: int = 4,
                                   prefill_chunk=prefill_chunk,
                                   host_compute=host_compute,
                                   host_threads=host_threads,
-                                  host_backend=host_backend),
+                                  host_backend=host_backend,
+                                  **serving_overrides),
                      seed=seed)
     rng = np.random.default_rng(seed)
     for _ in range(requests):

@@ -26,12 +26,13 @@ SLOTS = 4
 STEPS = 24
 
 
-def bench(prefetch: bool):
+def bench(prefetch: bool, rank_votes: bool = True):
     from repro.serving import build
 
     eng, _ = build("mixtral-8x7b",
                    serving=dict(max_batch=SLOTS, capacity=64,
-                                prefetch=prefetch),
+                                prefetch=prefetch,
+                                prefetch_rank_votes=rank_votes),
                    seed=0)
     cfg = eng.cfg
 
@@ -39,7 +40,7 @@ def bench(prefetch: bool):
     prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(0),
                                            (SLOTS, 8), 0,
                                            cfg.vocab_size), np.int32)
-    _, stats = eng.generate(prompt, steps=STEPS)
+    out, stats = eng.generate(prompt, steps=STEPS)
 
     # step-latency probe: one jitted decode step, steady state
     state = eng.init_slots()
@@ -53,7 +54,7 @@ def bench(prefetch: bool):
         jax.block_until_ready(logits)
 
     us = timeit(step, iters=10, warmup=3)
-    return us, stats
+    return us, stats, out
 
 
 def main() -> None:
@@ -63,10 +64,21 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     print("=== decode step: cross-layer speculative prefetch on/off ===")
-    us_off, s_off = bench(prefetch=False)
-    us_on, s_on = bench(prefetch=True)
+    us_off, s_off, _ = bench(prefetch=False)
+    us_on, s_on, out_rv = bench(prefetch=True)
     record_run("decode_prefetch.off", s_off)
     record_run("decode_prefetch.on", s_on)
+    # batch-aware reservation ranking self-check: vote-ranked claims must
+    # not lose speculative hits vs insertion order, and never touch tokens
+    _, s_nrv, out_nrv = bench(prefetch=True, rank_votes=False)
+    assert np.array_equal(out_rv, out_nrv), \
+        "rank_votes changed generated tokens (must be residency-only)"
+    assert s_on.prefetch_hits >= s_nrv.prefetch_hits, \
+        (s_on.prefetch_hits, s_nrv.prefetch_hits)
+    emit("decode_step.rank_votes_spec_hits",
+         float(s_on.prefetch_hits - s_nrv.prefetch_hits),
+         f"spec hits {s_nrv.prefetch_hits} -> {s_on.prefetch_hits} with "
+         f"vote-ranked reservations (tokens bit-identical)")
     hr_off = s_off.hit_rate
     hr_on = s_on.hit_rate
     emit("decode_step.prefetch_off", us_off,

@@ -50,7 +50,7 @@ def live_trace(steps: int = 200):
 
 
 def live_serving(policy: str, prefetch: bool = False,
-                 prefetch_min_prob: float = 0.0):
+                 prefetch_min_prob: float = 0.0, rank_votes: bool = True):
     """Measured stats of the real serving path: the batched engine +
     continuous-batching scheduler, 4 concurrent requests sharing one
     expert cache (grouped gmm execution, per-slot KV positions, optional
@@ -58,9 +58,12 @@ def live_serving(policy: str, prefetch: bool = False,
     Returns (outputs {rid: tokens}, RunStats)."""
     from .common import record_run, run_live_scheduler
     outs, stats, _ = run_live_scheduler(policy=policy, prefetch=prefetch,
-                                        prefetch_min_prob=prefetch_min_prob)
+                                        prefetch_min_prob=prefetch_min_prob,
+                                        prefetch_rank_votes=rank_votes)
     gate = f".gate{prefetch_min_prob}" if prefetch_min_prob else ""
-    record_run(f"fig6.live.{policy}{'.pf' if prefetch else ''}{gate}", stats)
+    rv = ".norank" if not rank_votes else ""
+    record_run(f"fig6.live.{policy}{'.pf' if prefetch else ''}{gate}{rv}",
+               stats)
     return outs, stats
 
 
@@ -182,6 +185,25 @@ def main() -> None:
             assert pfg.prefetch_wasted < pf.prefetch_wasted, \
                 ("confidence gating must cut wasted prefetches",
                  pfg.prefetch_wasted, pf.prefetch_wasted)
+        # batch-aware reservation ranking: vote-ranked way claims must
+        # never lose speculative hits vs insertion order, and (like every
+        # prefetch knob) never change the generated tokens
+        outs_nr, pf_nr = live_serving("lru", prefetch=True,
+                                      rank_votes=False)
+        emit("live.mixtral_reduced.served_lru_prefetch_rank_votes",
+             pf.prefetch_hits * 1e6,
+             f"spec_hits ranked={pf.prefetch_hits} "
+             f"unranked={pf_nr.prefetch_hits} "
+             f"hit_rate {pf_nr.hit_rate:.3f} -> {pf.hit_rate:.3f}")
+        assert sorted(outs_nr) == sorted(outs_pf)
+        for rid in outs_pf:
+            np.testing.assert_array_equal(outs_nr[rid], outs_pf[rid])
+        assert pf.prefetch_hits >= pf_nr.prefetch_hits, \
+            ("vote ranking must not lose speculative hits",
+             pf.prefetch_hits, pf_nr.prefetch_hits)
+        assert pf.hit_rate >= pf_nr.hit_rate, \
+            ("vote ranking must keep the demand hit rate non-decreasing",
+             pf.hit_rate, pf_nr.hit_rate)
 
 
 if __name__ == "__main__":

@@ -204,7 +204,8 @@ def access(state: CacheState, layer: jax.Array, experts: jax.Array,
 
 
 def reserve(state: CacheState, layer: jax.Array, experts: jax.Array,
-            policy: str, protect: Optional[jax.Array] = None
+            policy: str, protect: Optional[jax.Array] = None,
+            priority: Optional[jax.Array] = None
             ) -> Tuple[CacheState, jax.Array, jax.Array]:
     """Speculatively insert *predicted* experts for a future probe.
 
@@ -220,18 +221,27 @@ def reserve(state: CacheState, layer: jax.Array, experts: jax.Array,
     would otherwise evict itself); if every way is protected the pick is
     skipped, not forced. Callers that issue picks one at a time (e.g. a
     transfer-budget gate) pass the full prediction batch as ``protect``.
-    Newly inserted entries are PENDING until :func:`land`, so a probe in
-    the same step still misses them. experts: [A] int32, duplicates and
-    -1 masks allowed. Returns (new state, issued [A] bool — picks whose
-    reservation actually claimed a slot and therefore needs its weights
-    fetched, way [A] int32 — the claimed way; -1 where nothing was
-    issued).
+    ``priority`` ([A] int32, >= 0, default 0) adds to the inserted
+    entry's age stamp: a higher-priority reservation reads as more
+    recently used, so later min-age evictions take the low-priority
+    reservations first — retention ranking WITHIN the reserved cohort
+    without perturbing the claim order. Keep priorities small (batch
+    counts, not clocks): they must stay far below the per-step clock
+    advance so a boost expires after the next demand pass instead of
+    pinning the entry. Newly inserted entries are PENDING until
+    :func:`land`, so a probe in the same step still misses them.
+    experts: [A] int32, duplicates and -1 masks allowed. Returns (new
+    state, issued [A] bool — picks whose reservation actually claimed a
+    slot and therefore needs its weights fetched, way [A] int32 — the
+    claimed way; -1 where nothing was issued).
     """
     spec = policy_spec(policy)
     n = state.num_indexes
     covered = layer < n
     row = jnp.where(covered, layer, 0)
     protect = experts if protect is None else protect
+    if priority is None:
+        priority = jnp.zeros(experts.shape, jnp.int32)
 
     if spec.is_static:
         zeros = jnp.zeros(experts.shape, bool)
@@ -247,7 +257,8 @@ def reserve(state: CacheState, layer: jax.Array, experts: jax.Array,
     # are irrelevant — a protected victim is never inserted over
     PROTECT = jnp.iinfo(jnp.int32).max
 
-    def step(carry, e):
+    def step(carry, xs):
+        e, p = xs
         t, a, f, c = carry
         valid = covered & (e >= 0)
         present = (t == e).any() & valid
@@ -258,12 +269,13 @@ def reserve(state: CacheState, layer: jax.Array, experts: jax.Array,
         victim = jnp.argmin(victim_score).astype(jnp.int32)
         insert = valid & ~present & ~prot[victim]
         t = t.at[victim].set(jnp.where(insert, e, t[victim]))
-        a = a.at[victim].set(jnp.where(insert, c, a[victim]))
+        a = a.at[victim].set(jnp.where(insert, c + p, a[victim]))
         f = f.at[victim].set(jnp.where(insert, FLAG_PENDING, f[victim]))
         return (t, a, f, c + 1), (insert, jnp.where(insert, victim, -1))
 
     (tags_l, age_l, flag_l, clock), (issued, ways) = jax.lax.scan(
-        step, (tags_l, age_l, flag_l, state.clock), experts)
+        step, (tags_l, age_l, flag_l, state.clock),
+        (experts, priority.astype(jnp.int32)))
 
     tags = jax.lax.dynamic_update_index_in_dim(state.tags, tags_l, row, 0)
     age = jax.lax.dynamic_update_index_in_dim(state.age, age_l, row, 0)

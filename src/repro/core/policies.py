@@ -133,7 +133,8 @@ class NumpyCache:
             self.clock += 1
         return out
 
-    def reserve(self, layer: int, experts, protect=None) -> List[bool]:
+    def reserve(self, layer: int, experts, protect=None,
+                priority=None) -> List[bool]:
         """Speculatively insert predicted experts (no demand accounting).
 
         Mirrors repro.core.cache.reserve: policy-correct victim selection
@@ -143,16 +144,20 @@ class NumpyCache:
         A out from under the very probe the batch is staged for (fatal at
         low associativity); callers issuing picks one at a time under a
         transfer budget pass the full prediction batch as ``protect``.
-        Already-present experts are untouched, fresh inserts stay PENDING
-        until :meth:`land`. Returns the issued flags (True = fetch
-        enqueued)."""
+        ``priority`` (per-pick int, default 0) adds to the inserted
+        entry's age stamp so later min-age evictions take low-priority
+        reservations first. Already-present experts are untouched, fresh
+        inserts stay PENDING until :meth:`land`. Returns the issued flags
+        (True = fetch enqueued)."""
         out = []
         n, m = self.tags.shape
         covered = layer < n
         if protect is None:
             protect = experts
+        if priority is None:
+            priority = [0] * len(experts)
         batch = np.asarray([e for e in protect if e >= 0], np.int64)
-        for e in experts:
+        for e, pr in zip(experts, priority):
             if not covered or e < 0 or self.spec.is_static:
                 out.append(False)
                 continue
@@ -174,7 +179,7 @@ class NumpyCache:
                 way = int(np.argmin(np.where(prot, np.iinfo(np.int64).max,
                                              row_a)))
             row_t[way] = e
-            row_a[way] = self.clock
+            row_a[way] = self.clock + int(pr)
             row_f[way] = FLAG_PENDING
             self.clock += 1
             self.reserved += 1

@@ -74,7 +74,8 @@ def dispatch_execute(tiers: collab.ExpertTiers, layer: jax.Array,
                      x: jax.Array, top_w: jax.Array,
                      pr: collab.ProbeResult, ccfg: CacheConfig,
                      cpu_table: jax.Array,
-                     executor: Optional[HostExpertExecutor] = None
+                     executor: Optional[HostExpertExecutor] = None,
+                     fuse_small: int = 0,
                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array,
                                                  jax.Array],
                                 Dict[str, jax.Array]]:
@@ -82,8 +83,10 @@ def dispatch_execute(tiers: collab.ExpertTiers, layer: jax.Array,
 
     Same signature contract as :func:`repro.core.collaborative.execute`
     plus the split table and (for the callback backend) the executor;
-    returns (y [T, D], host-tier gathers for commit()'s post-fetch,
-    dispatch stats {cpu_expert_calls, cpu_tokens})."""
+    ``fuse_small`` is the executor's small-group fusion threshold (the
+    stat mirrors it for both backends); returns (y [T, D], host-tier
+    gathers for commit()'s post-fetch, dispatch stats
+    {cpu_expert_calls, cpu_tokens, miss_expert_groups, fused_groups})."""
     T, K = top_w.shape
     tok, xbuf = collab._stage_dispatch(x, K, pr)
     w, host_w = collab._gather_group_weights(tiers, layer, pr, ccfg)
@@ -100,7 +103,7 @@ def dispatch_execute(tiers: collab.ExpertTiers, layer: jax.Array,
         ybuf_host = jax.pure_callback(
             executor.compute_groups,
             jax.ShapeDtypeStruct(xbuf.shape, xbuf.dtype),
-            layer, pr.rep_e, to_cpu, xbuf)
+            layer, pr.rep_e, to_cpu, xbuf, counts)
         ybuf = jnp.where(to_cpu[:, None, None], ybuf_host, ybuf_dev)
     else:
         # pure-JAX fallback: the CPU-miss groups' rows of ybuf_dev were
@@ -122,5 +125,11 @@ def dispatch_execute(tiers: collab.ExpertTiers, layer: jax.Array,
         # (fetched_experts undercounts it: an expert evicted within the
         # step still paid its read)
         "miss_expert_groups": executed_miss.sum().astype(jnp.int32),
+        # groups the executor's fusion lane batches (to_cpu already
+        # excludes empty groups via cpu_table[0]=False); mirrored for
+        # the jax backend so the stat channel is backend-invariant
+        "fused_groups": (
+            (to_cpu & (counts <= fuse_small)).sum().astype(jnp.int32)
+            if fuse_small > 0 else jnp.int32(0)),
     }
     return y, host_w, dstats

@@ -44,13 +44,21 @@ class HostExpertExecutor:
     w1/w3: [L, E, D, F]; w2: [L, E, F, D] — converted to float32 once at
     construction (the compute dtype of the CPU lane). ``threads`` sizes
     the pool; 1 runs inline (no pool, no handoff overhead).
+
+    ``fuse_small`` batches the step's small miss groups (valid token
+    count <= fuse_small) into ONE stacked ``np.matmul`` per FFN stage
+    instead of one pool task each: a 1-2 token group's matmul is too
+    thin to amortize the thread handoff, but a ``[Gs, A, D] @ [Gs, D,
+    F]`` batched GEMM over the stacked small groups runs them in a
+    single BLAS call. 0 disables fusion.
     """
 
-    def __init__(self, w1, w3, w2, threads: int = 8):
+    def __init__(self, w1, w3, w2, threads: int = 8, fuse_small: int = 0):
         self.w1 = np.asarray(w1, np.float32)
         self.w3 = np.asarray(w3, np.float32)
         self.w2 = np.asarray(w2, np.float32)
         self.threads = max(1, int(threads))
+        self.fuse_small = max(0, int(fuse_small))
         self._pool: Optional[ThreadPoolExecutor] = (
             ThreadPoolExecutor(max_workers=self.threads,
                                thread_name_prefix="hostexec")
@@ -60,21 +68,39 @@ class HostExpertExecutor:
         # EngineStats channel; these confirm the pool really ran
         self.calls = 0
         self.groups = 0
+        self.fused = 0
 
-    def compute_groups(self, layer, rep_e, run, xbuf) -> np.ndarray:
+    def compute_groups(self, layer, rep_e, run, xbuf,
+                       counts=None) -> np.ndarray:
         """One step's host lane: compute the masked groups' FFNs.
 
         layer — scalar int; rep_e [G] unique expert per group (-1 pad);
         run [G] bool — groups dispatched to the CPU; xbuf [G, A, D]
-        activation dispatch buffer. Returns [G, A, D] in xbuf's dtype,
-        zeros for groups the mask skips (the dispatcher never reads
-        those rows)."""
+        activation dispatch buffer; counts [G] int32 valid tokens per
+        group (optional — enables the small-group fusion lane). Returns
+        [G, A, D] in xbuf's dtype, zeros for groups the mask skips (the
+        dispatcher never reads those rows)."""
         layer = int(layer)
         rep_e = np.asarray(rep_e)
         todo = np.nonzero(np.asarray(run))[0]
         out = np.zeros(xbuf.shape, np.float32)
         if todo.size:
             x32 = np.asarray(xbuf, np.float32)
+            if counts is not None and self.fuse_small > 0:
+                cnt = np.asarray(counts)
+                small = todo[cnt[todo] <= self.fuse_small]
+                big = todo[cnt[todo] > self.fuse_small]
+            else:
+                small = np.zeros((0,), np.int64)
+                big = todo
+            if small.size:
+                es = rep_e[small].astype(np.int64)
+                xs = x32[small]                              # [Gs, A, D]
+                h1 = np.matmul(xs, self.w1[layer, es])       # [Gs, A, F]
+                h = (h1 / (1.0 + np.exp(-h1))) * np.matmul(
+                    xs, self.w3[layer, es])
+                out[small] = np.matmul(h, self.w2[layer, es])
+                self.fused += int(small.size)
 
             def one(g: int) -> None:
                 e = int(rep_e[g])
@@ -82,10 +108,10 @@ class HostExpertExecutor:
                                          self.w3[layer, e],
                                          self.w2[layer, e])
 
-            if self._pool is not None and todo.size > 1:
-                list(self._pool.map(one, todo))
+            if self._pool is not None and big.size > 1:
+                list(self._pool.map(one, big))
             else:
-                for g in todo:
+                for g in big:
                     one(g)
         self.calls += 1
         self.groups += int(todo.size)

@@ -1,5 +1,7 @@
 from .decode_attention import flash_decode
-from .ops import decode_attention
+from .paged import paged_flash_decode
+from .ops import decode_attention, paged_decode_attention
 from . import ref
 
-__all__ = ["flash_decode", "decode_attention", "ref"]
+__all__ = ["flash_decode", "paged_flash_decode", "decode_attention",
+           "paged_decode_attention", "ref"]

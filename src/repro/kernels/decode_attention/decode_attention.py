@@ -37,7 +37,7 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0]
+    pos = pos_ref[pl.program_id(0)]
     q = q_ref[0, 0].astype(jnp.float32)              # [group, hd]
     k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bs, hd]
     v = v_ref[0, :, 0, :].astype(jnp.float32)
@@ -69,13 +69,17 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
                  *, window: int = -1, bs: int = 512,
                  interpret: bool = False) -> jax.Array:
-    """q: [B, H, hd]; k/v: [B, S, Hk, hd]; pos: [1] int32 -> [B, H, hd]."""
+    """q: [B, H, hd]; k/v: [B, S, Hk, hd]; pos: scalar or [B] int32 (a
+    vector carries per-row cache fill levels — the serving engine's
+    continuous batch decodes every slot at its own position) ->
+    [B, H, hd]."""
     B, H, hd = q.shape
     S, Hk = k.shape[1], k.shape[2]
     group = H // Hk
     bs = min(bs, S)
     assert S % bs == 0, (S, bs)
     n_s = S // bs
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     qg = q.reshape(B, Hk, group, hd)
     out = pl.pallas_call(
         functools.partial(_decode_kernel, bs=bs, n_s=n_s, window=window),
@@ -94,5 +98,5 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
             pltpu.VMEM((group, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(pos.astype(jnp.int32), qg, k, v)
+    )(pos, qg, k, v)
     return out.reshape(B, H, hd)

@@ -1,28 +1,113 @@
-"""Pure-jnp oracle for flash-decode attention."""
+"""Pure-jnp oracles for flash-decode attention (dense and paged)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          pos: jax.Array, window: int = -1) -> jax.Array:
     """One-token GQA attention over a KV cache.
 
-    q: [B, H, hd]; k/v: [B, S, Hk, hd]; pos: scalar — entries j <= pos are
-    valid (the new token's kv is assumed already written at slot pos).
-    window > 0 additionally masks j < pos - window + 1. Returns [B, H, hd].
+    q: [B, H, hd]; k/v: [B, S, Hk, hd]; pos: scalar or [B] — row b's
+    entries j <= pos_b are valid (the new token's kv is assumed already
+    written at slot pos_b). window > 0 additionally masks
+    j < pos - window + 1. Returns [B, H, hd].
     """
     B, H, hd = q.shape
     S, Hk = k.shape[1], k.shape[2]
     group = H // Hk
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     qg = q.reshape(B, Hk, group, hd).astype(jnp.float32) * hd ** -0.5
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32))
     j = jnp.arange(S)
-    valid = j <= pos
+    valid = j[None, :] <= pos_b[:, None]              # [B, S]
     if window > 0:
-        valid &= j > pos - window
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+        valid &= (pos_b[:, None] - j[None, :]) < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
     return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_gather(k_pages: jax.Array, page_indptr, page_indices,
+                 max_pages: int) -> jax.Array:
+    """Gather each row's pages into a dense [B, max_pages*page_size, Hk,
+    hd] cache (rows padded with page 0 — callers mask by length)."""
+    indptr = np.asarray(page_indptr)
+    indices = np.asarray(page_indices)
+    B = len(indptr) - 1
+    rows = []
+    for b in range(B):
+        ids = indices[indptr[b]:indptr[b + 1]]
+        pad = np.zeros(max_pages - len(ids), ids.dtype)
+        rows.append(jnp.concatenate(
+            [k_pages[i] for i in np.concatenate([ids, pad])], axis=0))
+    return jnp.stack(rows)
+
+
+def paged_lengths(page_indptr, last_page_len, page_size: int) -> np.ndarray:
+    """Valid token count per row from the CSR page table."""
+    indptr = np.asarray(page_indptr)
+    n_pages = indptr[1:] - indptr[:-1]
+    return (n_pages - 1) * page_size + np.asarray(last_page_len)
+
+
+def paged_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_indptr, page_indices, last_page_len, *,
+                     max_pages: int, window: int = -1) -> jax.Array:
+    """Reference twin of :func:`..paged.paged_flash_decode`.
+
+    Replays the kernel's page-by-page online-softmax update with the
+    SAME jnp ops on the SAME block shapes, in the same order, traced
+    under one jit — the interpret-mode kernel's ops also execute inside
+    its caller's jit, so the two compile identically and outputs match
+    BITWISE (an eager per-op replay drifts in the last float32 ulp
+    through different dot/transpose fusion). The page-table arrays are
+    consumed as static host values; test-sized inputs only.
+    """
+    B, H, hd = q.shape
+    page_size, Hk = k_pages.shape[1], k_pages.shape[2]
+    group = H // Hk
+    indptr = np.asarray(page_indptr)
+    indices = np.asarray(page_indices)
+    lastlen = np.asarray(last_page_len)
+    scale = hd ** -0.5
+
+    def replay(q, k_pages, v_pages):
+        qg = q.reshape(B, Hk, group, hd)
+        rows = []
+        for b in range(B):
+            n_pages = int(indptr[b + 1] - indptr[b])
+            pos = (n_pages - 1) * page_size + int(lastlen[b]) - 1
+            heads = []
+            for h in range(Hk):
+                qf = qg[b, h].astype(jnp.float32)
+                m = jnp.full((group, 1), -1e30, jnp.float32)
+                l = jnp.zeros((group, 1), jnp.float32)
+                acc = jnp.zeros((group, hd), jnp.float32)
+                for p_idx in range(max_pages):
+                    i = min(indptr[b] + p_idx, indptr[b + 1] - 1)
+                    k = k_pages[indices[i], :, h, :].astype(jnp.float32)
+                    v = v_pages[indices[i], :, h, :].astype(jnp.float32)
+                    s = jnp.dot(qf * scale, k.T,
+                                preferred_element_type=jnp.float32)
+                    j = p_idx * page_size + jax.lax.broadcasted_iota(
+                        jnp.int32, s.shape, 1)
+                    valid = (j <= pos) & (p_idx < n_pages)
+                    if window > 0:
+                        valid &= j > pos - window
+                    s = jnp.where(valid, s, -1e30)
+                    m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+                    p = jnp.exp(s - m_new)
+                    alpha = jnp.exp(m - m_new)
+                    l = l * alpha + p.sum(axis=-1, keepdims=True)
+                    acc = acc * alpha + jnp.dot(
+                        p, v, preferred_element_type=jnp.float32)
+                    m = m_new
+                heads.append((acc / jnp.maximum(l, 1e-30)).astype(q.dtype))
+            rows.append(jnp.stack(heads))
+        return jnp.stack(rows).reshape(B, H, hd)
+
+    return jax.jit(replay)(q, k_pages, v_pages)

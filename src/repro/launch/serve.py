@@ -5,7 +5,8 @@ continuous batching, or the plain generic path for non-MoE archs.
         --tokens 64 [--ways 4 --indexes 8 --policy lru] \
         [--concurrency 4 --requests 8] [--temperature 0.8 --top-p 0.95] \
         [--prefetch --prefetch-min-prob 0.2] \
-        [--host-compute --host-threads 8 --host-backend callback]
+        [--host-compute --host-threads 8 --host-backend callback] \
+        [--kv-paged --page-size 16 --kv-pages 64]
 
 Reduced configs by default (this is a CPU container); the full configs are
 exercised via the dry-run. Prints tokens/s and the paper's cache counters.
@@ -75,6 +76,15 @@ def main() -> None:
                     choices=["callback", "jax"],
                     help="host lane: real numpy thread pool (callback) or "
                          "the bit-exact in-graph fallback (jax)")
+    ap.add_argument("--kv-paged", action="store_true",
+                    help="paged KV pool with prefix sharing (per-request "
+                         "page tables over one global page pool; "
+                         "bit-identical tokens to the dense cache)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV tokens per page (with --kv-paged)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="page pool size (default: dense-equivalent "
+                         "slots*capacity/page_size)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if not 0.0 < args.top_p <= 1.0:
@@ -100,6 +110,10 @@ def main() -> None:
         n = args.indexes if args.indexes is not None else cfg.num_layers // 2
         R = args.requests or args.concurrency * 2
         prefetch = args.prefetch or args.prefetch_min_prob > 0
+        capacity = args.prompt + args.tokens + 1
+        if args.kv_paged:
+            # paged KV slices the per-request capacity into whole pages
+            capacity = -(-capacity // args.page_size) * args.page_size
         print(f"[serve] collaborative engine: {cfg.name} cache=(N={n}, "
               f"M={args.ways}, {args.policy}) slots={args.concurrency} "
               f"requests={R} "
@@ -111,20 +125,25 @@ def main() -> None:
               + (f" max_queue={args.max_queue}"
                  if args.max_queue is not None else "")
               + (f" host_compute({args.host_backend}, "
-                 f"{args.host_threads}t)" if args.host_compute else ""))
+                 f"{args.host_threads}t)" if args.host_compute else "")
+              + (f" kv_paged(page_size={args.page_size})"
+                 if args.kv_paged else ""))
         _, sched = build(
             cfg,
             cache=dict(num_indexes=n, num_ways=args.ways,
                        policy=args.policy),
             serving=dict(max_batch=args.concurrency,
-                         capacity=args.prompt + args.tokens + 1,
+                         capacity=capacity,
                          prefill_chunk=args.prefill_chunk,
                          admit_chunks_per_tick=args.admit_chunks_per_tick,
                          prefetch=prefetch,
                          prefetch_min_prob=args.prefetch_min_prob,
                          host_compute=args.host_compute,
                          host_threads=args.host_threads,
-                         host_backend=args.host_backend),
+                         host_backend=args.host_backend,
+                         kv_paged=args.kv_paged,
+                         page_size=args.page_size,
+                         kv_pages=args.kv_pages),
             seed=args.seed, params=params, max_queue=args.max_queue)
         rng = np.random.default_rng(args.seed)
         for r in range(R):
@@ -162,8 +181,14 @@ def main() -> None:
         if args.host_compute:
             print(f"  host execution: {stats.cpu_expert_calls} expert "
                   f"groups / {stats.cpu_tokens} assignments on CPU "
-                  f"(offload rate {stats.cpu_offload_rate:.3f}, "
+                  f"({stats.fused_groups} fused, offload rate "
+                  f"{stats.cpu_offload_rate:.3f}, "
                   f"backend={args.host_backend})")
+        if args.kv_paged:
+            print(f"  paged KV: page_size={args.page_size} "
+                  f"pages_in_use={stats.kv_pages_in_use} "
+                  f"prefix_hits={stats.prefix_hits} "
+                  f"cow_forks={stats.cow_forks}")
     else:
         print(f"[serve] generic path: {cfg.name}")
         batch = {"tokens": jnp.asarray(prompt)}

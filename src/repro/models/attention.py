@@ -275,6 +275,83 @@ def decode_attention(p: Params, x: jax.Array, cache: Params, pos: jax.Array,
     return o @ p["wo"], {"k": k_cache, "v": v_cache}
 
 
+def init_paged_kv_cache(num_pages: int, page_size: int, num_kv_heads: int,
+                        head_dim: int, dtype=jnp.bfloat16) -> Params:
+    """Global paged KV pool: pages replace the per-row capacity axis."""
+    return {
+        "k": jnp.zeros((num_pages, page_size, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((num_pages, page_size, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_attention_paged(p: Params, x: jax.Array, cache: Params,
+                           pos: jax.Array, pages: jax.Array, cfg,
+                           window: jax.Array | int = -1,
+                           active: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, Params]:
+    """One-token attention against the global paged KV pool.
+
+    x: [B, 1, D]; cache k/v: [num_pages, page_size, Hk, hd] — the pool
+    shared by every request; pages: [B, max_pages] int32 — each row's
+    page table padded with any value (padded entries sit past ``pos``
+    and are causally masked); pos: scalar or [B] valid-token counts;
+    active: [B] bool — an inactive row's write is DROPPED (its page-table
+    row may alias pages owned by live requests, unlike the dense layout
+    where a stale row's slot belongs to nobody else).
+
+    Bit-identity with :func:`decode_attention`: the pool is gathered
+    through the page table into the same ``[B, max_pages*page_size, Hk,
+    hd]`` contiguous view the dense path scores against, and every op
+    from the einsum on is shared verbatim — so for ``capacity =
+    max_pages * page_size`` an active row's output (and therefore the
+    generated tokens) is bitwise identical to the dense engine's.
+    Returns (output [B, 1, D], updated pool).
+    """
+    B, _, _ = x.shape
+    N, page_size = cache["k"].shape[0], cache["k"].shape[1]
+    max_pages = pages.shape[1]
+    S = max_pages * page_size                    # logical capacity
+    Hk, hd = cfg.num_kv_heads, cfg.head_dim
+    group = cfg.num_heads // Hk
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    if cfg.mrope:
+        posq = jnp.broadcast_to(pos_b[None, :, None], (3, B, 1))
+    else:
+        posq = pos_b[:, None]
+    q, k_new = _rope_qk(q, k_new, posq, cfg)
+
+    # Write each row's new kv through its page table; inactive rows write
+    # out of bounds (page id N) and drop.
+    slot = jnp.minimum(pos_b, S - 1)                       # [B]
+    page = jnp.take_along_axis(pages, (slot // page_size)[:, None],
+                               axis=1)[:, 0]               # [B] physical
+    if active is not None:
+        page = jnp.where(active, page, N)
+    off = slot % page_size
+    k_pool = cache["k"].at[page, off].set(k_new[:, 0], mode="drop")
+    v_pool = cache["v"].at[page, off].set(v_new[:, 0], mode="drop")
+
+    # Gather the row's pages into the dense path's [B, S, Hk, hd] view.
+    k_cache = k_pool[pages].reshape(B, S, Hk, hd)
+    v_cache = v_pool[pages].reshape(B, S, Hk, hd)
+    k_cache = constrain(k_cache, ("pod", "data"), "model", None, None)
+    v_cache = constrain(v_cache, ("pod", "data"), "model", None, None)
+
+    qg = q.reshape(B, 1, Hk, group, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    j = jnp.arange(S)
+    valid = j[None, :] <= slot[:, None]                    # [B, S]
+    win = jnp.asarray(window, jnp.int32)
+    valid &= jnp.where(win > 0, (pos_b[:, None] - j[None, :]) < win, True)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    return o @ p["wo"], {"k": k_pool, "v": v_pool}
+
+
 # --------------------------------------------------------------------------
 # Cross-attention (enc-dec)
 # --------------------------------------------------------------------------

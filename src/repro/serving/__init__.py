@@ -1,9 +1,11 @@
 from .api import build
 from .engine import CollaborativeEngine, EngineConfig, PrefillTicket
+from .kv_pool import KVPagePool, PageTable, PoolExhausted
 from .sampling import GREEDY, SamplingParams
 from .scheduler import ContinuousBatchingScheduler, QueueFull, Request
 from .stats import EngineStats, RunStats
 
 __all__ = ["build", "CollaborativeEngine", "EngineConfig", "PrefillTicket",
            "ContinuousBatchingScheduler", "QueueFull", "Request",
-           "SamplingParams", "GREEDY", "EngineStats", "RunStats"]
+           "SamplingParams", "GREEDY", "EngineStats", "RunStats",
+           "KVPagePool", "PageTable", "PoolExhausted"]

@@ -69,6 +69,7 @@ from repro.models import transformer
 from repro.models import attention as attn
 from repro.models.layers import rmsnorm
 from repro.models.moe import route
+from .kv_pool import KVPagePool, PageTable
 from .sampling import GREEDY, SamplingParams, batch_arrays, fold_keys, \
     sample_tokens
 from .stats import EngineStats
@@ -102,6 +103,21 @@ class EngineConfig:
     host_compute: bool = False
     host_threads: int = 8         # executor pool / cost-model thread count
     host_backend: str = "jax"     # "jax" (in-graph, bit-exact) | "callback"
+    # batch small same-step CPU-miss groups (<= this many valid tokens)
+    # into one stacked numpy matmul instead of one pool task each
+    host_fuse_small: int = 4
+    # paged KV: one global [num_pages, page_size, ...] pool per layer
+    # replaces the dense [max_batch, capacity, ...] per-slot cache;
+    # requests hold refcounted pages through per-slot page tables, and
+    # admission reuses an existing request's pages for a shared prompt
+    # prefix (copy-on-write on divergence). Bit-identical tokens to the
+    # dense cache by construction.
+    kv_paged: bool = False
+    page_size: int = 16           # tokens per KV page
+    kv_pages: Optional[int] = None  # pool size (None = dense-equivalent)
+    # rank speculative-prefetch reservations by cross-batch vote count so
+    # experts many rows predict claim cache ways first
+    prefetch_rank_votes: bool = True
 
     def __post_init__(self):
         if self.prefill_chunk < 0:
@@ -122,6 +138,23 @@ class EngineConfig:
             raise ValueError(
                 f"host_backend must be 'jax' or 'callback', got "
                 f"{self.host_backend!r}")
+        if self.host_fuse_small < 0:
+            raise ValueError(
+                f"host_fuse_small must be >= 0, got {self.host_fuse_small}")
+        if self.page_size < 1:
+            raise ValueError(
+                f"page_size must be >= 1, got {self.page_size}")
+        if self.kv_paged:
+            if self.capacity % self.page_size != 0:
+                raise ValueError(
+                    f"paged KV needs capacity ({self.capacity}) divisible "
+                    f"by page_size ({self.page_size})")
+            min_pages = self.capacity // self.page_size
+            if self.kv_pages is not None and self.kv_pages < min_pages:
+                raise ValueError(
+                    f"kv_pages ({self.kv_pages}) < capacity/page_size "
+                    f"({min_pages}): one full-capacity request could "
+                    f"never hold its pages")
 
 
 @dataclass(eq=False)
@@ -146,6 +179,15 @@ class PrefillTicket:
     top_w: Optional[jax.Array] = None
     h2: Optional[jax.Array] = None      # [L, n_chunks*chunk, D]
     cursor: int = 0               # chunks already replayed
+    # paged KV: the request's page table (allocated at start_prefill,
+    # bound to a slot by bind_slot), its prompt (for the pool's prefix
+    # index) and the token count served from a shared prefix — those
+    # chunks' warm replay is skipped (cursor starts past them: the
+    # prefix's original admission already warmed the cache with the
+    # identical routing)
+    table: Optional[PageTable] = None
+    prompt: Optional[np.ndarray] = None
+    shared_tokens: int = 0
 
     @property
     def done(self) -> bool:
@@ -219,10 +261,25 @@ class CollaborativeEngine:
                 # (the in-graph path is the exact no-op)
                 self.host_executor = hostexec.HostExpertExecutor(
                     moe_p["w1"], moe_p["w3"], moe_p["w2"],
-                    threads=ecfg.host_threads)
+                    threads=ecfg.host_threads,
+                    fuse_small=ecfg.host_fuse_small)
+
+        # paged KV geometry (kv_paged only): the pool and per-slot page
+        # tables are host-side bookkeeping created by init_slots; the
+        # device-side page pool rides the scan state exactly where the
+        # dense cache did
+        self.max_pages = ecfg.capacity // ecfg.page_size
+        self.num_pages = (ecfg.kv_pages if ecfg.kv_pages is not None
+                          else ecfg.max_batch * self.max_pages)
+        self.kv_pool: Optional[KVPagePool] = None
+        self._slot_tables = [None] * ecfg.max_batch
+        self._slot_pages: Optional[np.ndarray] = None
 
         self._decode = jax.jit(self._decode_step, donate_argnums=(1, 2))
         self._write = jax.jit(self._write_slot, donate_argnums=(0,))
+        self._write_paged = jax.jit(self._write_slot_paged,
+                                    donate_argnums=(0,))
+        self._cow = jax.jit(self._copy_page, donate_argnums=(0,))
         self._prefill = jax.jit(self._prefill_trace,
                                 static_argnames=("want_trace",))
         self._warm = jax.jit(self._warm_chunk, donate_argnums=(0,))
@@ -234,7 +291,9 @@ class CollaborativeEngine:
             "predicted": 0, "predicted_correct": 0,
             "prefill_hits": 0, "prefill_accesses": 0, "prefill_fetched": 0,
             "prefill_tokens": 0, "prefill_chunks": 0, "first_tokens": 0,
-            "cpu_expert_calls": 0, "cpu_tokens": 0, "miss_expert_groups": 0}
+            "cpu_expert_calls": 0, "cpu_tokens": 0, "miss_expert_groups": 0,
+            "fused_groups": 0, "kv_pages_in_use": 0, "prefix_hits": 0,
+            "cow_forks": 0}
         self._per_layer_hits = np.zeros(L, np.int64)
         self._per_layer_accesses = np.zeros(L, np.int64)
 
@@ -242,11 +301,18 @@ class CollaborativeEngine:
     @property
     def stats(self) -> EngineStats:
         """Immutable snapshot of the engine counters (typed; derived rates
-        and the per-layer hit-rate array live on EngineStats)."""
+        and the per-layer hit-rate array live on EngineStats). The paged-KV
+        channel reads the pool directly: ``kv_pages_in_use`` is a gauge,
+        ``prefix_hits`` / ``cow_forks`` the pool's cumulative ledger."""
+        c = dict(self._counters)
+        if self.kv_pool is not None:
+            c["kv_pages_in_use"] = self.kv_pool.pages_in_use
+            c["prefix_hits"] = self.kv_pool.prefix_hits
+            c["cow_forks"] = self.kv_pool.cow_forks
         return EngineStats(
             per_layer_hits=tuple(int(x) for x in self._per_layer_hits),
             per_layer_accesses=tuple(int(x) for x in self._per_layer_accesses),
-            **self._counters)
+            **c)
 
     def _tiers(self, fast) -> collab.ExpertTiers:
         s1, s3, s2, state = fast
@@ -256,9 +322,11 @@ class CollaborativeEngine:
                                   state=state)
 
     # -- one decode step with the staged collaborative pipeline -----------
-    def _decode_step(self, tokens, state, fast, active):
+    def _decode_step(self, tokens, state, fast, active, pages=None):
         """tokens [T, 1]; state['pos'] [T] per-slot positions; active [T]
-        bool — padded slots neither touch the shared cache nor the stats.
+        bool — padded slots neither touch the shared cache nor the stats;
+        pages [T, max_pages] int32 per-slot physical page ids (paged KV
+        only; rows padded with num_pages — attention drops their writes).
 
         The layer scan is a software pipeline: each iteration probes /
         executes / commits layer *l*'s MoE, then (``prefetch`` enabled)
@@ -298,8 +366,13 @@ class CollaborativeEngine:
             x, tiers, layer, pred_prev, rep_prev, issued_prev = carry
             lp, st = xs["params"], xs["state"]
             h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-            o, new_st = attn.decode_attention(lp["attn"], h, st, pos, cfg,
-                                              slot.window)
+            if self.ecfg.kv_paged:
+                o, new_st = attn.decode_attention_paged(
+                    lp["attn"], h, st, pos, pages, cfg, slot.window,
+                    active=active)
+            else:
+                o, new_st = attn.decode_attention(lp["attn"], h, st, pos,
+                                                  cfg, slot.window)
             x = x + o
             h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
             _, top_i, top_w = route(lp["moe"]["router"],
@@ -313,13 +386,15 @@ class CollaborativeEngine:
                 # cost-model-chosen; cache warming identical either way
                 y, host_w, dstats = self._dispatch_execute(
                     tiers, layer, h2[:, 0], top_w, pr, ccfg,
-                    self._cpu_table, self.host_executor)
+                    self._cpu_table, self.host_executor,
+                    self.ecfg.host_fuse_small)
             else:
                 y, host_w = collab.execute(tiers, layer, h2[:, 0], top_w,
                                            pr, ccfg)
                 dstats = {"cpu_expert_calls": jnp.zeros((), jnp.int32),
                           "cpu_tokens": jnp.zeros((), jnp.int32),
-                          "miss_expert_groups": jnp.zeros((), jnp.int32)}
+                          "miss_expert_groups": jnp.zeros((), jnp.int32),
+                          "fused_groups": jnp.zeros((), jnp.int32)}
             tiers, fetch = collab.commit(tiers, layer, pr, host_w, ccfg)
             x = x + y[:, None].astype(x.dtype)
 
@@ -353,7 +428,8 @@ class CollaborativeEngine:
                     gate = gate & (p_pick >= self.ecfg.prefetch_min_prob)
                 pred_i = jnp.where(gate, pred_i, -1).astype(jnp.int32)
                 tiers, rep_p, issued, n_issued = collab.prefetch(
-                    tiers, layer + 1, pred_i, ccfg, active=active)
+                    tiers, layer + 1, pred_i, ccfg, active=active,
+                    rank_votes=self.ecfg.prefetch_rank_votes)
             else:
                 # prefetch disabled: no rolled weight tables, no scoring —
                 # only constant-zero counters so the stats shape is stable
@@ -388,9 +464,24 @@ class CollaborativeEngine:
 
     # -- batch-state primitives for the scheduler -------------------------
     def init_slots(self) -> Params:
-        """Empty decode state for max_batch request slots."""
-        state = transformer.init_state(self.cfg, self.ecfg.max_batch,
-                                       self.ecfg.capacity)
+        """Empty decode state for max_batch request slots.
+
+        Paged KV: the per-layer KV leaves become the global page pool
+        ``[num_pages, page_size, Hk, hd]`` (pages play the dense cache's
+        batch role, so the backbone's init_state builds them unchanged)
+        and a fresh :class:`KVPagePool` takes over the host-side page
+        bookkeeping — any previously bound tables are dropped with it."""
+        if self.ecfg.kv_paged:
+            state = transformer.init_state(self.cfg, self.num_pages,
+                                           self.ecfg.page_size)
+            self.kv_pool = KVPagePool(self.num_pages, self.ecfg.page_size)
+            self._slot_tables = [None] * self.ecfg.max_batch
+            self._slot_pages = np.full(
+                (self.ecfg.max_batch, self.max_pages), self.num_pages,
+                np.int32)
+        else:
+            state = transformer.init_state(self.cfg, self.ecfg.max_batch,
+                                           self.ecfg.capacity)
         state["pos"] = jnp.zeros((self.ecfg.max_batch,), jnp.int32)
         return state
 
@@ -406,6 +497,105 @@ class CollaborativeEngine:
     def write_slot(self, batch_state: Params, one_state: Params,
                    slot: int) -> Params:
         return self._write(batch_state, one_state, jnp.asarray(slot, jnp.int32))
+
+    def _write_slot_paged(self, batch_state, one_state, page_ids,
+                          write_mask, slot):
+        """Scatter one prefilled request's dense [1, capacity, ...] KV
+        into its pool pages. page_ids [max_pages] physical pages (padded
+        with num_pages); write_mask [max_pages] — False rows (padding AND
+        shared-prefix pages, whose content the prefix's original request
+        already wrote) are dropped, so a shared page is never rewritten
+        while other requests read it."""
+        ps = self.ecfg.page_size
+        dst = jnp.where(write_mask, page_ids, self.num_pages)
+
+        def scatter(pool, one):
+            L = pool.shape[0]
+            chunks = one[:, 0].reshape((L, self.max_pages, ps)
+                                       + one.shape[3:])
+            return pool.at[:, dst].set(chunks, mode="drop")
+
+        new_scan = jax.tree.map(scatter, batch_state["scan"],
+                                one_state["scan"])
+        pos = batch_state["pos"].at[slot].set(one_state["pos"])
+        return {"scan": new_scan, "pos": pos}
+
+    @staticmethod
+    def _copy_page(batch_state, src, dst):
+        """Copy-on-write page duplication: clone physical page ``src``
+        into ``dst`` across every layer's K and V pools."""
+        new_scan = jax.tree.map(lambda pool: pool.at[:, dst].set(pool[:, src]),
+                                batch_state["scan"])
+        return {"scan": new_scan, "pos": batch_state["pos"]}
+
+    # -- paged slot lifecycle (scheduler-facing) ---------------------------
+    def can_admit(self, prompt, max_new_tokens: int) -> bool:
+        """Page-pool admission gate: True iff the pool can commit pages
+        for the prompt plus ``max_new_tokens`` decode appends right now
+        (shared-prefix pages excluded from the requirement). Dense KV has
+        per-slot storage by construction — always True."""
+        if not self.ecfg.kv_paged or self.kv_pool is None:
+            return True
+        p = _one_prompt(prompt)[0]
+        return self.kv_pool.can_admit(p, p.shape[0] + int(max_new_tokens))
+
+    def bind_slot(self, batch_state: Params, ticket: "PrefillTicket",
+                  slot: int) -> Params:
+        """Bind a finished prefill to batch slot ``slot``: the paged twin
+        of :meth:`write_slot` (which it falls back to for dense KV).
+        Scatters the ticket's KV into the table's non-shared pages and
+        registers the prompt's full-page prefixes in the pool's prefix
+        index — AFTER the write, so the index only ever maps populated
+        pages."""
+        if not self.ecfg.kv_paged:
+            return self.write_slot(batch_state, ticket.state, slot)
+        table = ticket.table
+        assert table is not None and ticket.prompt is not None, \
+            "paged ticket lost its page table (start_prefill not paged?)"
+        n = len(table.pages)
+        ids = np.full((self.max_pages,), self.num_pages, np.int32)
+        ids[:n] = table.pages
+        mask = np.zeros((self.max_pages,), bool)
+        mask[ticket.shared_tokens // self.ecfg.page_size:n] = True
+        self._slot_tables[slot] = table
+        self._slot_pages[slot] = ids
+        state = self._write_paged(batch_state, ticket.state,
+                                  jnp.asarray(ids), jnp.asarray(mask),
+                                  jnp.asarray(slot, jnp.int32))
+        self.kv_pool.register(ticket.prompt, table)
+        return state
+
+    def release_slot(self, slot: int) -> None:
+        """Return a retired/cancelled slot's pages to the pool
+        (refcount-aware: pages a prefix-sharing peer still holds stay
+        allocated). Dense KV: no-op — the slot's rows are overwritten on
+        reuse."""
+        if not self.ecfg.kv_paged:
+            return
+        table = self._slot_tables[slot]
+        if table is not None:
+            self.kv_pool.free(table)
+            self._slot_tables[slot] = None
+            self._slot_pages[slot] = self.num_pages
+
+    def fork_slot(self, batch_state: Params, src: int, dst: int,
+                  total_tokens: int) -> Params:
+        """Clone slot ``src``'s sequence into free slot ``dst`` sharing
+        ALL its KV pages (zero KV copied now; the partial last page is
+        copy-on-written by whichever side appends first). total_tokens
+        bounds the child's final length for page commitment."""
+        if not self.ecfg.kv_paged:
+            raise RuntimeError("fork_slot requires EngineConfig.kv_paged")
+        parent = self._slot_tables[src]
+        if parent is None:
+            raise ValueError(f"slot {src} holds no page table")
+        child = self.kv_pool.fork(parent, int(total_tokens))
+        self._slot_tables[dst] = child
+        ids = np.full((self.max_pages,), self.num_pages, np.int32)
+        ids[:len(child.pages)] = child.pages
+        self._slot_pages[dst] = ids
+        pos = batch_state["pos"].at[dst].set(batch_state["pos"][src])
+        return {"scan": batch_state["scan"], "pos": pos}
 
     # -- prefill: one shared trace, two cache modes ------------------------
     def _prefill_trace(self, tokens, plen, want_trace: bool = False):
@@ -456,8 +646,19 @@ class CollaborativeEngine:
         """Bypass prefill (tiers untouched: the cache stays cold until
         decode). tokens [B, P] -> (last-real-position logits [B, 1, V],
         decode state with pos=P)."""
+        self._require_dense("prefill")
         logits, state, _ = self._padded_prefill(tokens)
         return logits, state
+
+    def _require_dense(self, what: str) -> None:
+        """The static-batch convenience paths produce dense-shaped states
+        with no page-table bookkeeping — under kv_paged they would leak
+        pages or decode against the wrong cache layout, so they refuse."""
+        if self.ecfg.kv_paged:
+            raise RuntimeError(
+                f"{what}() is a dense-KV path; under EngineConfig.kv_paged "
+                f"use the scheduler primitives (start_prefill / bind_slot "
+                f"/ decode_batch / release_slot)")
 
     def _warm_chunk(self, fast, top_i, top_w, h2, active):
         """Route one prompt chunk through probe → execute → commit.
@@ -491,7 +692,9 @@ class CollaborativeEngine:
 
     # -- resumable prefill: ticket primitives ------------------------------
     def start_prefill(self, prompt: np.ndarray,
-                      chunk: Optional[int] = None) -> "PrefillTicket":
+                      chunk: Optional[int] = None,
+                      max_total_tokens: Optional[int] = None
+                      ) -> "PrefillTicket":
         """Run the shared prefill trace once and open a resumable
         cache-warming ticket.
 
@@ -502,16 +705,37 @@ class CollaborativeEngine:
         :meth:`advance_prefill` — one call per scheduler tick for
         overlapped admission, or all at once for the synchronous path.
         With ``chunk == 0`` (bypass prefill) no trace is materialized and
-        the ticket is born done."""
+        the ticket is born done.
+
+        Paged KV: the pool allocates the request's page table here —
+        committing pages up to ``max_total_tokens`` (prompt + decode
+        budget; defaults to capacity) — and a prefix-index hit makes the
+        new table share the matching request's full prompt-prefix pages.
+        The warm replay skips the shared span's chunks (the prefix's
+        original admission already routed those exact tokens through the
+        cache); the prefill trace itself still runs the full prompt —
+        its skippable shared-span compute is a ROADMAP item. Raises
+        :class:`~repro.serving.kv_pool.PoolExhausted` when the pool
+        cannot commit the pages (gate with :meth:`can_admit` first)."""
         chunk = self.ecfg.prefill_chunk if chunk is None else int(chunk)
         if chunk < 0:
             raise ValueError(f"chunk must be >= 0, got {chunk}")
         prompt = _one_prompt(prompt)
         P = prompt.shape[1]
+        table, shared = None, 0
+        if self.ecfg.kv_paged:
+            if self.kv_pool is None:
+                raise RuntimeError(
+                    "paged KV: call init_slots() before start_prefill()")
+            total = (self.ecfg.capacity if max_total_tokens is None
+                     else int(max_total_tokens))
+            table, shared = self.kv_pool.alloc_prompt(prompt[0], total)
         if chunk == 0:
             logits, state, _ = self._padded_prefill(prompt)
             return PrefillTicket(prompt_len=P, chunk=0, n_chunks=0,
-                                 logits=logits, state=state)
+                                 logits=logits, state=state,
+                                 table=table, prompt=prompt[0],
+                                 shared_tokens=shared)
         logits, state, trace = self._padded_prefill(prompt, want_trace=True)
         # fixed [L, chunk, ...] shapes: the warm step compiles once per
         # chunk size; only the chunk count varies with prompt length. The
@@ -527,7 +751,10 @@ class CollaborativeEngine:
             top_i, top_w, h2 = (jnp.pad(a, ext) for a in (top_i, top_w, h2))
         return PrefillTicket(prompt_len=P, chunk=chunk, n_chunks=n_chunks,
                              logits=logits, state=state,
-                             top_i=top_i, top_w=top_w, h2=h2)
+                             top_i=top_i, top_w=top_w, h2=h2,
+                             cursor=min(shared // chunk, n_chunks),
+                             table=table, prompt=prompt[0],
+                             shared_tokens=shared)
 
     def advance_prefill(self, ticket: "PrefillTicket",
                         max_chunks: int = 1) -> bool:
@@ -567,6 +794,7 @@ class CollaborativeEngine:
         the separate ``prefill_*`` stat channel; decode-channel counters
         and generated tokens are untouched by construction (residency
         changes never change logits)."""
+        self._require_dense("prefill_chunked")
         chunk = self.ecfg.prefill_chunk if chunk is None else int(chunk)
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -596,6 +824,7 @@ class CollaborativeEngine:
         otherwise — the first token is identical either way. The
         overlapped-admission scheduler uses the underlying ticket
         primitives directly instead."""
+        self._require_dense("prefill_request")
         ticket = self.start_prefill(prompt)
         self.advance_prefill(ticket, ticket.n_chunks)
         tok = self.sample_first(ticket, sampling, key)
@@ -632,10 +861,36 @@ class CollaborativeEngine:
                      ) -> Tuple[jax.Array, Params]:
         """One padded decode step for the whole slot batch. tokens [T, 1];
         active [T] bool. Updates the shared expert-cache tiers and the
-        engine counters (padded rows excluded); returns (logits, state)."""
+        engine counters (padded rows excluded); returns (logits, state).
+
+        Paged KV: before the step, every active slot's table plans this
+        token's append — allocating a fresh page on a page boundary and
+        copy-on-writing a partial last page another table still shares —
+        and the (possibly updated) page-id rows ride into the jitted step;
+        after the step the appends commit (the plan is idempotent, so a
+        step that dies between plan and commit replans identically)."""
         active = jnp.asarray(active, bool)
+        pages = None
+        if self.ecfg.kv_paged:
+            act = np.nonzero(np.asarray(active))[0]
+            for t in act:
+                table = self._slot_tables[int(t)]
+                if table is None:
+                    raise RuntimeError(
+                        f"active slot {t} has no bound page table — "
+                        f"admit requests via bind_slot under kv_paged")
+                plan = self.kv_pool.prepare_append(table)
+                if plan.cow_src is not None:
+                    state = self._cow(state,
+                                      jnp.asarray(plan.cow_src, jnp.int32),
+                                      jnp.asarray(plan.page, jnp.int32))
+                self._slot_pages[int(t), len(table.pages) - 1] = plan.page
+            pages = jnp.asarray(self._slot_pages)
         logits, state, self.fast, stats = self._decode(
-            jnp.asarray(tokens, jnp.int32), state, self.fast, active)
+            jnp.asarray(tokens, jnp.int32), state, self.fast, active, pages)
+        if self.ecfg.kv_paged:
+            for t in act:
+                self.kv_pool.commit_append(self._slot_tables[int(t)])
         self._accumulate(stats, int(jax.device_get(active.sum())))
         return logits, state
 
@@ -644,7 +899,7 @@ class CollaborativeEngine:
         for k in ("hits", "accesses", "fetched_experts", "prefetch_issued",
                   "prefetch_hits", "prefetch_wasted", "predicted",
                   "predicted_correct", "cpu_expert_calls", "cpu_tokens",
-                  "miss_expert_groups"):
+                  "miss_expert_groups", "fused_groups"):
             c[k] += int(np.asarray(stats[k]).sum())
         c["host_assignments"] += int(
             np.asarray(stats["host_flops_assignments"]).sum())
@@ -673,6 +928,7 @@ class CollaborativeEngine:
         together with one shared SamplingParams (the scheduler path
         interleaves requests with per-request sampling instead). Uses
         bypass prefill — the warming path is per-request."""
+        self._require_dense("generate")
         base = np.asarray(jax.random.PRNGKey(sampling.seed)
                           if sampling.seed is not None else
                           (key if key is not None else jax.random.PRNGKey(0)))

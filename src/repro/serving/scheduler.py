@@ -262,6 +262,7 @@ class ContinuousBatchingScheduler:
                     req = r
                     self.slots[t] = None          # slot free for admission
                     self._tickets[t] = None       # mid-warm: drop the ticket
+                    self.engine.release_slot(t)   # paged: pages back now
                     break
         if req is None:
             return False
@@ -272,6 +273,57 @@ class ContinuousBatchingScheduler:
         if req.on_token is not None:
             req.on_token(-1, True)
         return True
+
+    def fork(self, rid: int, max_new_tokens: Optional[int] = None,
+             sampling: Optional[SamplingParams] = None) -> Request:
+        """Fork a live request into a free slot (paged KV only).
+
+        The child shares ALL the parent's KV pages — zero KV is copied
+        now; the partial last page copy-on-writes when either side next
+        appends — and continues decoding from the parent's pending next
+        token under its own sampling chain (``sampling``; parent's by
+        default) and budget (``max_new_tokens``; parent's by default).
+        The parent must be fully warmed (not PREFILLING) and not done;
+        raises :class:`~repro.serving.kv_pool.PoolExhausted` when the
+        pool cannot commit the child's decode pages."""
+        if not self.engine.ecfg.kv_paged:
+            raise RuntimeError("fork requires EngineConfig.kv_paged")
+        src = next((t for t, r in enumerate(self.slots)
+                    if r is not None and r.rid == rid), None)
+        if src is None or self.slots[src].done:
+            raise ValueError(f"request {rid} is not in a live slot")
+        if self._tickets[src] is not None:
+            raise ValueError(
+                f"request {rid} is still PREFILLING; fork after warmup")
+        dst = next((t for t in range(self.num_slots)
+                    if self.slots[t] is None), None)
+        if dst is None:
+            raise RuntimeError("no free slot to fork into")
+        parent = self.slots[src]
+        new_max = parent.max_new_tokens if max_new_tokens is None \
+            else int(max_new_tokens)
+        plen, cap = parent.prompt.shape[0], self.engine.ecfg.capacity
+        if new_max <= len(parent.generated):
+            raise ValueError(
+                f"max_new_tokens {new_max} <= tokens already generated "
+                f"({len(parent.generated)}): the child would be born done")
+        if plen + new_max > cap:
+            raise ValueError(
+                f"prompt length {plen} + max_new_tokens {new_max} exceeds "
+                f"engine KV capacity {cap}")
+        child = Request(self._rid, parent.prompt, new_max, parent.eos_id,
+                        sampling if sampling is not None else parent.sampling,
+                        parent.stop_sequences,
+                        generated=list(parent.generated))
+        self._rid += 1
+        self._submitted += 1
+        self.state = self.engine.fork_slot(self.state, src, dst,
+                                           plen + new_max)
+        self._next[dst, 0] = self._next[src, 0]
+        self._bases[dst] = request_key(child.sampling, self._split())
+        self.slots[dst] = child
+        self._tickets[dst] = None
+        return child
 
     # -- slot bookkeeping --------------------------------------------------
     @property
@@ -301,6 +353,7 @@ class ContinuousBatchingScheduler:
             if req is not None and req.done:
                 self.slots[t] = None
                 self._tickets[t] = None   # done mid-warm: drop the replay
+                self.engine.release_slot(t)   # paged: pages back to pool
                 out.append(req)
         self.finished.extend(out)
         return out
@@ -318,14 +371,24 @@ class ContinuousBatchingScheduler:
             return
         for t in range(self.num_slots):
             if self.slots[t] is None and self.queue:
-                req = self.queue.popleft()
+                req = self.queue[0]
+                if not self.engine.can_admit(req.prompt,
+                                             req.max_new_tokens):
+                    # paged KV backpressure: the FIFO head can't commit
+                    # its pages yet — stop admitting (skipping ahead would
+                    # starve it); retirements free pages, so it clears on
+                    # a later tick, counted by the stall signal below
+                    break
+                self.queue.popleft()
                 base = request_key(req.sampling, self._split())
                 self._bases[t] = base
-                ticket = self.engine.start_prefill(req.prompt)
+                ticket = self.engine.start_prefill(
+                    req.prompt,
+                    max_total_tokens=(req.prompt.shape[0]
+                                      + req.max_new_tokens))
                 first_tok = self.engine.sample_first(
                     ticket, req.sampling, key=jax.random.fold_in(base, 0))
-                self.state = self.engine.write_slot(self.state,
-                                                    ticket.state, t)
+                self.state = self.engine.bind_slot(self.state, ticket, t)
                 # claim the slot BEFORE the first-token callback fires so
                 # an on_token handler that calls cancel() finds the
                 # request live (cancel then frees the slot right here)

@@ -63,6 +63,15 @@ class EngineStats:
     cpu_expert_calls: int = 0
     cpu_tokens: int = 0
     miss_expert_groups: int = 0
+    # CPU-miss groups the host executor's small-group fusion lane batched
+    # into one stacked matmul instead of one pool task each
+    fused_groups: int = 0
+    # paged-KV channel (kv_paged engines): current page-pool occupancy
+    # (gauge), admissions served from the prefix index, and partial last
+    # pages duplicated by copy-on-write appends
+    kv_pages_in_use: int = 0
+    prefix_hits: int = 0
+    cow_forks: int = 0
     # per-MoE-layer demand series (tuples: immutable + JSON-native)
     per_layer_hits: Tuple[int, ...] = ()
     per_layer_accesses: Tuple[int, ...] = ()

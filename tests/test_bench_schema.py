@@ -29,6 +29,8 @@ SAMPLE = EngineStats(hits=7, accesses=12, host_assignments=5,
                      prefill_hits=9, prefill_accesses=20, prefill_fetched=4,
                      prefill_tokens=10, prefill_chunks=2, first_tokens=2,
                      cpu_expert_calls=2, cpu_tokens=3, miss_expert_groups=3,
+                     fused_groups=2, kv_pages_in_use=5, prefix_hits=1,
+                     cow_forks=1,
                      per_layer_hits=(3, 4), per_layer_accesses=(6, 6))
 
 ENGINE_KEYS = {
@@ -38,6 +40,7 @@ ENGINE_KEYS = {
     "prefill_fetched", "prefill_tokens", "prefill_chunks", "first_tokens",
     "generated_tokens",
     "cpu_expert_calls", "cpu_tokens", "miss_expert_groups",
+    "fused_groups", "kv_pages_in_use", "prefix_hits", "cow_forks",
     "hit_rate", "prefetch_hit_rate", "prefetch_waste_rate",
     "prediction_accuracy", "prefill_hit_rate", "cpu_offload_rate",
     "per_layer_hits", "per_layer_accesses", "per_layer_hit_rates",
@@ -162,6 +165,32 @@ def test_admission_overlap_artifact_shape(tmp_path, monkeypatch):
         assert set(stats["engine"]) == ENGINE_KEYS
         assert stats["engine"]["generated_tokens"] == \
             stats["engine"]["tokens"] + stats["engine"]["first_tokens"]
+
+
+def test_paged_kv_artifact_shape(tmp_path, monkeypatch):
+    """BENCH_paged_kv.json: the CI smoke artifact pairs a dense/paged run
+    whose engine stats carry the paged-KV channel (kv_pages_in_use /
+    prefix_hits / cow_forks) next to the page-occupancy and TTFT
+    results."""
+    importlib.import_module("benchmarks.paged_kv")          # importable
+    monkeypatch.setattr(common, "_RESULTS", [])
+    monkeypatch.setattr(common, "_RUNS", [])
+    common.emit("paged_kv.peak_pages", 17.0, "paged fleet peak occupancy")
+    common.emit("paged_kv.ttft_prefix_hit_us", 11400.0, "warm-skip TTFT")
+    for name in ("paged_kv.dense", "paged_kv.paged"):
+        common.record_run(name, RunStats(engine=SAMPLE,
+                                         requests_submitted=6,
+                                         requests_finished=6))
+    path = tmp_path / "BENCH_paged_kv.json"
+    common.dump_json(str(path))
+    doc = json.loads(path.read_text())
+    assert [r["name"] for r in doc["runs"]] == ["paged_kv.dense",
+                                                "paged_kv.paged"]
+    for run in doc["runs"]:
+        eng = run["stats"]["engine"]
+        assert set(eng) == ENGINE_KEYS
+        assert {"kv_pages_in_use", "prefix_hits",
+                "cow_forks", "fused_groups"} <= set(eng)
 
 
 def test_host_compute_artifact_shape_and_cost_model(tmp_path, monkeypatch):

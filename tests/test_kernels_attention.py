@@ -1,11 +1,12 @@
-"""Flash-decode Pallas kernel vs oracle + the model's chunked-flash
-prefill vs naive attention."""
+"""Flash-decode Pallas kernels (dense and paged) vs oracles + the
+model's chunked-flash prefill vs naive attention."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.decode_attention import decode_attention, ref
+from repro.kernels.decode_attention.ops import paged_decode_attention
 from repro.models.attention import flash_attention
 
 CASES = [
@@ -32,6 +33,108 @@ def test_flash_decode_matches_ref(case, dtype):
         else dict(rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("window", [-1, 96])
+def test_flash_decode_vector_pos_matches_per_row(window):
+    """A [B] pos vector must behave exactly like B independent scalar-pos
+    calls — the serving engine's continuous batch mixes fill levels in
+    one dispatch."""
+    B, H, Hk, hd, S = 4, 8, 2, 64, 512
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, hd), jnp.float32)
+    pos = jnp.asarray([0, 17, 200, 511], jnp.int32)
+    got = decode_attention(q, k, v, pos, window=window)
+    for b in range(B):
+        want = ref.decode_attention_ref(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                        pos[b], window=window)
+        np.testing.assert_allclose(np.asarray(got[b:b + 1]),
+                                   np.asarray(want), rtol=2e-5, atol=2e-5,
+                                   err_msg=f"row {b}")
+
+
+def test_decode_attention_pos_contract():
+    """ops.decode_attention rejects malformed pos at the op boundary."""
+    B, H, Hk, hd, S = 2, 4, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, hd), jnp.float32)
+    with pytest.raises(ValueError, match="scalar or a"):
+        decode_attention(q, k, v, jnp.zeros((B, 1), jnp.int32))
+    with pytest.raises(ValueError, match="per-row pos length"):
+        decode_attention(q, k, v, jnp.zeros((B + 1,), jnp.int32))
+
+
+def _paged_case(seed, B, Hk, group, hd, ps, lengths, num_pages):
+    """Build q + a pool and CSR tables holding the given row lengths."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hk * group, hd), jnp.float32)
+    k_pages = jax.random.normal(ks[1], (num_pages, ps, Hk, hd), jnp.float32)
+    v_pages = jax.random.normal(ks[2], (num_pages, ps, Hk, hd), jnp.float32)
+    rng = np.random.default_rng(seed)
+    perm = list(rng.permutation(num_pages))    # physically scattered pages
+    indptr, indices, lastlen = [0], [], []
+    for ln in lengths:
+        n = -(-ln // ps)
+        indices += [perm.pop() for _ in range(n)]
+        indptr.append(len(indices))
+        lastlen.append(ln - (n - 1) * ps)
+    return (q, k_pages, v_pages, np.asarray(indptr, np.int32),
+            np.asarray(indices, np.int32), np.asarray(lastlen, np.int32))
+
+
+@pytest.mark.parametrize("window", [-1, 40])
+def test_paged_flash_decode_bitwise_matches_ref_twin(window):
+    """The Pallas paged kernel (interpret mode off-TPU) must match its
+    jnp replay twin BITWISE — the acceptance bar for the serving paged
+    path being a pure layout change."""
+    lengths = [8, 23, 64, 41]
+    case = _paged_case(3, B=4, Hk=2, group=3, hd=32, ps=8,
+                       lengths=lengths, num_pages=24)
+    q, kp, vp, indptr, indices, lastlen = case
+    max_pages = int((indptr[1:] - indptr[:-1]).max())
+    got = paged_decode_attention(q, kp, vp, indptr, indices, lastlen,
+                                 max_pages=max_pages, window=window)
+    want = ref.paged_decode_ref(q, kp, vp, indptr, indices, lastlen,
+                                max_pages=max_pages, window=window)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), \
+        np.abs(np.asarray(got) - np.asarray(want)).max()
+
+
+@pytest.mark.parametrize("window", [-1, 40])
+def test_paged_flash_decode_matches_gathered_dense_oracle(window):
+    """Gathering each row's pages into a contiguous cache and running the
+    dense oracle must agree (allclose: different reduction order)."""
+    lengths = [8, 23, 64, 41]
+    case = _paged_case(11, B=4, Hk=2, group=3, hd=32, ps=8,
+                       lengths=lengths, num_pages=24)
+    q, kp, vp, indptr, indices, lastlen = case
+    max_pages = int((indptr[1:] - indptr[:-1]).max())
+    got = paged_decode_attention(q, kp, vp, indptr, indices, lastlen,
+                                 max_pages=max_pages, window=window)
+    k = ref.paged_gather(kp, indptr, indices, max_pages)
+    v = ref.paged_gather(vp, indptr, indices, max_pages)
+    pos = ref.paged_lengths(indptr, lastlen, 8) - 1
+    want = ref.decode_attention_ref(q, k, v, jnp.asarray(pos, jnp.int32),
+                                    window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_table_contract():
+    """ops.paged_decode_attention rejects CSR tables sized for the wrong
+    batch at the op boundary."""
+    q, kp, vp, indptr, indices, lastlen = _paged_case(
+        0, B=2, Hk=2, group=2, hd=32, ps=8, lengths=[8, 16], num_pages=6)
+    with pytest.raises(ValueError, match="page_indptr carries"):
+        paged_decode_attention(q, kp, vp, indptr[:-1], indices, lastlen,
+                               max_pages=2)
+    with pytest.raises(ValueError, match="last_page_len carries"):
+        paged_decode_attention(q, kp, vp, indptr, indices, lastlen[:1],
+                               max_pages=2)
 
 
 def _naive(q, k, v, causal=True, window=-1):

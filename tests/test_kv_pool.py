@@ -1,0 +1,263 @@
+"""Paged KV pool allocator: deterministic unit tests plus a randomized
+property test (hypothesis when available, a seeded fallback sweep
+otherwise) driving alloc / append / fork / free sequences with
+``check_invariants()`` after every operation — refcounts match live
+tables, no page is ever double-freed, nothing leaks, commitments never
+exceed the free list.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import KVPagePool, PoolExhausted
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # container has no hypothesis:
+    HAVE_HYPOTHESIS = False             # fall back to a seeded sweep
+
+
+def _prompt(rng, n):
+    return rng.integers(0, 97, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit tests
+# ---------------------------------------------------------------------------
+
+def test_alloc_free_roundtrip():
+    pool = KVPagePool(num_pages=8, page_size=4)
+    t, shared = pool.alloc_prompt(np.arange(10, dtype=np.int32), 10)
+    assert shared == 0
+    assert len(t.pages) == 3 and t.length == 10 and t.last_page_len == 2
+    assert pool.pages_in_use == 3
+    pool.check_invariants()
+    pool.free(t)
+    assert pool.pages_in_use == 0 and not t.alive
+    pool.check_invariants()
+
+
+def test_double_free_raises():
+    pool = KVPagePool(num_pages=4, page_size=2)
+    t, _ = pool.alloc_prompt(np.arange(3, dtype=np.int32), 3)
+    pool.free(t)
+    with pytest.raises(RuntimeError, match="already freed"):
+        pool.free(t)
+    pool.check_invariants()
+
+
+def test_append_within_and_beyond_budget():
+    """total_tokens commits exactly the decode budget: appends inside it
+    always succeed (boundary growth draws committed pages), the first
+    append past it raises without corrupting the pool."""
+    pool = KVPagePool(num_pages=8, page_size=4)
+    t, _ = pool.alloc_prompt(np.arange(6, dtype=np.int32), 12)
+    assert t.budget == 1                       # pages_for(12) - pages_for(6)
+    for _ in range(6):                         # 6 -> 12 tokens
+        plan = pool.prepare_append(t)
+        assert plan.slot == t.length % 4
+        pool.commit_append(t)
+        pool.check_invariants()
+    assert t.length == 12 and len(t.pages) == 3 and t.budget == 0
+    with pytest.raises(PoolExhausted, match="budget"):
+        pool.prepare_append(t)
+    pool.check_invariants()
+    pool.free(t)
+
+
+def test_prepare_append_is_idempotent():
+    """A crashed step may retry prepare_append before committing: the
+    replan must return the same placement without drawing a second
+    page."""
+    pool = KVPagePool(num_pages=8, page_size=4)
+    t, _ = pool.alloc_prompt(np.arange(4, dtype=np.int32), 12)
+    p1 = pool.prepare_append(t)                # boundary: grows a page
+    in_use = pool.pages_in_use
+    p2 = pool.prepare_append(t)                # retry before commit
+    assert (p1.page, p1.slot) == (p2.page, p2.slot)
+    assert p2.cow_src is None
+    assert pool.pages_in_use == in_use
+    pool.commit_append(t)
+    pool.check_invariants()
+    pool.free(t)
+
+
+def test_prefix_sharing_and_epoch_invalidation():
+    pool = KVPagePool(num_pages=8, page_size=4)
+    rng = np.random.default_rng(0)
+    prompt = _prompt(rng, 8)                   # two full pages
+    t1, s1 = pool.alloc_prompt(prompt, 8)
+    assert s1 == 0
+    pool.register(prompt, t1)
+    t2, s2 = pool.alloc_prompt(prompt, 8)      # full prefix hit
+    assert s2 == 8 and t2.pages == t1.pages
+    assert pool.pages_in_use == 2              # shared, not duplicated
+    assert pool.prefix_hits == 1 and pool.prefix_tokens_shared == 8
+    pool.check_invariants()
+    # a longer prompt adopts the longest indexed full-page prefix
+    longer = np.concatenate([prompt, _prompt(rng, 6)])
+    t3, s3 = pool.alloc_prompt(longer, 14)
+    assert s3 == 8 and t3.pages[:2] == t1.pages and len(t3.pages) == 4
+    pool.check_invariants()
+    for t in (t3, t2, t1):
+        pool.free(t)
+    assert pool.pages_in_use == 0
+    # the pages recycled: their epoch bump must invalidate the index
+    t4, s4 = pool.alloc_prompt(prompt, 8)
+    assert s4 == 0, "stale prefix entry survived page recycling"
+    pool.check_invariants()
+    pool.free(t4)
+
+
+def test_can_admit_tracks_commitments():
+    """Admission capacity is free pages net of committed decode budgets —
+    a second request must be refused while the first's committed pages
+    would not fit, and clear after the first frees."""
+    pool = KVPagePool(num_pages=6, page_size=4)
+    p1, p2 = np.arange(4, dtype=np.int32), np.arange(50, 54, dtype=np.int32)
+    assert pool.can_admit(p1, 16)              # 4 pages
+    t1, _ = pool.alloc_prompt(p1, 16)
+    assert pool.pages_in_use == 1 and pool.available == 2
+    assert pool.can_admit(p2, 8)               # 2 pages: fits
+    assert not pool.can_admit(p2, 12)          # 3 pages: over-commits
+    with pytest.raises(PoolExhausted, match="available"):
+        pool.alloc_prompt(p2, 12)
+    pool.check_invariants()
+    pool.free(t1)
+    assert pool.can_admit(p2, 12)
+    pool.check_invariants()
+
+
+def test_fork_copy_on_write():
+    """fork shares every page with zero copies; the first append on
+    either side copy-on-writes the shared partial last page, after which
+    both sides append in place."""
+    pool = KVPagePool(num_pages=8, page_size=4)
+    t, _ = pool.alloc_prompt(np.arange(6, dtype=np.int32), 10)
+    child = pool.fork(t, 10)
+    assert child.pages == t.pages and pool.pages_in_use == 2
+    pool.check_invariants()
+    plan = pool.prepare_append(t)              # shared partial page: CoW
+    assert plan.cow_src == child.pages[-1] and plan.page != plan.cow_src
+    assert plan.slot == 2
+    pool.commit_append(t)
+    assert pool.cow_forks == 1
+    pool.check_invariants()
+    plan2 = pool.prepare_append(child)         # child's page now exclusive
+    assert plan2.cow_src is None and plan2.page == child.pages[-1]
+    pool.commit_append(child)
+    pool.check_invariants()
+    pool.free(t)
+    pool.free(child)
+    assert pool.pages_in_use == 0
+    pool.check_invariants()
+
+
+def test_fork_reserves_cow_pages_or_refuses():
+    """A fork at a partial page needs the CoW reserve on BOTH sides; a
+    pool that cannot commit it must refuse rather than deadlock a side
+    mid-decode."""
+    pool = KVPagePool(num_pages=3, page_size=4)
+    t, _ = pool.alloc_prompt(np.arange(6, dtype=np.int32), 6)
+    with pytest.raises(PoolExhausted, match="fork"):
+        pool.fork(t, 6)                        # needs 2 reserves, has 1
+    pool.check_invariants()
+    pool.free(t)
+
+
+def test_page_table_arrays_csr():
+    pool = KVPagePool(num_pages=8, page_size=4)
+    a, _ = pool.alloc_prompt(np.arange(6, dtype=np.int32), 6)
+    b, _ = pool.alloc_prompt(np.arange(9, dtype=np.int32), 9)
+    indptr, indices, lastlen = pool.page_table_arrays([a, b])
+    np.testing.assert_array_equal(indptr, [0, 2, 5])
+    np.testing.assert_array_equal(indices, a.pages + b.pages)
+    np.testing.assert_array_equal(lastlen, [2, 1])
+    pool.free(a), pool.free(b)
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="pool needs"):
+        KVPagePool(0, 4)
+    with pytest.raises(ValueError, match="pool needs"):
+        KVPagePool(4, 0)
+    pool = KVPagePool(2, 2)
+    with pytest.raises(ValueError, match="at least one token"):
+        pool.alloc_prompt(np.zeros(0, np.int32), 4)
+    with pytest.raises(ValueError, match="total_tokens"):
+        pool.alloc_prompt(np.zeros(3, np.int32), 2)
+
+
+# ---------------------------------------------------------------------------
+# randomized property test
+# ---------------------------------------------------------------------------
+
+def _drive(seed: int, steps: int = 120) -> None:
+    """Random alloc/register/append/fork/free sequence; the pool's
+    invariants must hold after EVERY operation, exhaustion must raise the
+    typed error exactly when predicted, and freeing the survivors must
+    return every page."""
+    rng = np.random.default_rng(seed)
+    ps = int(rng.integers(1, 6))
+    pool = KVPagePool(num_pages=int(rng.integers(4, 24)), page_size=ps)
+    live = []
+    for _ in range(steps):
+        op = int(rng.integers(0, 4))
+        if op == 0:                                      # admit
+            plen = int(rng.integers(1, 4 * ps + 1))
+            total = plen + int(rng.integers(0, 2 * ps + 1))
+            prompt = _prompt(rng, plen)
+            if pool.can_admit(prompt, total):
+                t, _ = pool.alloc_prompt(prompt, total)
+                live.append(t)
+                if rng.integers(0, 2):
+                    pool.register(prompt, t)
+            else:
+                with pytest.raises(PoolExhausted):
+                    pool.alloc_prompt(prompt, total)
+        elif op == 1 and live:                           # append one token
+            t = live[int(rng.integers(len(live)))]
+            needs_page = len(t.pages) < t.length // ps + 1 \
+                or pool._ref[t.pages[-1]] > 1
+            if needs_page and t.budget < 1:
+                with pytest.raises(PoolExhausted):
+                    pool.prepare_append(t)
+            else:
+                plan = pool.prepare_append(t)
+                assert 0 <= plan.page < pool.num_pages
+                assert plan.slot == t.length % ps
+                pool.commit_append(t)
+        elif op == 2 and live:                           # fork
+            t = live[int(rng.integers(len(live)))]
+            total = t.length + int(rng.integers(0, 2 * ps + 1))
+            reserve = 1 if t.length % ps else 0
+            need = pool.pages_for(total) - pool.pages_for(t.length) \
+                + 2 * reserve
+            if need <= pool.available:
+                live.append(pool.fork(t, total))
+            else:
+                with pytest.raises(PoolExhausted):
+                    pool.fork(t, total)
+        elif op == 3 and live:                           # free (+ double)
+            t = live.pop(int(rng.integers(len(live))))
+            pool.free(t)
+            with pytest.raises(RuntimeError):
+                pool.free(t)
+        pool.check_invariants()
+    for t in live:
+        pool.free(t)
+        pool.check_invariants()
+    assert pool.pages_in_use == 0, "pages leaked after freeing every table"
+    assert pool.available == len(pool._free) == pool.num_pages
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def test_pool_random_ops(seed):
+        _drive(seed)
+else:
+    @pytest.mark.parametrize("seed", range(40))
+    def test_pool_random_ops(seed):
+        _drive(seed)

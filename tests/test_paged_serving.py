@@ -1,0 +1,187 @@
+"""Paged-KV serving: the engine/scheduler acceptance bar for the page
+pool.
+
+The paged path must be bitwise-invisible in the tokens (same scheduler
+run, dense vs paged KV), share prompt-prefix pages across admissions,
+backpressure admission on pool pages (FIFO, no starvation, no deadlock
+mid-decode), fork live requests copy-on-write, and guard the dense-only
+engine entry points with clear errors.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import CacheConfig, get_config, reduced
+from repro.models import init_params
+from repro.serving import CollaborativeEngine, ContinuousBatchingScheduler, \
+    EngineConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral-8x7b"))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    return cfg, params
+
+
+def _engine(cfg, params, slots=4, capacity=64, **ecfg):
+    ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=2, policy="lru")
+    return CollaborativeEngine(
+        cfg, params, EngineConfig(cache=ccfg, max_batch=slots,
+                                  capacity=capacity, **ecfg),
+        key=jax.random.PRNGKey(3))
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 9)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def test_paged_tokens_bit_identical_to_dense(setup):
+    """Acceptance: the same request fleet through the scheduler with
+    dense per-slot KV and with the paged pool produces bit-identical
+    tokens — paging moves memory layout, never logits — and the drained
+    pool holds zero pages."""
+    cfg, params = setup
+
+    def run(paged):
+        eng = _engine(cfg, params, slots=4, kv_paged=paged, page_size=8)
+        sched = ContinuousBatchingScheduler(eng)
+        for p in _prompts(cfg, 6, seed=5):
+            sched.submit(p, max_new_tokens=6)
+        return eng, sched.run()
+
+    _, outs_d = run(False)
+    eng_p, outs_p = run(True)
+    assert sorted(outs_d) == sorted(outs_p)
+    for rid in outs_d:
+        np.testing.assert_array_equal(outs_d[rid], outs_p[rid])
+    assert eng_p.kv_pool.pages_in_use == 0
+    eng_p.kv_pool.check_invariants()
+    assert eng_p.stats.kv_pages_in_use == 0
+
+
+def test_prefix_sharing_across_admissions(setup):
+    """Admissions whose prompts share a full-page prefix adopt the
+    earlier request's pages: prefix_hits count, shared pages are not
+    duplicated, and the sharing requests' tokens still match a cold solo
+    run bitwise (sharing moves pages, never KV values)."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, cfg.vocab_size, 16)     # two full 8-pages
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab_size, 4)])
+               .astype(np.int32) for _ in range(3)]
+
+    eng = _engine(cfg, params, slots=3, kv_paged=True, page_size=8)
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [sched.submit(p, max_new_tokens=5) for p in prompts]
+    sched.step()                     # all three admitted concurrently
+    s = eng.stats
+    assert s.prefix_hits == 2        # second and third adopt the prefix
+    # 3 requests x 3 pages dense-equivalent = 9; 2 shared prefix pages
+    # counted once each: 9 - 2*2 = 5
+    assert eng.kv_pool.pages_in_use == 5
+    eng.kv_pool.check_invariants()
+    outs = sched.run()
+
+    solo_eng = _engine(cfg, params, slots=1, kv_paged=True, page_size=8)
+    solo = ContinuousBatchingScheduler(solo_eng)
+    r = solo.submit(prompts[2], max_new_tokens=5)
+    np.testing.assert_array_equal(solo.run()[r.rid], outs[reqs[2].rid])
+
+
+def test_page_backpressure_holds_fifo_head(setup):
+    """A pool too small for the whole fleet admits what fits, stalls the
+    FIFO head (admission_stalls counts the waiting ticks), and still
+    drains every request to completion as retirements free pages."""
+    cfg, params = setup
+    # each request needs ceil((8+8)/8) = 2 pages; 3 fit, the 4th waits
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(4)]
+    eng = _engine(cfg, params, slots=4, capacity=16, kv_paged=True,
+                  page_size=8, kv_pages=6)
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [sched.submit(p, max_new_tokens=8) for p in prompts]
+    sched.step()
+    assert sched.num_active == 3           # page pool, not slots, is the gate
+    assert eng.kv_pool.available == 0
+    outs = sched.run()
+    assert sorted(outs) == [r.rid for r in reqs]
+    for r in reqs:
+        assert len(outs[r.rid]) == 8       # nobody deadlocked mid-decode
+    assert sched.stats.admission_stalls > 0
+    assert eng.kv_pool.pages_in_use == 0
+
+
+def test_fork_shares_pages_and_matches_parent_greedy(setup):
+    """fork() clones a live greedy request copy-on-write: the child
+    shares every page at fork time (one CoW page appears on the next
+    append), and — decoding greedily from identical state — produces the
+    parent's exact continuation."""
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=2, kv_paged=True, page_size=8)
+    sched = ContinuousBatchingScheduler(eng)
+    parent = sched.submit(_prompts(cfg, 1, seed=7)[0], max_new_tokens=8)
+    sched.step()
+    sched.step()                           # a few tokens in
+    n_fork = len(parent.generated)
+    child = sched.fork(parent.rid)
+    assert len(child.generated) == n_fork  # born at the parent's progress
+    outs = sched.run()
+    np.testing.assert_array_equal(outs[parent.rid], outs[child.rid])
+    assert eng.stats.cow_forks >= 1        # the shared partial page copied
+    assert eng.kv_pool.pages_in_use == 0
+    eng.kv_pool.check_invariants()
+
+
+def test_fork_validation(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=2, kv_paged=True, page_size=8)
+    sched = ContinuousBatchingScheduler(eng)
+    req = sched.submit(_prompts(cfg, 1, seed=8)[0], max_new_tokens=4)
+    with pytest.raises(ValueError, match="not in a live slot"):
+        sched.fork(req.rid)                # still queued
+    sched.step()
+    with pytest.raises(ValueError, match="born done"):
+        sched.fork(req.rid, max_new_tokens=1)
+    with pytest.raises(ValueError, match="capacity"):
+        sched.fork(req.rid, max_new_tokens=500)
+    # dense scheduler: fork is a paged-only operation
+    eng_d = _engine(cfg, params, slots=2)
+    sched_d = ContinuousBatchingScheduler(eng_d)
+    rd = sched_d.submit(_prompts(cfg, 1, seed=8)[0], max_new_tokens=4)
+    sched_d.step()
+    with pytest.raises(RuntimeError, match="kv_paged"):
+        sched_d.fork(rd.rid)
+
+
+def test_dense_only_entry_points_guarded(setup):
+    """The single-request dense conveniences must refuse loudly under
+    kv_paged rather than silently bypass the pool."""
+    cfg, params = setup
+    eng = _engine(cfg, params, slots=2, kv_paged=True, page_size=8)
+    prompt = _prompts(cfg, 1, seed=4)[0][None, :]
+    for call in (lambda: eng.generate(prompt, steps=2),
+                 lambda: eng.prefill(prompt),
+                 lambda: eng.prefill_chunked(prompt),
+                 lambda: eng.prefill_request(prompt)):
+        with pytest.raises(RuntimeError, match="kv_paged"):
+            call()
+    # paged prefill requires the pool (init_slots) to exist first
+    with pytest.raises(RuntimeError, match="init_slots"):
+        eng.start_prefill(prompt)
+
+
+def test_engine_config_validation(setup):
+    cfg, params = setup
+    ccfg = CacheConfig(num_indexes=cfg.num_layers, num_ways=2, policy="lru")
+    with pytest.raises(ValueError, match="page_size"):
+        EngineConfig(cache=ccfg, kv_paged=True, capacity=64, page_size=0)
+    with pytest.raises(ValueError, match="divisible by page_size"):
+        EngineConfig(cache=ccfg, kv_paged=True, capacity=62, page_size=8)
+    with pytest.raises(ValueError, match="kv_pages"):
+        EngineConfig(cache=ccfg, kv_paged=True, capacity=64, page_size=8,
+                     kv_pages=4)

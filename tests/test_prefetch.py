@@ -118,6 +118,57 @@ def test_reserve_batch_protection():
     assert np.asarray(s1.tags)[0, 0] == 7
 
 
+def test_reserve_priority_ranks_retention():
+    """``priority`` adds to the reservation's age stamp: when a later
+    demand insert must evict a reserved way it takes the lowest-priority
+    reservation first — retention ranking with claim order untouched —
+    and the numpy twin replays the same choice."""
+    s = cache_lib.init_cache_state(CacheConfig(num_indexes=2, num_ways=3))
+    s, issued, _ = cache_lib.reserve(
+        s, jnp.int32(0), jnp.asarray([1, 2, 3], jnp.int32), "lru",
+        priority=jnp.asarray([0, 5, 0], jnp.int32))
+    assert np.asarray(issued).all()        # priority never blocks a claim
+    s = cache_lib.land(s)
+    s, hits, _, _ = _acc(s, 0, [7])        # evicts 1: lowest stamped age
+    assert not np.asarray(hits).any()
+    assert set(np.asarray(s.tags)[0].tolist()) == {7, 2, 3}
+    nc = NumpyCache(CacheConfig(num_indexes=2, num_ways=3), num_experts=8)
+    nc.reserve(0, [1, 2, 3], priority=[0, 5, 0])
+    nc.land()
+    nc.access(0, [7])
+    assert set(nc.tags[0].tolist()) == {7, 2, 3}
+
+
+def test_prediction_votes_counts_cross_batch():
+    """Votes are pairwise pick-equality counts; masked picks score 0 and
+    never contribute to a real pick's count."""
+    votes = collab.prediction_votes(
+        jnp.asarray([3, 5, 3, -1, 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(votes), [3, 1, 3, 0, 3])
+    # -1 masks must not vote for each other
+    votes = collab.prediction_votes(jnp.asarray([-1, -1, 2], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(votes), [0, 0, 1])
+
+
+def test_rank_votes_changes_retention_never_tokens(setup):
+    """prefetch_rank_votes stamps reservations with cross-batch vote
+    priority: the claimed set is identical (priority never blocks a
+    claim, so issued counts match exactly) and the generated tokens are
+    bit-identical — like every prefetch knob it moves residency, never
+    logits."""
+    cfg, params = setup
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(6), (2, 8), 0, cfg.vocab_size), np.int32)
+    out_rv, s_rv = _engine(cfg, params, True, max_batch=2).generate(
+        prompt, steps=12)
+    out_nr, s_nr = _engine(cfg, params, True, max_batch=2,
+                           prefetch_rank_votes=False).generate(
+        prompt, steps=12)
+    np.testing.assert_array_equal(out_rv, out_nr)
+    assert s_rv.prefetch_issued == s_nr.prefetch_issued
+    assert s_rv.predicted == s_nr.predicted
+
+
 def test_reserve_static_policy_and_coverage():
     ccfg = CacheConfig(num_indexes=2, num_ways=2, policy="random")
     s = cache_lib.init_cache_state(ccfg, num_experts=8,
