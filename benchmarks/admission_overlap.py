@@ -1,5 +1,5 @@
-"""Admission head-of-line-blocking microbenchmark: overlapped
-chunk-interleaved prefill on/off.
+"""Admission head-of-line-blocking microbenchmark: synchronous vs
+overlapped chunk-interleaved prefill vs segment-streamed prefill.
 
 Serves a small batch of *established* short-prompt requests through the
 continuous-batching scheduler, then admits a LONG-prompt newcomer
@@ -9,15 +9,26 @@ With synchronous admission (``admit_chunks_per_tick=0``) the newcomer's
 whole cache-warming replay runs on the admission tick, stalling every
 in-flight decode for the full prompt; with overlapped admission the slot
 sits in the PREFILLING phase and replays at most one chunk per tick
-between decode steps, so the established streams keep flowing.
+between decode steps — but the full-prompt prefill FORWARD still runs on
+the admission tick. Segment-streamed prefill (``prefill_segment``)
+removes that last O(prompt) step too: the admission tick only allocates,
+and each tick forwards ONE segment (KV append + cache warm fused), so
+the worst established-request gap is bounded by a segment.
 
-Reported per mode: p50/p99 established inter-token latency and the
-*stall* (max established inter-token gap, i.e. the admission tick).
+Reported per mode (off / on / seg): p50/p99 established inter-token
+latency and the *stall* (max established inter-token gap, i.e. the
+admission tick). A second episode measures prefix-skip TTFT: under paged
+KV + retention, a repeat admission of an identical prompt skips the
+shared span's forward outright — time-to-first-token and forwarded
+tokens both drop, tokens stay identical.
 Self-checks:
-  * established requests' decode tokens are BIT-identical between the
-    overlapped and the synchronous path (warming pace never touches
-    numerics) — and so are the newcomer's;
-  * the median-over-repeats stall is strictly lower with overlap on.
+  * established requests' decode tokens are BIT-identical across all
+    three modes (prefill pacing never touches numerics) — and so are
+    the newcomer's;
+  * the median-over-repeats stall is strictly lower with overlap on
+    than off, and strictly lower again with segment streaming;
+  * the prefix-hit admission forwards fewer tokens than the cold one
+    and produces the identical output tokens.
 
     PYTHONPATH=src python -m benchmarks.admission_overlap [--json PATH]
         [--repeats 2] [--long-prompt 48] [--chunk 4]
@@ -36,9 +47,13 @@ ESTABLISHED = 2
 EST_PROMPT = 6
 EST_TOKENS = 24
 NEW_TOKENS = 4
+MODES = (("off", 0, 0), ("on", 1, 0), ("seg", 1, 1))
+PREFIX_PROMPT = 32
+PREFIX_TOKENS = 6
 
 
-def serve_once(admit_chunks: int, long_prompt: int, chunk: int, seed: int):
+def serve_once(admit_chunks: int, long_prompt: int, chunk: int, seed: int,
+               segment: int = 0):
     """One admission episode. Returns (established outputs {rid: tokens},
     newcomer tokens, established inter-token gaps [s] from the admission
     window, RunStats)."""
@@ -50,6 +65,7 @@ def serve_once(admit_chunks: int, long_prompt: int, chunk: int, seed: int):
                      serving=dict(max_batch=SLOTS,
                                   capacity=long_prompt + NEW_TOKENS + 8,
                                   prefill_chunk=chunk,
+                                  prefill_segment=segment,
                                   admit_chunks_per_tick=admit_chunks),
                      seed=seed)
     rng = np.random.default_rng(seed)
@@ -99,55 +115,128 @@ def main() -> None:
 
     print(f"=== admission overlap: {ESTABLISHED} established requests, "
           f"{args.long_prompt}-token prompt admits mid-stream "
-          f"({n_chunks} warm chunks) ===")
-    stalls = {0: [], 1: []}
-    gaps_all = {0: [], 1: []}
+          f"({n_chunks} warm chunks / segments) ===")
+    stalls = {name: [] for name, _, _ in MODES}
+    gaps_all = {name: [] for name, _, _ in MODES}
     last = {}
     for rep in range(args.repeats):
-        for admit in (0, 1):
+        for name, admit, seg in MODES:
             est, new, gaps, stats = serve_once(
-                admit, args.long_prompt, args.chunk, seed=rep)
-            stalls[admit].append(float(gaps.max()))
-            gaps_all[admit] += list(gaps)
-            last[admit] = (est, new, stats)
+                admit, args.long_prompt, args.chunk, seed=rep,
+                segment=seg * args.chunk)
+            stalls[name].append(float(gaps.max()))
+            gaps_all[name] += list(gaps)
+            last[name] = (est, new, stats)
 
-    for admit, name in ((0, "off"), (1, "on")):
-        g = np.asarray(gaps_all[admit])
-        stall = float(np.median(stalls[admit]))
+    for name, _, _ in MODES:
+        g = np.asarray(gaps_all[name])
+        stall = float(np.median(stalls[name]))
         emit(f"admission_overlap.inter_token_p50.{name}",
              float(np.percentile(g, 50)) * 1e6,
-             f"established inter-token p50 (overlap {name})")
+             f"established inter-token p50 (mode {name})")
         emit(f"admission_overlap.inter_token_p99.{name}",
              float(np.percentile(g, 99)) * 1e6,
-             f"established inter-token p99 (overlap {name})")
+             f"established inter-token p99 (mode {name})")
         emit(f"admission_overlap.stall.{name}", stall * 1e6,
              f"max established inter-token gap during admission "
              f"(median of {args.repeats} repeats)")
-        record_run(f"admission_overlap.{name}", last[admit][2])
+        record_run(f"admission_overlap.{name}", last[name][2])
 
-    # self-check 1: overlapping the warm replay never changes tokens —
-    # established AND newcomer decode bit-identical to synchronous
-    est_off, new_off, _ = last[0]
-    est_on, new_on, _ = last[1]
-    assert sorted(est_on) == sorted(est_off)
-    for rid in est_off:
-        np.testing.assert_array_equal(est_on[rid], est_off[rid])
-    np.testing.assert_array_equal(new_on, new_off)
+    # self-check 1: prefill pacing never changes tokens — established
+    # AND newcomer decode bit-identical across all three modes
+    est_off, new_off, _ = last["off"]
+    for name in ("on", "seg"):
+        est_m, new_m, _ = last[name]
+        assert sorted(est_m) == sorted(est_off)
+        for rid in est_off:
+            np.testing.assert_array_equal(est_m[rid], est_off[rid])
+        np.testing.assert_array_equal(new_m, new_off)
     print("[self-check OK] established + newcomer tokens bit-identical "
-          "(overlap on vs off)")
+          "(off vs on vs seg)")
 
-    # self-check 2: the head-of-line stall really shrank — the admission
-    # tick no longer carries the whole warm replay
-    stall_off = float(np.median(stalls[0]))
-    stall_on = float(np.median(stalls[1]))
+    # self-check 2: the head-of-line stall really shrank — overlap moves
+    # the warm replay off the admission tick, segment streaming moves
+    # the prefill forward itself off it too
+    stall_off = float(np.median(stalls["off"]))
+    stall_on = float(np.median(stalls["on"]))
+    stall_seg = float(np.median(stalls["seg"]))
     assert stall_on < stall_off, \
         ("overlapped admission must lower the established-request stall",
          stall_on, stall_off)
+    assert stall_seg < stall_on, \
+        ("segment-streamed prefill must lower the stall below the "
+         "overlapped replay (the full-prompt forward left the admission "
+         "tick)", stall_seg, stall_on)
     print(f"[self-check OK] admission stall {stall_off * 1e3:.1f} -> "
-          f"{stall_on * 1e3:.1f} ms "
-          f"({(1 - stall_on / max(stall_off, 1e-12)) * 100:.0f}% lower)")
+          f"{stall_on * 1e3:.1f} -> {stall_seg * 1e3:.1f} ms "
+          f"(seg {(1 - stall_seg / max(stall_off, 1e-12)) * 100:.0f}% "
+          f"below sync)")
+
+    prefix_ttft(args)
     if args.json:
         dump_json(args.json)
+
+
+def prefix_ttft(args) -> None:
+    """Prefix-skip episode: paged KV + retention + segment streaming.
+
+    Admits a PREFIX_PROMPT-token request cold, retires it, then admits
+    the IDENTICAL prompt again — the prefix index serves the repeat from
+    retained pages and the segment stream starts past the shared span,
+    so only the last prompt token forwards. Measures time-to-first-token
+    for both and self-checks: fewer forwarded prompt tokens, skipped
+    tokens counted, identical output tokens."""
+    from repro.config import get_config, reduced
+    from repro.serving import build
+
+    cfg = reduced(get_config("mixtral-8x7b"))
+    cap = -(-(PREFIX_PROMPT + PREFIX_TOKENS + 8) // 4) * 4
+    _, sched = build(cfg,
+                     serving=dict(max_batch=2,
+                                  capacity=cap,
+                                  prefill_chunk=args.chunk,
+                                  prefill_segment=args.chunk,
+                                  admit_chunks_per_tick=1,
+                                  kv_paged=True, page_size=4,
+                                  prefix_keep_pages=64),
+                     seed=0)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, PREFIX_PROMPT)
+    warmup = rng.integers(0, cfg.vocab_size, PREFIX_PROMPT)
+    engine = sched.engine
+
+    def admit_once(p):
+        first = []
+        t0 = time.perf_counter()
+        req = sched.submit(p, max_new_tokens=PREFIX_TOKENS,
+                           on_token=lambda tok, done:
+                           first.append(time.perf_counter())
+                           if not first else None)
+        before = engine.stats.prefill_tokens
+        outs = sched.run()
+        return (first[0] - t0, outs[req.rid],
+                engine.stats.prefill_tokens - before)
+
+    # one throwaway admission (DIFFERENT prompt — it must not seed the
+    # prefix index for the measured pair) warms the compile caches so
+    # the cold/hit TTFT contrast measures work, not tracing
+    admit_once(warmup)
+    ttft_cold, out_cold, fwd_cold = admit_once(prompt)
+    ttft_hit, out_hit, fwd_hit = admit_once(prompt)
+    stats = engine.stats
+    emit("admission_overlap.prefix_ttft.cold", ttft_cold * 1e6,
+         f"TTFT, cold {PREFIX_PROMPT}-token prompt (segmented, paged)")
+    emit("admission_overlap.prefix_ttft.hit", ttft_hit * 1e6,
+         f"TTFT, identical prompt re-admitted (prefix pages retained)")
+    record_run("admission_overlap.prefix", sched.stats)
+
+    np.testing.assert_array_equal(out_cold, out_hit)
+    assert fwd_hit < fwd_cold, \
+        ("prefix hit must forward fewer prompt tokens", fwd_hit, fwd_cold)
+    assert stats.prefix_tokens_skipped > 0
+    print(f"[self-check OK] prefix skip: {fwd_cold} -> {fwd_hit} forwarded "
+          f"prompt tokens, {stats.prefix_tokens_skipped} skipped, tokens "
+          f"identical; TTFT {ttft_cold * 1e3:.1f} -> {ttft_hit * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

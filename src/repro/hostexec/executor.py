@@ -51,6 +51,17 @@ class HostExpertExecutor:
     thin to amortize the thread handoff, but a ``[Gs, A, D] @ [Gs, D,
     F]`` batched GEMM over the stacked small groups runs them in a
     single BLAS call. 0 disables fusion.
+
+    Worker fan-out is census-driven per step rather than fixed: the
+    effective thread count follows the step's miss-group census —
+    one worker per group up to 8, then sublinearly (HybriMoE's Table
+    III scaling: past ~8 threads the expert FFN is memory-bandwidth
+    bound, so extra workers mostly contend), capped by ``threads``.
+    Groups are bucketed one bucket per effective worker, and a repeat
+    expert is pinned to the bucket that ran it last (its weight rows
+    are warm in that worker's core-local cache). All of it is schedule
+    only — every group still computes the same rows into disjoint
+    output slices, so numerics never move.
     """
 
     def __init__(self, w1, w3, w2, threads: int = 8, fuse_small: int = 0):
@@ -63,12 +74,29 @@ class HostExpertExecutor:
             ThreadPoolExecutor(max_workers=self.threads,
                                thread_name_prefix="hostexec")
             if self.threads > 1 else None)
+        # sticky expert -> bucket assignments for worker affinity
+        self._affinity: dict = {}
         # host-side telemetry: a floor, not a ledger — pure_callback may
         # legally re-invoke, so the exact count lives in the traced
         # EngineStats channel; these confirm the pool really ran
         self.calls = 0
         self.groups = 0
         self.fused = 0
+        # census-threading telemetry: steps that picked a worker count,
+        # the summed effective workers (mean = census_threads /
+        # census_calls), and groups that landed on their pinned bucket
+        self.census_calls = 0
+        self.census_threads = 0
+        self.affinity_hits = 0
+
+    def _effective_threads(self, census: int) -> int:
+        """Workers for this step's miss-group census: linear to 8, then
+        sublinear (sqrt growth past the bandwidth knee), capped by the
+        pool size."""
+        if census <= 0:
+            return 1
+        eff = census if census <= 8 else 8 + int(np.sqrt(census - 8))
+        return max(1, min(self.threads, eff))
 
     def compute_groups(self, layer, rep_e, run, xbuf,
                        counts=None) -> np.ndarray:
@@ -109,7 +137,31 @@ class HostExpertExecutor:
                                          self.w2[layer, e])
 
             if self._pool is not None and big.size > 1:
-                list(self._pool.map(one, big))
+                # census-driven fan-out: one bucket per effective worker,
+                # repeat experts pinned to the bucket that ran them last
+                eff = self._effective_threads(int(big.size))
+                self.census_calls += 1
+                self.census_threads += eff
+                buckets: list = [[] for _ in range(eff)]
+                for g in big:
+                    e = int(rep_e[g])
+                    b = self._affinity.get(e, -1)
+                    if 0 <= b < eff:
+                        self.affinity_hits += 1
+                    else:
+                        b = min(range(eff), key=lambda i: len(buckets[i]))
+                        self._affinity[e] = b
+                    buckets[b].append(int(g))
+
+                def run_bucket(groups) -> None:
+                    for g in groups:
+                        one(g)
+
+                if eff > 1:
+                    list(self._pool.map(
+                        run_bucket, [bk for bk in buckets if bk]))
+                else:
+                    run_bucket(buckets[0])
             else:
                 for g in big:
                     one(g)

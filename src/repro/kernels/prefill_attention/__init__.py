@@ -1,0 +1,5 @@
+from .paged import paged_flash_prefill
+from .ops import paged_prefill_attention
+from . import ref
+
+__all__ = ["paged_flash_prefill", "paged_prefill_attention", "ref"]

@@ -6,7 +6,8 @@ continuous batching, or the plain generic path for non-MoE archs.
         [--concurrency 4 --requests 8] [--temperature 0.8 --top-p 0.95] \
         [--prefetch --prefetch-min-prob 0.2] \
         [--host-compute --host-threads 8 --host-backend callback] \
-        [--kv-paged --page-size 16 --kv-pages 64]
+        [--kv-paged --page-size 16 --kv-pages 64] \
+        [--prefill-segment 8 --prefix-keep-pages 16]
 
 Reduced configs by default (this is a CPU container); the full configs are
 exercised via the dry-run. Prints tokens/s and the paper's cache counters.
@@ -49,6 +50,16 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="cache-warming chunked-prefill chunk "
                          "(0 = bypass prefill, cold cache)")
+    ap.add_argument("--prefill-segment", type=int, default=0,
+                    help="segment-streamed prefill: forward the prompt in "
+                         "this-many-token segments between decode ticks, "
+                         "fusing KV append and cache warm per segment "
+                         "(0 = one full-prompt forward at admission)")
+    ap.add_argument("--prefix-keep-pages", type=int, default=0,
+                    help="with --kv-paged: park up to this many zero-ref "
+                         "prefix-indexed pages in an eviction LRU at "
+                         "request retirement so same-prefix admissions "
+                         "can adopt them (0 = free eagerly)")
     ap.add_argument("--admit-chunks-per-tick", type=int, default=0,
                     help="overlapped admission: advance a newly admitted "
                          "request's cache-warming replay by at most this "
@@ -122,6 +133,8 @@ def main() -> None:
                  if prefetch else "")
               + (f" overlap_admit({args.admit_chunks_per_tick} chunks/tick)"
                  if args.admit_chunks_per_tick else "")
+              + (f" segmented_prefill({args.prefill_segment} tok/seg)"
+                 if args.prefill_segment else "")
               + (f" max_queue={args.max_queue}"
                  if args.max_queue is not None else "")
               + (f" host_compute({args.host_backend}, "
@@ -135,6 +148,7 @@ def main() -> None:
             serving=dict(max_batch=args.concurrency,
                          capacity=capacity,
                          prefill_chunk=args.prefill_chunk,
+                         prefill_segment=args.prefill_segment,
                          admit_chunks_per_tick=args.admit_chunks_per_tick,
                          prefetch=prefetch,
                          prefetch_min_prob=args.prefetch_min_prob,
@@ -143,7 +157,8 @@ def main() -> None:
                          host_backend=args.host_backend,
                          kv_paged=args.kv_paged,
                          page_size=args.page_size,
-                         kv_pages=args.kv_pages),
+                         kv_pages=args.kv_pages,
+                         prefix_keep_pages=args.prefix_keep_pages),
             seed=args.seed, params=params, max_queue=args.max_queue)
         rng = np.random.default_rng(args.seed)
         for r in range(R):
@@ -184,11 +199,16 @@ def main() -> None:
                   f"({stats.fused_groups} fused, offload rate "
                   f"{stats.cpu_offload_rate:.3f}, "
                   f"backend={args.host_backend})")
+        if args.prefill_segment:
+            print(f"  segmented prefill: {stats.prefill_segments} segments "
+                  f"({args.prefill_segment} tok/seg), "
+                  f"{stats.prefix_tokens_skipped} prefix tokens skipped")
         if args.kv_paged:
             print(f"  paged KV: page_size={args.page_size} "
                   f"pages_in_use={stats.kv_pages_in_use} "
                   f"prefix_hits={stats.prefix_hits} "
-                  f"cow_forks={stats.cow_forks}")
+                  f"cow_forks={stats.cow_forks} "
+                  f"prefix_pages_retained={stats.prefix_pages_retained}")
     else:
         print(f"[serve] generic path: {cfg.name}")
         batch = {"tokens": jnp.asarray(prompt)}

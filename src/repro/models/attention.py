@@ -74,8 +74,9 @@ def _rope_qk(q, k, positions, cfg):
 # Chunked-flash full-sequence attention (train / prefill)
 # --------------------------------------------------------------------------
 
-def _mask_for(Sq: int, chunk: int, c_start, window, causal: bool):
-    q_pos = jnp.arange(Sq)
+def _mask_for(Sq: int, chunk: int, c_start, window, causal: bool,
+              q_offset=0):
+    q_pos = q_offset + jnp.arange(Sq)
     k_pos = c_start + jnp.arange(chunk)
     dist = q_pos[:, None] - k_pos[None, :]               # [Sq, chunk]
     mask = jnp.ones((Sq, chunk), bool)
@@ -114,7 +115,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out
 
 
-def _flash_fwd_scan(q, k, v, window, causal: bool, chunk: int):
+def _flash_fwd_scan(q, k, v, window, causal: bool, chunk: int, q_offset=0):
     B, Sq, H, hd = q.shape
     Sk, Hk = k.shape[1], k.shape[2]
     group = H // Hk
@@ -133,7 +134,7 @@ def _flash_fwd_scan(q, k, v, window, causal: bool, chunk: int):
         vrep = _rep(vcb, group)
         s = jnp.einsum("bqhd,bkhd->bqhk", qf, krep.astype(jnp.float32))
         s = constrain(s, ("pod", "data"), None, "model", None)
-        mask = _mask_for(Sq, s.shape[-1], c_start, window, causal)
+        mask = _mask_for(Sq, s.shape[-1], c_start, window, causal, q_offset)
         s = jnp.where(mask[None, :, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -217,6 +218,97 @@ def self_attention(p: Params, x: jax.Array, positions: jax.Array, cfg,
     o = flash_attention(q, k, v, window=window, causal=causal)
     o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
     return o @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# Segment-streamed prefill (q_len == C prompt tokens at offset pos)
+# --------------------------------------------------------------------------
+
+def segment_attention(p: Params, x: jax.Array, cache: Params, pos: jax.Array,
+                      positions: jax.Array, cfg,
+                      window: jax.Array | int = -1) -> Tuple[jax.Array, Params]:
+    """Prompt-segment attention against a request's dense KV cache.
+
+    x: [B, C, D] — one C-token prompt segment whose first token sits at
+    absolute position ``pos`` (int32 scalar); cache k/v: [B, S, Hk, hd].
+    The segment's K/V is scattered into slots ``pos..pos+C-1`` (rows past
+    capacity drop), then the queries run the SAME chunked-flash scan as
+    the one-shot prefill over the full capacity axis with the causal mask
+    offset by ``pos`` — every op from the score einsum on is shared with
+    :func:`self_attention`, and flash rows are independent, so a row's
+    output is bitwise identical to the one-shot forward's row.
+    Returns (output [B, C, D], updated cache).
+    """
+    B, C, _ = x.shape
+    S = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    q, k_new = _rope_qk(q, k_new, positions, cfg)
+
+    idx = jnp.asarray(pos, jnp.int32) + jnp.arange(C)      # [C] absolute
+    dst = jnp.where(idx < S, idx, S)                       # overflow drops
+    k_cache = cache["k"].at[:, dst].set(k_new, mode="drop")
+    v_cache = cache["v"].at[:, dst].set(v_new, mode="drop")
+
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    k_att = constrain(k_cache, ("pod", "data"), None, None, None)
+    o, _ = _flash_fwd_scan(q, k_att, v_cache, window, True, 1024,
+                           q_offset=jnp.asarray(pos, jnp.int32))
+    o = o.reshape(B, C, cfg.num_heads * cfg.head_dim)
+    return o @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+def segment_attention_paged(p: Params, x: jax.Array, cache: Params,
+                            pos: jax.Array, positions: jax.Array,
+                            pages: jax.Array, cfg,
+                            window: jax.Array | int = -1,
+                            write_min: Optional[jax.Array] = None,
+                            write_max: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, Params]:
+    """Prompt-segment attention against the global paged KV pool.
+
+    x: [B, C, D]; cache k/v: [num_pages, page_size, Hk, hd]; pages:
+    [B, max_pages] page table (padded entries are causally masked); pos:
+    the segment's first absolute position. K/V rows land through the page
+    table only where ``write_min <= idx < write_max`` — shared prefix
+    pages (other requests still reference them) and pad rows past the
+    prompt are never rewritten; out-of-range rows redirect to page id
+    ``num_pages`` and drop. The pool is then gathered into the dense
+    [B, max_pages*page_size, Hk, hd] view and scored by the same offset
+    flash scan as :func:`segment_attention`, so paged and dense segment
+    outputs are bitwise identical.
+    Returns (output [B, C, D], updated pool).
+    """
+    B, C, _ = x.shape
+    N, page_size = cache["k"].shape[0], cache["k"].shape[1]
+    max_pages = pages.shape[1]
+    S = max_pages * page_size                    # logical capacity
+    Hk, hd = cfg.num_kv_heads, cfg.head_dim
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    q, k_new = _rope_qk(q, k_new, positions, cfg)
+
+    idx = jnp.asarray(pos, jnp.int32) + jnp.arange(C)      # [C] absolute
+    ok = idx < S
+    if write_min is not None:
+        ok &= idx >= write_min
+    if write_max is not None:
+        ok &= idx < write_max
+    slot = jnp.minimum(idx, S - 1)
+    page = jnp.take_along_axis(
+        pages, jnp.broadcast_to((slot // page_size)[None, :], (B, C)), axis=1)
+    page = jnp.where(ok[None, :], page, N)                 # [B, C]
+    off = jnp.broadcast_to((slot % page_size)[None, :], (B, C))
+    k_pool = cache["k"].at[page, off].set(k_new, mode="drop")
+    v_pool = cache["v"].at[page, off].set(v_new, mode="drop")
+
+    k_cache = k_pool[pages].reshape(B, S, Hk, hd)
+    v_cache = v_pool[pages].reshape(B, S, Hk, hd)
+
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    k_att = constrain(k_cache, ("pod", "data"), None, None, None)
+    o, _ = _flash_fwd_scan(q, k_att, v_cache, window, True, 1024,
+                           q_offset=jnp.asarray(pos, jnp.int32))
+    o = o.reshape(B, C, cfg.num_heads * hd)
+    return o @ p["wo"], {"k": k_pool, "v": v_pool}
 
 
 # --------------------------------------------------------------------------

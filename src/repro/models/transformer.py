@@ -11,6 +11,11 @@ Modes:
   train   — logits for the full sequence (+ MoE aux loss), no caches.
   prefill — logits of the last position + populated decode state.
   decode  — one token in, logits + in-place-updated state (donate it).
+  segment — a [C]-token prompt segment at offset ``state["pos"]`` against
+            the request's existing KV (offset causal mask): appends the
+            segment's KV in place (dense slot or paged pool via ``pages``)
+            and emits the segment's routing trace, so a prompt forward can
+            stream across scheduler ticks (repro.serving.engine).
 """
 from __future__ import annotations
 
@@ -136,19 +141,25 @@ def init_state(cfg: ModelConfig, batch: int, capacity: int) -> Params:
 
 def _apply_layer(lp: Params, x: jax.Array, slot: Slot, cfg: ModelConfig,
                  positions, mode: str, state: Optional[Params], pos,
-                 want_trace: bool = False
+                 want_trace: bool = False, pages=None,
+                 kv_write_min=None, kv_write_max=None
                  ) -> Tuple[jax.Array, Optional[Params], jax.Array,
                             Optional[Params]]:
     """Returns (x, new_state, aux_loss, routing trace).
 
-    ``want_trace`` (prefill-mode MoE slots only) additionally emits the
-    per-layer routing trace — ``top_i``/``top_w`` [B, S, K] and the
+    ``want_trace`` (prefill/segment-mode MoE slots only) additionally emits
+    the per-layer routing trace — ``top_i``/``top_w`` [B, S, K] and the
     post-ln2 hidden states ``h2`` [B, S, D] — that the serving engine's
     cache-warming replay consumes (repro.serving.engine). The trace is
     derived from the SAME router weights and the SAME h2 that moe_apply
     consults, so replaying it reproduces the prompt's expert demand
     exactly; emitting it never changes x / new_state / aux. Trace is None
-    everywhere else (the default skips the O(L*S*D) materialization)."""
+    everywhere else (the default skips the O(L*S*D) materialization).
+
+    Segment mode appends a [C]-token prompt segment at offset ``pos`` to
+    the layer's KV (dense cache, or the paged pool when ``pages`` is a
+    [B, max_pages] table; ``kv_write_min``/``kv_write_max`` bound which
+    absolute positions may land — shared prefix pages stay immutable)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     new_state = None
@@ -156,6 +167,14 @@ def _apply_layer(lp: Params, x: jax.Array, slot: Slot, cfg: ModelConfig,
         if mode == "decode":
             o, new_state = attn.decode_attention(lp["attn"], h, state, pos, cfg,
                                                  slot.window)
+        elif mode == "segment":
+            if pages is not None:
+                o, new_state = attn.segment_attention_paged(
+                    lp["attn"], h, state, pos, positions, pages, cfg,
+                    slot.window, kv_write_min, kv_write_max)
+            else:
+                o, new_state = attn.segment_attention(
+                    lp["attn"], h, state, pos, positions, cfg, slot.window)
         else:
             o = attn.self_attention(lp["attn"], h, positions, cfg, slot.window)
             if mode == "prefill":
@@ -167,6 +186,9 @@ def _apply_layer(lp: Params, x: jax.Array, slot: Slot, cfg: ModelConfig,
     else:
         if mode == "decode":
             o, new_state = ssm.mamba_apply(lp["mamba"], h, cfg, state, decode=True)
+        elif mode == "segment":
+            raise NotImplementedError(
+                "segment-streamed prefill supports attention layers only")
         elif mode == "prefill":
             o, new_state = ssm.mamba_apply(
                 lp["mamba"], h, cfg, ssm.init_ssm_state(cfg, x.shape[0]))
@@ -181,7 +203,7 @@ def _apply_layer(lp: Params, x: jax.Array, slot: Slot, cfg: ModelConfig,
             # prefill-dropped token would diverge from the decode path
             cf = None if mode == "train" else cfg.moe.serve_capacity_factor
             f, aux = moe_apply(lp["moe"], h2, cfg.moe, capacity_factor=cf)
-            if want_trace and mode == "prefill":
+            if want_trace and mode in ("prefill", "segment"):
                 B, S, _ = h2.shape
                 K = cfg.moe.top_k
                 _, top_i, top_w = route(lp["moe"]["router"],
@@ -224,25 +246,42 @@ def _positions(batch: Dict[str, jax.Array], cfg: ModelConfig, S: int, B: int):
 
 def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
              mode: str, state: Optional[Params] = None,
-             remat: bool = True, want_trace: bool = False
+             remat: bool = True, want_trace: bool = False,
+             pages: Optional[jax.Array] = None,
+             kv_write_min=None, kv_write_max=None
              ) -> Tuple[jax.Array, Optional[Params], jax.Array,
                         Optional[Params]]:
     """Runs embedding + all layers. Returns (hidden, new_state, aux, trace).
 
-    ``want_trace`` (prefill mode only) collects every MoE layer's routing
-    trace into a pytree mirroring the scan/rem param structure:
+    ``want_trace`` (prefill/segment modes) collects every MoE layer's
+    routing trace into a pytree mirroring the scan/rem param structure:
     ``trace["scan"]["s{j}"]`` holds ``top_i``/``top_w`` [G, B, S, K] and
     ``h2`` [G, B, S, D] for MoE slot j (plus ``trace["rem"]`` for
     remainder MoE layers). This is the ONE prefill implementation — the
     serving engine replays the trace to warm its expert cache; there is no
     hand-mirrored copy of the prefill branch anywhere else. Trace is None
-    without the flag (and the trace materialization is skipped)."""
+    without the flag (and the trace materialization is skipped).
+
+    Segment mode streams a prompt forward: ``batch["tokens"]`` holds one
+    [B, C] segment, ``state["pos"]`` its first absolute position, and the
+    per-layer states carry the request's KV so far (dense [B, cap] slots,
+    or the paged pool with ``pages``/``kv_write_min``/``kv_write_max``
+    forwarded to the paged segment attention). The forward IS the trace
+    source — first-token logits emerge once the caller has streamed the
+    last segment."""
     slots, G, R = build_slots(cfg)
-    want_trace = want_trace and mode == "prefill"
+    want_trace = want_trace and mode in ("prefill", "segment")
     x = _embed_inputs(params, batch, cfg)
     B, S = x.shape[0], x.shape[1]
-    pos = state["pos"] if mode == "decode" else None
-    positions = _positions(batch, cfg, S, B) if mode != "decode" else None
+    pos = state["pos"] if mode in ("decode", "segment") else None
+    if mode == "decode":
+        positions = None
+    elif mode == "segment":
+        p = pos + jnp.arange(S)[None]                      # [1, S] absolute
+        positions = jnp.stack([jnp.broadcast_to(p, (B, S))] * 3) \
+            if cfg.mrope else p
+    else:
+        positions = _positions(batch, cfg, S, B)
 
     # Nested remat for multi-slot periods (jamba: 8 sub-layers/group): the
     # outer checkpoint alone would rematerialize ALL sub-layers' internals
@@ -261,7 +300,9 @@ def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
             layer_fn = functools.partial(_apply_layer, slot=slot, cfg=cfg,
                                          positions=positions, mode=mode,
                                          state=st, pos=pos,
-                                         want_trace=want_trace)
+                                         want_trace=want_trace, pages=pages,
+                                         kv_write_min=kv_write_min,
+                                         kv_write_max=kv_write_max)
             if nested:
                 layer_fn = jax.checkpoint(layer_fn)
             x, new_st, a, tr = layer_fn(lp_group[f"s{j}"], x)
@@ -275,7 +316,7 @@ def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     body = jax.checkpoint(group_body) if (remat and mode == "train") else group_body
 
     xs: Dict[str, Any] = {"params": params["scan"]}
-    if mode == "decode":
+    if mode in ("decode", "segment"):
         xs["state"] = state["scan"]
     (x, aux), (scan_states, scan_traces) = jax.lax.scan(
         body, (x, jnp.zeros((), jnp.float32)), xs)
@@ -284,10 +325,12 @@ def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     rem_traces = {}
     for j in range(R):
         slot = slots[j % len(slots)]
-        st = state["rem"][f"r{j}"] if mode == "decode" else None
+        st = state["rem"][f"r{j}"] if mode in ("decode", "segment") else None
         x, new_st, a, tr = _apply_layer(params["rem"][f"r{j}"], x, slot, cfg,
                                         positions, mode, st, pos,
-                                        want_trace=want_trace)
+                                        want_trace=want_trace, pages=pages,
+                                        kv_write_min=kv_write_min,
+                                        kv_write_max=kv_write_max)
         if new_st is not None:
             rem_states[f"r{j}"] = new_st
         if tr is not None:
@@ -297,12 +340,16 @@ def backbone(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
 
     new_state = None
-    if mode in ("prefill", "decode"):
+    if mode in ("prefill", "decode", "segment"):
         new_state = {"scan": scan_states}
         if R:
             new_state["rem"] = rem_states
-        new_state["pos"] = (state["pos"] + 1) if mode == "decode" \
-            else jnp.asarray(S, jnp.int32)
+        if mode == "decode":
+            new_state["pos"] = state["pos"] + 1
+        elif mode == "segment":
+            new_state["pos"] = jnp.asarray(state["pos"] + S, jnp.int32)
+        else:
+            new_state["pos"] = jnp.asarray(S, jnp.int32)
     trace = None
     if want_trace:
         trace = {"scan": scan_traces}

@@ -38,6 +38,22 @@ logits come from the trace in every mode, so warming — however paced —
 changes cache residency and the ``prefill_*`` stat channel, never the
 generated tokens.
 
+With ``EngineConfig.prefill_segment`` the admission-tick forward itself
+goes incremental: :meth:`start_prefill` only tokenizes and (paged)
+allocates pages, and each :meth:`advance_prefill` runs ONE C-token
+prompt segment through the backbone's segment mode — the segment
+attends to the request's KV so far at its absolute offset, appends its
+own KV (dense slot or pool pages), and its freshly emitted routing
+trace warms the cache inside the same jitted step (the forward IS the
+trace source; no separate replay pass). First-token logits emerge at
+the last segment, so the per-tick admission cost drops from O(prompt)
+to O(segment). Under paged KV a prefix-index hit skips the shared
+span's forward AND warm outright — only the unshared suffix is ever
+forwarded — counted in ``prefix_tokens_skipped``. Tokens stay
+bit-identical to the one-shot forward: a segment row's flash-attention
+chunk decomposition over the key axis is independent of how the query
+axis is sliced, and the MoE combine is row-order invariant.
+
 The engine is *batch-capable*: one decode step serves up to
 ``EngineConfig.max_batch`` concurrent requests, each at its own sequence
 position (per-slot KV positions), all sharing ONE expert cache. The
@@ -98,6 +114,13 @@ class EngineConfig:
     # newcomer warms. 0 = synchronous admission (the whole replay runs on
     # the admission tick — head-of-line blocking on long prompts).
     admit_chunks_per_tick: int = 0
+    # segment-streamed prefill: forward the prompt in this-many-token
+    # segments, one advance_prefill call each, instead of one full-prompt
+    # forward on the admission tick (0 = one-shot). Each segment appends
+    # its own KV and warms the expert cache from its own routing trace in
+    # the same jitted step; prefill_chunk degrades to an on/off warming
+    # toggle here (the warm granularity IS the segment).
+    prefill_segment: int = 0
     # live host execution (repro.hostexec): compute cache-miss experts on
     # the CPU when the cost model favors it over the weight fetch
     host_compute: bool = False
@@ -115,6 +138,11 @@ class EngineConfig:
     kv_paged: bool = False
     page_size: int = 16           # tokens per KV page
     kv_pages: Optional[int] = None  # pool size (None = dense-equivalent)
+    # paged KV: when a retiring request drops the last reference on
+    # prefix-indexed pages, park up to this many in the pool's eviction
+    # LRU instead of freeing them — a later admission with the same
+    # prompt prefix adopts them back (0 = free eagerly)
+    prefix_keep_pages: int = 0
     # rank speculative-prefetch reservations by cross-batch vote count so
     # experts many rows predict claim cache ways first
     prefetch_rank_votes: bool = True
@@ -127,6 +155,16 @@ class EngineConfig:
             raise ValueError(
                 f"admit_chunks_per_tick must be >= 0, got "
                 f"{self.admit_chunks_per_tick}")
+        if self.prefill_segment < 0:
+            raise ValueError(
+                f"prefill_segment must be >= 0, got {self.prefill_segment}")
+        if self.prefix_keep_pages < 0:
+            raise ValueError(
+                f"prefix_keep_pages must be >= 0, got "
+                f"{self.prefix_keep_pages}")
+        if self.prefix_keep_pages > 0 and not self.kv_paged:
+            raise ValueError(
+                "prefix_keep_pages retains pool pages: it requires kv_paged")
         if not 0.0 <= self.prefetch_min_prob < 1.0:
             raise ValueError(
                 f"prefetch_min_prob must be in [0, 1), got "
@@ -163,22 +201,38 @@ class PrefillTicket:
     semantics: a generated ``__eq__`` over the held device arrays would
     raise, like Request's ndarray prompt).
 
-    Produced by :meth:`CollaborativeEngine.start_prefill` after the shared
-    prefill trace ran (so ``logits`` and ``state`` are final — sampling the
-    first token never waits on warming); holds the prompt's routing trace
-    padded to whole chunks plus the replay cursor.
-    :meth:`CollaborativeEngine.advance_prefill` drives the replay — the
-    scheduler interleaves one ticket advance per tick between decode steps
-    so established requests keep decoding while the newcomer warms."""
+    Produced by :meth:`CollaborativeEngine.start_prefill`. On the
+    trace-replay path the shared prefill trace already ran (so ``logits``
+    and ``state`` are final — sampling the first token never waits on
+    warming) and the ticket holds the routing trace padded to whole
+    chunks plus the replay cursor. On the segment-streamed path
+    (``seg > 0``) NO forward has run yet: ``logits`` stays ``None`` — the
+    scheduler's discriminator for deferred first-token sampling — and the
+    cursor counts forwarded segments instead; ``logits`` lands with the
+    last segment. :meth:`CollaborativeEngine.advance_prefill` drives
+    either — the scheduler interleaves one ticket advance per tick
+    between decode steps so established requests keep decoding while the
+    newcomer warms."""
     prompt_len: int
     chunk: int                    # warm-chunk token count (0 = bypass)
     n_chunks: int
-    logits: jax.Array             # [1, 1, V] first-token logits
-    state: Params                 # decode state, pos = prompt_len
+    logits: Optional[jax.Array] = None  # [1, 1, V] first-token logits
+    state: Optional[Params] = None      # decode state, pos = prompt_len
     top_i: Optional[jax.Array] = None   # [L, n_chunks*chunk, K]
     top_w: Optional[jax.Array] = None
     h2: Optional[jax.Array] = None      # [L, n_chunks*chunk, D]
     cursor: int = 0               # chunks already replayed
+    # segment-streamed prefill (seg > 0): segment token count, the first
+    # absolute position the forward starts at (past a shared prefix),
+    # the prompt padded to whole segments [1, fwd_start + n_chunks*seg],
+    # whether the KV streams straight into the pool pages (paged) and
+    # whether each segment also warms the expert cache from its trace
+    seg: int = 0
+    fwd_start: int = 0
+    tokens: Optional[np.ndarray] = None
+    page_ids: Optional[np.ndarray] = None  # [max_pages], num_pages-padded
+    kv_streamed: bool = False
+    warm: bool = True
     # paged KV: the request's page table (allocated at start_prefill,
     # bound to a slot by bind_slot), its prompt (for the pool's prefix
     # index) and the token count served from a shared prefix — those
@@ -283,6 +337,8 @@ class CollaborativeEngine:
         self._prefill = jax.jit(self._prefill_trace,
                                 static_argnames=("want_trace",))
         self._warm = jax.jit(self._warm_chunk, donate_argnums=(0,))
+        self._segment = jax.jit(self._segment_step, donate_argnums=(1, 2),
+                                static_argnames=("warm",))
         L = cfg.num_layers
         self._counters = {
             "hits": 0, "accesses": 0, "host_assignments": 0,
@@ -291,9 +347,10 @@ class CollaborativeEngine:
             "predicted": 0, "predicted_correct": 0,
             "prefill_hits": 0, "prefill_accesses": 0, "prefill_fetched": 0,
             "prefill_tokens": 0, "prefill_chunks": 0, "first_tokens": 0,
+            "prefill_segments": 0, "prefix_tokens_skipped": 0,
             "cpu_expert_calls": 0, "cpu_tokens": 0, "miss_expert_groups": 0,
             "fused_groups": 0, "kv_pages_in_use": 0, "prefix_hits": 0,
-            "cow_forks": 0}
+            "cow_forks": 0, "prefix_pages_retained": 0}
         self._per_layer_hits = np.zeros(L, np.int64)
         self._per_layer_accesses = np.zeros(L, np.int64)
 
@@ -309,6 +366,7 @@ class CollaborativeEngine:
             c["kv_pages_in_use"] = self.kv_pool.pages_in_use
             c["prefix_hits"] = self.kv_pool.prefix_hits
             c["cow_forks"] = self.kv_pool.cow_forks
+            c["prefix_pages_retained"] = self.kv_pool.prefix_pages_retained
         return EngineStats(
             per_layer_hits=tuple(int(x) for x in self._per_layer_hits),
             per_layer_accesses=tuple(int(x) for x in self._per_layer_accesses),
@@ -474,7 +532,9 @@ class CollaborativeEngine:
         if self.ecfg.kv_paged:
             state = transformer.init_state(self.cfg, self.num_pages,
                                            self.ecfg.page_size)
-            self.kv_pool = KVPagePool(self.num_pages, self.ecfg.page_size)
+            self.kv_pool = KVPagePool(
+                self.num_pages, self.ecfg.page_size,
+                prefix_keep_pages=self.ecfg.prefix_keep_pages)
             self._slot_tables = [None] * self.ecfg.max_batch
             self._slot_pages = np.full(
                 (self.ecfg.max_batch, self.max_pages), self.num_pages,
@@ -552,6 +612,19 @@ class CollaborativeEngine:
         table = ticket.table
         assert table is not None and ticket.prompt is not None, \
             "paged ticket lost its page table (start_prefill not paged?)"
+        if ticket.kv_streamed:
+            # segment-streamed admission already wrote every segment's KV
+            # straight into the pool pages — nothing to scatter, only the
+            # slot bookkeeping and the prefix registration remain
+            if ticket.logits is None:
+                raise RuntimeError(
+                    "segment-streamed ticket not drained: advance_prefill "
+                    "to done before bind_slot")
+            self._slot_tables[slot] = table
+            self._slot_pages[slot] = ticket.page_ids
+            pos = batch_state["pos"].at[slot].set(ticket.prompt_len)
+            self.kv_pool.register(ticket.prompt, table)
+            return {"scan": batch_state["scan"], "pos": pos}
         n = len(table.pages)
         ids = np.full((self.max_pages,), self.num_pages, np.int32)
         ids[:n] = table.pages
@@ -564,6 +637,18 @@ class CollaborativeEngine:
                                   jnp.asarray(slot, jnp.int32))
         self.kv_pool.register(ticket.prompt, table)
         return state
+
+    def claim_slot(self, ticket: "PrefillTicket", slot: int) -> None:
+        """Pre-bind a segment-streamed ticket's page table to the slot it
+        will occupy, BEFORE the stream drains — so a cancellation mid-
+        stream releases the pages through the ordinary
+        :meth:`release_slot` path. Decode never reads the slot while it
+        is PREFILLING (inactive rows' writes drop), so exposing the page
+        ids early is safe. Dense KV: nothing to claim."""
+        if not self.ecfg.kv_paged or ticket.table is None:
+            return
+        self._slot_tables[slot] = ticket.table
+        self._slot_pages[slot] = ticket.page_ids
 
     def release_slot(self, slot: int) -> None:
         """Return a retired/cancelled slot's pages to the pool
@@ -690,6 +775,47 @@ class CollaborativeEngine:
         new_fast = (tiers.slot_w1, tiers.slot_w3, tiers.slot_w2, tiers.state)
         return new_fast, stats
 
+    def _segment_step(self, tokens, scan_state, fast, pos0, plen, pages,
+                      wmin, warm: bool = True):
+        """One C-token prompt segment, forward + warm fused.
+
+        Runs the backbone's segment mode: the segment attends to the
+        request's KV so far at absolute offset ``pos0`` (offset causal
+        mask), appends its own KV — into the ticket's dense B=1 state
+        (``pages is None``) or straight into the batch pool's pages with
+        writes masked to ``[wmin, plen)`` so shared-prefix pages stay
+        immutable — and (``warm``) routes its freshly emitted trace
+        through probe → execute → commit. The forward IS the trace
+        source: no separate replay pass, one jitted step per segment.
+
+        First-token logits are read at ``plen - 1`` relative to the
+        segment (clamped — only the LAST segment's read is meaningful;
+        earlier segments' logits are overwritten by later calls).
+        Returns (logits, new scan leaves, fast, new pos clamped to plen,
+        warm stats | None). Pad rows past ``plen`` are computed but
+        write-masked (paged) or overwritten by decode appends before any
+        read (dense) — they never reach real rows through the causal
+        mask, so segmentation never changes tokens."""
+        cfg = self.cfg
+        C = tokens.shape[1]
+        state = {"scan": scan_state, "pos": pos0}
+        x, new_state, _, trace = transformer.backbone(
+            self.params, {"tokens": tokens}, cfg, "segment", state=state,
+            remat=False, want_trace=warm, pages=pages,
+            kv_write_min=wmin, kv_write_max=plen)
+        rel = jnp.clip(plen - 1 - pos0, 0, C - 1)
+        h_last = jax.lax.dynamic_slice_in_dim(x, rel, 1, axis=1)
+        logits = transformer.lm_logits(self.params, h_last, cfg)
+        wstats = None
+        if warm:
+            tr = trace["scan"]["s0"]
+            active = (pos0 + jnp.arange(C)) < plen
+            fast, wstats = self._warm_chunk(
+                fast, tr["top_i"][:, 0], tr["top_w"][:, 0],
+                tr["h2"][:, 0], active)
+        new_pos = jnp.minimum(new_state["pos"], plen)
+        return logits, new_state["scan"], fast, new_pos, wstats
+
     # -- resumable prefill: ticket primitives ------------------------------
     def start_prefill(self, prompt: np.ndarray,
                       chunk: Optional[int] = None,
@@ -713,10 +839,15 @@ class CollaborativeEngine:
         new table share the matching request's full prompt-prefix pages.
         The warm replay skips the shared span's chunks (the prefix's
         original admission already routed those exact tokens through the
-        cache); the prefill trace itself still runs the full prompt —
-        its skippable shared-span compute is a ROADMAP item. Raises
+        cache). With ``EngineConfig.prefill_segment`` NO forward runs
+        here at all: the ticket comes back with ``logits is None`` and
+        :meth:`advance_prefill` streams the prompt forward one segment
+        per call — on a prefix hit the shared span's forward AND warm are
+        skipped outright (the stream starts past it). Raises
         :class:`~repro.serving.kv_pool.PoolExhausted` when the pool
-        cannot commit the pages (gate with :meth:`can_admit` first)."""
+        cannot commit the pages (gate with :meth:`can_admit` first); any
+        error past the page allocation frees the table before the raise
+        reaches the caller — a rejected admission never leaks pages."""
         chunk = self.ecfg.prefill_chunk if chunk is None else int(chunk)
         if chunk < 0:
             raise ValueError(f"chunk must be >= 0, got {chunk}")
@@ -730,6 +861,23 @@ class CollaborativeEngine:
             total = (self.ecfg.capacity if max_total_tokens is None
                      else int(max_total_tokens))
             table, shared = self.kv_pool.alloc_prompt(prompt[0], total)
+        try:
+            return self._open_ticket(prompt, chunk, table, shared)
+        except BaseException:
+            if table is not None:
+                self.kv_pool.free(table)
+            raise
+
+    def _open_ticket(self, prompt: np.ndarray, chunk: int,
+                     table: Optional[PageTable], shared: int
+                     ) -> "PrefillTicket":
+        """Build the ticket for an allocated admission (anything that
+        raises from here is caught by start_prefill's page-release
+        guard)."""
+        P = prompt.shape[1]
+        if self.ecfg.prefill_segment > 0:
+            return self._start_segmented(prompt, table, shared,
+                                         warm=chunk != 0)
         if chunk == 0:
             logits, state, _ = self._padded_prefill(prompt)
             return PrefillTicket(prompt_len=P, chunk=0, n_chunks=0,
@@ -756,15 +904,101 @@ class CollaborativeEngine:
                              table=table, prompt=prompt[0],
                              shared_tokens=shared)
 
+    def _start_segmented(self, prompt: np.ndarray,
+                         table: Optional[PageTable], shared: int,
+                         warm: bool) -> "PrefillTicket":
+        """Open a segment-streamed ticket: tokenize + cursor only, no
+        forward. A prefix hit advances the stream's start past the
+        shared span — ``fwd_start = min(shared, P - 1)`` keeps the LAST
+        prompt token in the stream even when the whole prompt is shared
+        (its recompute reads the shared pages, write-masked, and
+        produces the first-token logits)."""
+        P = prompt.shape[1]
+        cap = self.ecfg.capacity
+        if not 1 <= P < cap:
+            raise ValueError(
+                f"prompt length {P} outside [1, capacity={cap}) — decode "
+                f"needs at least one free KV slot")
+        seg = self.ecfg.prefill_segment
+        fwd_start = min(shared, P - 1)
+        n_seg = -(-(P - fwd_start) // seg)
+        tok = np.zeros((1, fwd_start + n_seg * seg), np.int32)
+        tok[:, :P] = prompt
+        self._counters["prefix_tokens_skipped"] += fwd_start
+        ticket = PrefillTicket(
+            prompt_len=P, chunk=seg, n_chunks=n_seg,
+            seg=seg, fwd_start=fwd_start, tokens=tok, warm=warm,
+            table=table, prompt=prompt[0], shared_tokens=shared)
+        if self.ecfg.kv_paged:
+            ids = np.full((self.max_pages,), self.num_pages, np.int32)
+            ids[:len(table.pages)] = table.pages
+            ticket.page_ids = ids
+            ticket.kv_streamed = True
+        else:
+            state = transformer.init_state(self.cfg, 1, cap)
+            ticket.state = {"scan": state["scan"],
+                            "pos": jnp.asarray(fwd_start, jnp.int32)}
+        return ticket
+
     def advance_prefill(self, ticket: "PrefillTicket",
                         max_chunks: int = 1) -> bool:
-        """Advance a ticket's cache-warming replay by up to ``max_chunks``
-        chunks through the staged probe/execute/commit pipeline, in prompt
-        order. Warming moves expert weights (shared-tier residency + the
-        ``prefill_*`` stat channel) and never touches the ticket's
-        logits/state — decode tokens are bit-identical however the replay
-        is paced. Returns True when the ticket is fully warmed."""
+        """Advance a ticket by up to ``max_chunks`` units. Trace-replay
+        tickets: warm chunks through the staged probe/execute/commit
+        pipeline, in prompt order — warming moves expert weights
+        (shared-tier residency + the ``prefill_*`` stat channel) and
+        never touches the ticket's logits/state, so decode tokens are
+        bit-identical however the replay is paced. Segment-streamed
+        tickets: prompt-forward segments (dense only on this signature —
+        a paged stream writes the BATCH pool and must thread it through
+        :meth:`advance_prefill_state`). Returns True when drained."""
+        _, done = self.advance_prefill_state(ticket, None, max_chunks)
+        return done
+
+    def advance_prefill_state(self, ticket: "PrefillTicket",
+                              batch_state: Optional[Params],
+                              max_chunks: int = 1
+                              ) -> Tuple[Optional[Params], bool]:
+        """State-threading twin of :meth:`advance_prefill` for the
+        scheduler: a paged segment-streamed ticket appends its KV into
+        the batch pool leaves, so the batch state rides through and
+        comes back rebuilt (other modes return it untouched). Returns
+        (batch_state, done)."""
         chunk, P = ticket.chunk, ticket.prompt_len
+        if ticket.seg > 0:
+            n = 0
+            plen = jnp.asarray(P, jnp.int32)
+            while ticket.cursor < ticket.n_chunks and n < max_chunks:
+                s = ticket.fwd_start + ticket.cursor * ticket.seg
+                tok = jnp.asarray(ticket.tokens[:, s:s + ticket.seg])
+                pos0 = jnp.asarray(s, jnp.int32)
+                if ticket.kv_streamed:
+                    if batch_state is None:
+                        raise RuntimeError(
+                            "paged segment stream appends into the batch "
+                            "pool: use advance_prefill_state(ticket, "
+                            "batch_state)")
+                    pages = jnp.asarray(ticket.page_ids[None])
+                    wmin = jnp.asarray(ticket.shared_tokens, jnp.int32)
+                    logits, new_scan, self.fast, _, wstats = self._segment(
+                        tok, batch_state["scan"], self.fast, pos0, plen,
+                        pages, wmin, warm=ticket.warm)
+                    batch_state = {"scan": new_scan,
+                                   "pos": batch_state["pos"]}
+                else:
+                    logits, new_scan, self.fast, new_pos, wstats = \
+                        self._segment(tok, ticket.state["scan"], self.fast,
+                                      pos0, plen, None, None,
+                                      warm=ticket.warm)
+                    ticket.state = {"scan": new_scan, "pos": new_pos}
+                ticket.logits = logits
+                if ticket.warm:
+                    self._accumulate_prefill(
+                        wstats, max(0, min(ticket.seg, P - s)))
+                    self._counters["prefill_chunks"] += 1
+                ticket.cursor += 1
+                n += 1
+            self._counters["prefill_segments"] += n
+            return batch_state, ticket.done
         advanced = []
         while ticket.cursor < ticket.n_chunks and len(advanced) < max_chunks:
             s = ticket.cursor * chunk
@@ -780,7 +1014,7 @@ class CollaborativeEngine:
         for wstats, n_tok in advanced:
             self._accumulate_prefill(wstats, n_tok)
         self._counters["prefill_chunks"] += len(advanced)
-        return ticket.done
+        return batch_state, ticket.done
 
     def prefill_chunked(self, prompt: np.ndarray,
                         chunk: Optional[int] = None
@@ -809,6 +1043,10 @@ class CollaborativeEngine:
         request's first-step PRNG key; required for non-greedy sampling).
         Counted in the ``first_tokens`` channel — prefill-sampled tokens
         are generated output, so token-based throughput must see them."""
+        if ticket.logits is None:
+            raise RuntimeError(
+                "segment-streamed ticket has no logits yet: drain "
+                "advance_prefill to done before sample_first")
         keys = None if key is None else np.asarray(key).reshape(1, 2)
         tok = int(np.asarray(
             self.select_tokens(ticket.logits[:, 0], [sampling], keys))[0])

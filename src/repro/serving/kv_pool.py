@@ -27,6 +27,14 @@ layer and a request holds an ordered list of physical page ids — its
     :meth:`available`, so an admitted request can always append inside
     its budget — decode never deadlocks on page exhaustion mid-request,
     and :meth:`can_admit` is the scheduler's backpressure signal.
+  * eviction-aware prefix retention — with ``prefix_keep_pages > 0``, a
+    retiring request's zero-ref pages that still back a live prefix-index
+    entry park in a bounded LRU instead of returning to the free list
+    (vLLM's cached-prefix idiom): their epochs stay valid, so a RAG-burst
+    re-admission adopts them by reference. Retained pages are reclaimable
+    — :meth:`available` counts them, and an allocation that outgrows the
+    free list evicts the least-recently-retired first (epoch bump, index
+    entries lazily invalidate).
 
 Everything here is host-side bookkeeping (python lists + small numpy
 arrays); the engine owns the device tensors and consumes page ids.
@@ -77,17 +85,28 @@ class AppendPlan:
 class KVPagePool:
     """Fixed-size page allocator with refcounts, CoW and a prefix index."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int,
+                 prefix_keep_pages: int = 0):
         if num_pages < 1 or page_size < 1:
             raise ValueError(
                 f"pool needs >= 1 page of >= 1 token, got "
                 f"num_pages={num_pages}, page_size={page_size}")
+        if prefix_keep_pages < 0:
+            raise ValueError(
+                f"prefix_keep_pages must be >= 0, got {prefix_keep_pages}")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.prefix_keep_pages = prefix_keep_pages
         # stack popped from the end: pages hand out in 0, 1, 2, ... order
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._ref = np.zeros(num_pages, np.int32)
         self._epoch = np.zeros(num_pages, np.int64)
+        # epoch at which page p last backed an index registration; equal
+        # to _epoch[p] iff some index entry may still name it
+        self._indexed_epoch = np.full(num_pages, -1, np.int64)
+        # zero-ref prefix pages kept alive past their last sharer, oldest
+        # retirement first (dict preserves insertion order)
+        self._retained: Dict[int, None] = {}
         self._committed = 0
         self._tables: set = set()
         # prompt[:n*page_size].tobytes() -> (page ids, their epochs)
@@ -103,18 +122,35 @@ class KVPagePool:
 
     @property
     def pages_in_use(self) -> int:
-        return self.num_pages - len(self._free)
+        return self.num_pages - len(self._free) - len(self._retained)
+
+    @property
+    def prefix_pages_retained(self) -> int:
+        """Zero-ref prefix pages parked in the retention LRU."""
+        return len(self._retained)
 
     @property
     def available(self) -> int:
-        """Pages an admission may claim: free minus already-committed."""
-        return len(self._free) - self._committed
+        """Pages an admission may claim: free plus reclaimable retained,
+        minus already-committed."""
+        return len(self._free) + len(self._retained) - self._committed
 
     # -- internal page plumbing --------------------------------------------
+    def _evict_retained(self) -> int:
+        """Reclaim the least-recently-retired retained page: its epoch
+        bump lazily invalidates any index entry naming it."""
+        p = next(iter(self._retained))
+        del self._retained[p]
+        self._epoch[p] += 1
+        return p
+
     def _take(self) -> int:
-        if not self._free:
+        if self._free:
+            p = self._free.pop()
+        elif self._retained:
+            p = self._evict_retained()
+        else:
             raise PoolExhausted("KV page free list is empty")
-        p = self._free.pop()
         self._ref[p] = 1
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pages_in_use)
@@ -156,6 +192,8 @@ class KVPagePool:
             pages = tuple(table.pages[:n])
             self._index[prompt[:n * ps].tobytes()] = (
                 pages, tuple(int(self._epoch[p]) for p in pages))
+            for p in pages:
+                self._indexed_epoch[p] = self._epoch[p]
         if len(self._index) > 4 * self.num_pages:
             self._index = {
                 k: (pgs, eps) for k, (pgs, eps) in self._index.items()
@@ -194,6 +232,9 @@ class KVPagePool:
                 f"({len(self._free)} free - {self._committed} committed)")
         for p in shared_pages:
             self._ref[p] += 1
+            # a retained page's first new sharer revives it from the LRU
+            if self._ref[p] == 1:
+                self._retained.pop(p, None)
         pages = shared_pages + [self._take() for _ in range(need_now)]
         self._committed += budget
         table = PageTable(page_size=self.page_size, pages=pages, length=P,
@@ -275,19 +316,29 @@ class KVPagePool:
     def free(self, table: PageTable) -> None:
         """Release a table: refcounts drop, zero-ref pages return to the
         free list (their epoch bump lazily invalidates index entries),
-        unused budget returns to the admission pool. Raises on a second
-        free of the same table."""
+        unused budget returns to the admission pool. With retention on,
+        zero-ref pages that still back a live index entry park in the
+        retention LRU instead (epoch untouched, so the prefix stays
+        adoptable); pages deepest in the prompt retire as the coldest so
+        trimming preserves the shortest (most reusable) prefixes longest.
+        Raises on a second free of the same table."""
         if not table.alive:
             raise RuntimeError("page table already freed")
         table.alive = False
         self._tables.discard(table)
         self._committed -= table.budget
         table.budget = 0
-        for p in table.pages:
+        for p in reversed(table.pages):
             self._ref[p] -= 1
             if self._ref[p] == 0:
-                self._epoch[p] += 1
-                self._free.append(p)
+                if self.prefix_keep_pages > 0 \
+                        and self._indexed_epoch[p] == self._epoch[p]:
+                    self._retained[p] = None
+                else:
+                    self._epoch[p] += 1
+                    self._free.append(p)
+        while len(self._retained) > self.prefix_keep_pages:
+            self._free.append(self._evict_retained())
         table.pages = []
 
     # -- views / self-checks ----------------------------------------------
@@ -306,10 +357,10 @@ class KVPagePool:
         return indptr, indices, lastlen
 
     def check_invariants(self) -> None:
-        """Every page is free XOR referenced, refcounts equal the live
-        tables' usage, the free list holds no duplicates, and commitments
-        never exceed the free list. The hypothesis property test drives
-        this after every operation."""
+        """Every page is free XOR retained XOR referenced, refcounts
+        equal the live tables' usage, the free list holds no duplicates,
+        and commitments never exceed the reclaimable pages. The
+        hypothesis property test drives this after every operation."""
         ref = np.zeros(self.num_pages, np.int64)
         for t in self._tables:
             assert t.alive, "freed table still registered live"
@@ -322,8 +373,17 @@ class KVPagePool:
         assert len(set(self._free)) == len(self._free), "double-freed page"
         assert all(self._ref[p] == 0 for p in self._free), \
             "referenced page on the free list"
-        assert len(self._free) + int((self._ref > 0).sum()) \
-            == self.num_pages, "leaked pages"
+        assert len(self._retained) <= self.prefix_keep_pages, \
+            "retention LRU over its bound"
+        assert not set(self._retained) & set(self._free), \
+            "page both free and retained"
+        assert all(self._ref[p] == 0 for p in self._retained), \
+            "referenced page in the retention LRU"
+        assert all(self._indexed_epoch[p] == self._epoch[p]
+                   for p in self._retained), "retained page not indexed"
+        assert len(self._free) + len(self._retained) \
+            + int((self._ref > 0).sum()) == self.num_pages, "leaked pages"
         assert self._committed == sum(t.budget for t in self._tables), \
             "commitment drift"
-        assert 0 <= self._committed <= len(self._free), "over-committed"
+        assert 0 <= self._committed <= len(self._free) \
+            + len(self._retained), "over-committed"

@@ -15,6 +15,13 @@ shared expert cache:
                   decode steps — established slots keep decoding while
                   the newcomer warms (no head-of-line blocking); with 0
                   the replay drains synchronously on the admission tick.
+                  Under ``EngineConfig.prefill_segment`` the admission
+                  tick runs NO forward at all: the slot enters
+                  PREFILLING immediately and each tick streams (at most
+                  ``admit_chunks_per_tick``) prompt segments through the
+                  backbone — forward, KV append and cache warm fused —
+                  with the first token sampled on the tick whose segment
+                  completes the prompt.
   * decode tick — every step decodes the whole padded slot batch in one
                   jitted call; each slot sits at its own KV position
                   (per-slot ``pos`` vector) and inactive or PREFILLING
@@ -386,6 +393,16 @@ class ContinuousBatchingScheduler:
                     req.prompt,
                     max_total_tokens=(req.prompt.shape[0]
                                       + req.max_new_tokens))
+                if ticket.logits is None:
+                    # segment-streamed: no forward ran on this tick — the
+                    # slot goes straight into PREFILLING and the first
+                    # token is sampled when _advance_prefills drains the
+                    # stream. claim_slot pre-binds the page table so a
+                    # mid-stream cancel releases pages normally.
+                    self.engine.claim_slot(ticket, t)
+                    self.slots[t] = req
+                    self._tickets[t] = ticket
+                    continue
                 first_tok = self.engine.sample_first(
                     ticket, req.sampling, key=jax.random.fold_in(base, 0))
                 self.state = self.engine.bind_slot(self.state, ticket, t)
@@ -397,22 +414,35 @@ class ContinuousBatchingScheduler:
                 self._tickets[t] = None if ticket.done else ticket
                 self._append(req, first_tok, events)
 
-    def _advance_prefills(self) -> None:
-        """Drive every PREFILLING slot's warming replay: the whole ticket
-        at once when ``admit_chunks_per_tick == 0`` (synchronous
-        admission), at most that many chunks otherwise — the overlapped
-        path that keeps decode ticks flowing under a long-prompt
-        admission. A drained ticket flips its slot into the decode set of
-        THIS tick (matching the synchronous path's admit-and-decode-same-
-        tick behaviour)."""
+    def _advance_prefills(self, events: List[StreamEvent]) -> None:
+        """Drive every PREFILLING slot's warming replay (or segment
+        stream): the whole ticket at once when
+        ``admit_chunks_per_tick == 0`` (synchronous admission), at most
+        that many chunks/segments otherwise — the overlapped path that
+        keeps decode ticks flowing under a long-prompt admission. A
+        drained ticket flips its slot into the decode set of THIS tick
+        (matching the synchronous path's admit-and-decode-same-tick
+        behaviour). A drained segment-streamed ticket additionally owes
+        the request its deferred first token: sampled, bound and
+        streamed here."""
         per_tick = self.engine.ecfg.admit_chunks_per_tick
         for t, ticket in enumerate(self._tickets):
             if ticket is None or self.slots[t] is None:
                 continue
             budget = ticket.remaining if per_tick == 0 \
                 else min(per_tick, ticket.remaining)
-            if self.engine.advance_prefill(ticket, budget):
+            self.state, done = self.engine.advance_prefill_state(
+                ticket, self.state, budget)
+            if done:
                 self._tickets[t] = None
+                if ticket.seg > 0:
+                    req = self.slots[t]
+                    first_tok = self.engine.sample_first(
+                        ticket, req.sampling,
+                        key=jax.random.fold_in(self._bases[t], 0))
+                    self.state = self.engine.bind_slot(self.state, ticket, t)
+                    self._next[t, 0] = first_tok
+                    self._append(req, first_tok, events)
 
     # -- the decode loop ---------------------------------------------------
     def _tick(self) -> Tuple[List[Request], List[StreamEvent]]:
@@ -438,7 +468,11 @@ class ContinuousBatchingScheduler:
             # a request is waiting and no slot took it this tick (every
             # slot busy, or admission paused): the head-of-line signal
             self._admission_stalls += 1
-        self._advance_prefills()
+        self._advance_prefills(events)
+        # a deferred first token may have completed a max_new_tokens=1
+        # request just now: retire it before the decode step so its slot
+        # neither decodes a phantom token nor blocks a later admission
+        finished += self._retire()
         active = self.decode_mask
         if active.any():
             logits, self.state = self.engine.decode_batch(

@@ -56,6 +56,11 @@ class EngineStats:
     # row) — kept apart from the decode-step ``tokens`` counter so decode
     # rates stay per-step, but folded into ``generated_tokens`` totals
     first_tokens: int = 0
+    # segment-streamed prefill channel (prefill_segment engines): prompt
+    # segments forwarded between decode ticks, and prompt tokens whose
+    # forward AND warm a prefix hit skipped outright
+    prefill_segments: int = 0
+    prefix_tokens_skipped: int = 0
     # live host-execution channel (repro.hostexec): cache-miss expert
     # groups the cost-model dispatcher ran on the CPU, the token
     # assignments they carried, and the total executed non-resident
@@ -72,6 +77,8 @@ class EngineStats:
     kv_pages_in_use: int = 0
     prefix_hits: int = 0
     cow_forks: int = 0
+    # zero-ref prefix pages parked in the pool's retention LRU (gauge)
+    prefix_pages_retained: int = 0
     # per-MoE-layer demand series (tuples: immutable + JSON-native)
     per_layer_hits: Tuple[int, ...] = ()
     per_layer_accesses: Tuple[int, ...] = ()

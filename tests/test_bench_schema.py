@@ -28,9 +28,10 @@ SAMPLE = EngineStats(hits=7, accesses=12, host_assignments=5,
                      predicted=8, predicted_correct=6,
                      prefill_hits=9, prefill_accesses=20, prefill_fetched=4,
                      prefill_tokens=10, prefill_chunks=2, first_tokens=2,
+                     prefill_segments=3, prefix_tokens_skipped=4,
                      cpu_expert_calls=2, cpu_tokens=3, miss_expert_groups=3,
                      fused_groups=2, kv_pages_in_use=5, prefix_hits=1,
-                     cow_forks=1,
+                     cow_forks=1, prefix_pages_retained=2,
                      per_layer_hits=(3, 4), per_layer_accesses=(6, 6))
 
 ENGINE_KEYS = {
@@ -38,9 +39,10 @@ ENGINE_KEYS = {
     "steps", "prefetch_issued", "prefetch_hits", "prefetch_wasted",
     "predicted", "predicted_correct", "prefill_hits", "prefill_accesses",
     "prefill_fetched", "prefill_tokens", "prefill_chunks", "first_tokens",
-    "generated_tokens",
+    "prefill_segments", "prefix_tokens_skipped", "generated_tokens",
     "cpu_expert_calls", "cpu_tokens", "miss_expert_groups",
     "fused_groups", "kv_pages_in_use", "prefix_hits", "cow_forks",
+    "prefix_pages_retained",
     "hit_rate", "prefetch_hit_rate", "prefetch_waste_rate",
     "prediction_accuracy", "prefill_hit_rate", "cpu_offload_rate",
     "per_layer_hits", "per_layer_accesses", "per_layer_hit_rates",
@@ -138,31 +140,38 @@ def test_dump_json_schema(tmp_path, monkeypatch):
 
 
 def test_admission_overlap_artifact_shape(tmp_path, monkeypatch):
-    """BENCH_admission_overlap.json: the CI smoke artifact pairs an
-    off/on run whose stats carry the overlapped-admission channel
+    """BENCH_admission_overlap.json: the CI smoke artifact triples an
+    off/on/seg run whose stats carry the overlapped-admission channel
     (prefill_pending / admission_stalls / queue_rejected on the run,
-    first_tokens / generated_tokens on the engine) next to the
-    established-latency results."""
-    importlib.import_module("benchmarks.admission_overlap")  # importable
+    first_tokens / generated_tokens / prefill_segments /
+    prefix_tokens_skipped on the engine) next to the established-latency
+    and prefix-TTFT results."""
+    bench = importlib.import_module("benchmarks.admission_overlap")
+    assert [m[0] for m in bench.MODES] == ["off", "on", "seg"]
     monkeypatch.setattr(common, "_RESULTS", [])
     monkeypatch.setattr(common, "_RUNS", [])
-    for name in ("admission_overlap.off", "admission_overlap.on"):
+    names = ["admission_overlap.off", "admission_overlap.on",
+             "admission_overlap.seg", "admission_overlap.prefix"]
+    for name in names:
         common.emit(f"{name}.stall", 1234.5, "max established gap")
         common.record_run(name, RunStats(engine=SAMPLE,
                                          requests_submitted=3,
                                          requests_finished=3,
                                          admission_stalls=2))
+    common.emit("admission_overlap.prefix_ttft.cold", 9000.0, "cold TTFT")
+    common.emit("admission_overlap.prefix_ttft.hit", 4000.0, "hit TTFT")
     path = tmp_path / "BENCH_admission_overlap.json"
     common.dump_json(str(path))
     doc = json.loads(path.read_text())
-    assert [r["name"] for r in doc["runs"]] == ["admission_overlap.off",
-                                                "admission_overlap.on"]
+    assert [r["name"] for r in doc["runs"]] == names
     for run in doc["runs"]:
         stats = run["stats"]
         assert set(stats) == RUN_KEYS
         assert {"prefill_pending", "admission_stalls",
                 "queue_rejected"} <= set(stats)
         assert set(stats["engine"]) == ENGINE_KEYS
+        assert {"prefill_segments", "prefix_tokens_skipped",
+                "prefix_pages_retained"} <= set(stats["engine"])
         assert stats["engine"]["generated_tokens"] == \
             stats["engine"]["tokens"] + stats["engine"]["first_tokens"]
 

@@ -265,3 +265,63 @@ def test_engine_config_validation():
         EngineConfig(cache=ccfg, host_backend="cuda")
     with pytest.raises(ValueError, match="prefetch_min_prob"):
         EngineConfig(cache=ccfg, prefetch_min_prob=1.5)
+
+
+# ---------------------------------------------------------------------------
+# census-driven worker fan-out (HybriMoE-style thread scaling + affinity)
+# ---------------------------------------------------------------------------
+
+def _toy_executor(threads, E=6, D=8, F=16, seed=5):
+    rng = np.random.default_rng(seed)
+    w1 = rng.standard_normal((1, E, D, F)).astype(np.float32)
+    w3 = rng.standard_normal((1, E, D, F)).astype(np.float32)
+    w2 = rng.standard_normal((1, E, F, D)).astype(np.float32)
+    return HostExpertExecutor(w1, w3, w2, threads=threads)
+
+
+def test_effective_threads_follows_census_curve():
+    """Workers track the step's miss-group census: linear to the
+    8-thread bandwidth knee, sqrt growth past it, capped by the pool,
+    floored at one."""
+    ex = _toy_executor(threads=32)
+    for census in range(1, 9):
+        assert ex._effective_threads(census) == census
+    assert ex._effective_threads(0) == 1
+    assert ex._effective_threads(9) == 9          # 8 + isqrt(1)
+    assert ex._effective_threads(12) == 10        # 8 + isqrt(4)
+    assert ex._effective_threads(24) == 12        # 8 + isqrt(16)
+    # the configured pool size is a hard cap
+    assert _toy_executor(threads=4)._effective_threads(24) == 4
+    assert _toy_executor(threads=1)._effective_threads(5) == 1
+
+
+def test_census_fanout_bitwise_and_affinity_telemetry():
+    """The census-driven bucketed fan-out is schedule-only: outputs are
+    BIT-identical to the sequential single-thread lane (groups are
+    independent; only their worker placement changes). Repeat experts
+    land on their pinned bucket — affinity_hits counts them — and the
+    census telemetry averages the per-step worker pick."""
+    rng = np.random.default_rng(11)
+    G, A, D = 5, 3, 8
+    rep_e = np.array([0, 2, 3, 5, 1], np.int64)
+    run = np.ones(G, bool)
+    xbuf = rng.standard_normal((G, A, D)).astype(np.float32)
+
+    pooled = _toy_executor(threads=8)
+    solo = _toy_executor(threads=1)
+    out1 = pooled.compute_groups(0, rep_e, run, xbuf)
+    np.testing.assert_array_equal(
+        out1, solo.compute_groups(0, rep_e, run, xbuf))
+    assert pooled.census_calls == 1
+    assert pooled.census_threads == 5             # census 5 <= knee
+    assert pooled.affinity_hits == 0              # first sighting of each
+    assert set(pooled._affinity) == set(rep_e.tolist())
+
+    # same experts next step: every group lands on its pinned bucket
+    out2 = pooled.compute_groups(0, rep_e, run, xbuf)
+    np.testing.assert_array_equal(out2, out1)
+    assert pooled.affinity_hits == G
+    assert pooled.census_calls == 2 and pooled.census_threads == 10
+
+    # the single-thread lane never consults the census machinery
+    assert solo.census_calls == 0 and solo.affinity_hits == 0

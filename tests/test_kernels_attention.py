@@ -191,3 +191,91 @@ def test_chunked_flash_prefill_matches_naive(window, causal):
     want = _naive(q, k, v, causal, window)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# -- chunked-prefill paged kernel (segment-streamed prefill) --------------
+
+def _prefill_paged_case(seed, C, Hk, group, hd, ps, pos0s, num_pages):
+    """Build a C-query segment per row plus a pool whose row b holds
+    ``pos0s[b] + C`` tokens (the segment's own KV already written — the
+    serving contract: attention runs after the segment's append)."""
+    B = len(pos0s)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, C, Hk * group, hd), jnp.float32)
+    k_pages = jax.random.normal(ks[1], (num_pages, ps, Hk, hd), jnp.float32)
+    v_pages = jax.random.normal(ks[2], (num_pages, ps, Hk, hd), jnp.float32)
+    rng = np.random.default_rng(seed)
+    perm = list(rng.permutation(num_pages))
+    indptr, indices, lastlen = [0], [], []
+    for p0 in pos0s:
+        ln = p0 + C
+        n = -(-ln // ps)
+        indices += [perm.pop() for _ in range(n)]
+        indptr.append(len(indices))
+        lastlen.append(ln - (n - 1) * ps)
+    return (q, k_pages, v_pages, np.asarray(indptr, np.int32),
+            np.asarray(indices, np.int32), np.asarray(lastlen, np.int32),
+            np.asarray(pos0s, np.int32))
+
+
+@pytest.mark.parametrize("window", [-1, 24])
+def test_paged_flash_prefill_bitwise_matches_ref_twin(window):
+    """The chunked-prefill Pallas kernel (interpret mode off-TPU) must
+    match its jnp replay twin BITWISE — same acceptance bar as the
+    paged decode kernel: paging + segmentation are layout/schedule
+    changes, never numeric ones."""
+    from repro.kernels.prefill_attention import paged_prefill_attention
+    from repro.kernels.prefill_attention import ref as pref
+
+    case = _prefill_paged_case(3, C=8, Hk=2, group=3, hd=32, ps=8,
+                               pos0s=[0, 5, 24, 40], num_pages=32)
+    q, kp, vp, indptr, indices, lastlen, pos0 = case
+    max_pages = int((indptr[1:] - indptr[:-1]).max())
+    got = paged_prefill_attention(q, kp, vp, indptr, indices, lastlen,
+                                  pos0, max_pages=max_pages, window=window)
+    want = pref.paged_prefill_ref(q, kp, vp, indptr, indices, lastlen,
+                                  pos0, max_pages=max_pages, window=window)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), \
+        np.abs(np.asarray(got) - np.asarray(want)).max()
+
+
+@pytest.mark.parametrize("window", [-1, 24])
+def test_paged_flash_prefill_matches_gathered_dense_oracle(window):
+    """Gathering each row's pages into a dense cache and running the
+    naive C-query oracle must agree (allclose: different reduction
+    order) — including rows whose segment starts at position 0."""
+    from repro.kernels.decode_attention import ref as dref
+    from repro.kernels.prefill_attention import paged_prefill_attention
+    from repro.kernels.prefill_attention import ref as pref
+
+    case = _prefill_paged_case(11, C=6, Hk=2, group=2, hd=32, ps=8,
+                               pos0s=[0, 3, 17, 33], num_pages=32)
+    q, kp, vp, indptr, indices, lastlen, pos0 = case
+    max_pages = int((indptr[1:] - indptr[:-1]).max())
+    got = paged_prefill_attention(q, kp, vp, indptr, indices, lastlen,
+                                  pos0, max_pages=max_pages, window=window)
+    k = dref.paged_gather(kp, indptr, indices, max_pages)
+    v = dref.paged_gather(vp, indptr, indices, max_pages)
+    lengths = pos0 + 6
+    want = pref.prefill_attention_ref(q, k, v, jnp.asarray(pos0),
+                                      jnp.asarray(lengths), window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_attention_boundary_contract():
+    """ops.paged_prefill_attention rejects mis-sized CSR tables and pos0
+    vectors at the op boundary."""
+    from repro.kernels.prefill_attention import paged_prefill_attention
+
+    q, kp, vp, indptr, indices, lastlen, pos0 = _prefill_paged_case(
+        0, C=4, Hk=2, group=2, hd=32, ps=8, pos0s=[0, 8], num_pages=8)
+    with pytest.raises(ValueError, match="page_indptr carries"):
+        paged_prefill_attention(q, kp, vp, indptr[:-1], indices, lastlen,
+                                pos0, max_pages=2)
+    with pytest.raises(ValueError, match="last_page_len carries"):
+        paged_prefill_attention(q, kp, vp, indptr, indices, lastlen[:1],
+                                pos0, max_pages=2)
+    with pytest.raises(ValueError, match="pos0"):
+        paged_prefill_attention(q, kp, vp, indptr, indices, lastlen,
+                                pos0[:1], max_pages=2)

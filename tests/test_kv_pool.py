@@ -190,6 +190,104 @@ def test_constructor_validation():
 
 
 # ---------------------------------------------------------------------------
+# eviction-aware prefix retention
+# ---------------------------------------------------------------------------
+
+def test_retention_parks_and_revives_prefix_pages():
+    """With ``prefix_keep_pages`` on, freeing a registered table parks
+    its zero-ref full-prefix pages in the retention LRU (not in use, not
+    free) and a same-prompt re-admission adopts them as a prefix hit."""
+    pool = KVPagePool(num_pages=8, page_size=4, prefix_keep_pages=4)
+    prompt = _prompt(np.random.default_rng(0), 10)    # 2 full pages + tail
+    t, shared = pool.alloc_prompt(prompt, 12)
+    assert shared == 0
+    head = list(t.pages[:2])
+    pool.register(prompt, t)
+    pool.free(t)
+    assert pool.prefix_pages_retained == 2            # full pages only
+    assert pool.pages_in_use == 0                     # retained != in use
+    pool.check_invariants()
+
+    t2, shared2 = pool.alloc_prompt(prompt, 12)
+    assert shared2 == 8 and pool.prefix_hits == 1
+    assert pool.prefix_pages_retained == 0            # revived from the LRU
+    assert list(t2.pages[:2]) == head                 # the SAME pages
+    pool.check_invariants()
+    pool.free(t2)
+    assert pool.prefix_pages_retained == 2            # parked again
+
+
+def test_retention_lru_bound_evicts_oldest_retirement():
+    """The LRU never exceeds its bound: when a later retirement pushes
+    it over, the oldest-retired pages evict (epoch bump invalidates
+    their index entries) and only the newest prefix stays adoptable."""
+    rng = np.random.default_rng(1)
+    pool = KVPagePool(num_pages=16, page_size=2, prefix_keep_pages=2)
+    a, b = _prompt(rng, 4), _prompt(rng, 4)
+    for p in (a, b):
+        t, _ = pool.alloc_prompt(p, 4)
+        pool.register(p, t)
+        pool.free(t)
+        pool.check_invariants()
+    assert pool.prefix_pages_retained == 2            # bound held
+
+    tb, shared_b = pool.alloc_prompt(b, 4)            # newest: still hot
+    assert shared_b == 4
+    ta, shared_a = pool.alloc_prompt(a, 4)            # oldest: evicted
+    assert shared_a == 0
+    pool.free(ta), pool.free(tb)
+    pool.check_invariants()
+
+
+def test_retention_trim_preserves_shortest_prefix():
+    """Within one retirement, pages deepest in the prompt retire as the
+    coldest — a trimmed LRU keeps page 0, so the shortest (most
+    reusable) full-page prefix survives and still matches."""
+    pool = KVPagePool(num_pages=8, page_size=2, prefix_keep_pages=1)
+    prompt = _prompt(np.random.default_rng(2), 4)     # 2 full pages
+    t, _ = pool.alloc_prompt(prompt, 4)
+    first_page = t.pages[0]
+    pool.register(prompt, t)
+    pool.free(t)
+    assert pool.prefix_pages_retained == 1
+    t2, shared = pool.alloc_prompt(prompt, 6)
+    assert shared == 2                                # one-page prefix hit
+    assert t2.pages[0] == first_page
+    pool.check_invariants()
+    pool.free(t2)
+
+
+def test_retained_pages_reclaimed_under_pressure():
+    """Retention never causes exhaustion: retained pages count as
+    ``available`` and a large admission reclaims them (oldest first)
+    instead of raising PoolExhausted."""
+    rng = np.random.default_rng(3)
+    pool = KVPagePool(num_pages=4, page_size=2, prefix_keep_pages=4)
+    a = _prompt(rng, 4)
+    t, _ = pool.alloc_prompt(a, 4)
+    pool.register(a, t)
+    pool.free(t)
+    assert pool.prefix_pages_retained == 2 and pool.available == 4
+
+    big = _prompt(rng, 8)                             # needs all 4 pages
+    assert pool.can_admit(big, 8)
+    tb, _ = pool.alloc_prompt(big, 8)
+    assert pool.pages_in_use == 4 and pool.prefix_pages_retained == 0
+    pool.check_invariants()
+    pool.free(tb)
+    ta, shared = pool.alloc_prompt(a, 4)              # epochs bumped:
+    assert shared == 0                                # stale entry dropped
+    pool.check_invariants()
+    pool.free(ta)
+
+
+def test_retention_constructor_validation():
+    with pytest.raises(ValueError, match="prefix_keep_pages"):
+        KVPagePool(4, 2, prefix_keep_pages=-1)
+    assert KVPagePool(4, 2, prefix_keep_pages=0).prefix_pages_retained == 0
+
+
+# ---------------------------------------------------------------------------
 # randomized property test
 # ---------------------------------------------------------------------------
 
