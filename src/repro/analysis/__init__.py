@@ -1,0 +1,30 @@
+"""reprolint — repo-specific JAX-hygiene static analysis.
+
+Six rules over the serving stack's hard-won invariants:
+
+=====  ==============================================================
+RL001  tracer leak: Python control flow / ``bool()`` / ``float()`` /
+       ``.item()`` on traced values inside jit-reachable code
+RL002  host sync (``np.asarray`` / ``device_get`` /
+       ``block_until_ready``) inside the computed decode/segment hot
+       path, outside sanctioned stats-drain points
+RL003  donated buffer read again after the donating call
+RL004  ``pure_callback`` target writing non-telemetry persistent state
+RL005  Pallas kernel package without a ``ref.py`` twin + bitwise parity
+       test
+RL006  ``EngineStats``/``RunStats``/bench ``record_run`` schema drift
+       against the ``tests/test_bench_schema.py`` pins
+=====  ==============================================================
+
+Run ``python -m repro.analysis`` (see ``--help``); the dynamic complement
+is ``tools/compile_gate.py``.
+"""
+from .core import Finding, Project, Rule, RULES, load_project  # noqa: F401
+from . import rules_conventions, rules_jax, rules_purity       # noqa: F401
+from .baseline import BASELINE_NAME, load_baseline, save_baseline, \
+    split_findings                                             # noqa: F401
+from .cli import main, run_rules                               # noqa: F401
+
+__all__ = ["Finding", "Project", "Rule", "RULES", "load_project",
+           "BASELINE_NAME", "load_baseline", "save_baseline",
+           "split_findings", "main", "run_rules"]

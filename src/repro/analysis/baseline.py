@@ -1,0 +1,69 @@
+"""Baseline: grandfathered findings that don't fail CI.
+
+The baseline file is a checked-in, line-oriented ledger of findings that
+predate the analyzer (or are explicitly accepted). Each entry is the
+finding's line-number-free identity — ``rule<TAB>file<TAB>symbol<TAB>
+message`` — so edits elsewhere in a file don't churn the ledger. The CLI
+fails on any finding NOT in the baseline, and also on any baseline entry
+that no longer matches a finding (a *stale* entry: the defect was fixed,
+so the grandfather must be retired — this keeps the ledger honest and is
+what ``--update-baseline`` rewrites).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, List, Set, Tuple
+
+from .core import Finding
+
+__all__ = ["BASELINE_NAME", "load_baseline", "save_baseline",
+           "split_findings"]
+
+BASELINE_NAME = ".reprolint-baseline"
+
+Key = Tuple[str, str, str, str]
+
+_HEADER = """\
+# reprolint baseline — grandfathered findings (rule\\tfile\\tsymbol\\tmessage)
+# Entries here are accepted, pre-existing findings: the CLI fails on any
+# NEW finding and on any STALE entry (listed here but no longer found).
+# Regenerate with: python -m repro.analysis --update-baseline
+"""
+
+
+def load_baseline(path: Path) -> Set[Key]:
+    keys: Set[Key] = set()
+    if not path.exists():
+        return keys
+    for line in path.read_text().splitlines():
+        line = line.rstrip("\n")
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split("\t")
+        if len(parts) == 4:
+            keys.add(tuple(parts))      # type: ignore[arg-type]
+    return keys
+
+
+def save_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    rows = sorted({f.key() for f in findings})
+    body = "".join("\t".join(row) + "\n" for row in rows)
+    path.write_text(_HEADER + body)
+
+
+def split_findings(findings: List[Finding], baseline: Set[Key]
+                   ) -> Tuple[List[Finding], List[Finding], List[Key]]:
+    """(new, grandfathered, stale): findings not in the baseline, findings
+    the baseline accepts, and baseline entries nothing matched."""
+    new: List[Finding] = []
+    old: List[Finding] = []
+    matched: Set[Key] = set()
+    for f in findings:
+        k = f.key()
+        if k in baseline:
+            old.append(f)
+            matched.add(k)
+        else:
+            new.append(f)
+    stale = sorted(baseline - matched)
+    return new, old, stale

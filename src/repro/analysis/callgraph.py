@@ -1,0 +1,244 @@
+"""Lightweight call graph + jit-boundary index over the project AST.
+
+Two facts the rules need are *computed* here rather than hand-listed:
+
+* which functions are **jit roots** — wrapped by ``jax.jit`` either as a
+  decorator (``@jax.jit`` / ``@partial(jax.jit, ...)``) or by the repo's
+  engine idiom ``self._decode = jax.jit(self._decode_step,
+  donate_argnums=(1, 2), static_argnames=("warm",))`` — together with
+  their donated positions and static argument names;
+* which functions are **reachable** from a set of entry points through
+  ordinary Python calls (RL002's "hot path"), resolved by trailing call
+  name: ``self.engine.decode_batch(...)`` resolves to every function
+  named ``decode_batch`` in the analyzed tree. Name collisions
+  over-approximate reachability, which errs on the side of more
+  scrutiny, never less.
+
+Resolution is deliberately name-based, not type-based: the codebase's
+method names are distinctive (``advance_prefill_state``, ``_warm_chunk``)
+and a static analyzer that needs a type checker to boot defeats the
+"runs before everything else in CI" property.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .core import Project, Source, call_name, dotted, walk_functions
+
+__all__ = ["FunctionInfo", "JitWrapper", "CallGraph", "build_callgraph"]
+
+
+@dataclass
+class FunctionInfo:
+    file: str                       # repo-relative path
+    qualname: str                   # "Class.method" / "outer.inner"
+    node: ast.AST                   # the FunctionDef
+    jit_decorated: bool = False
+    static_argnames: Tuple[str, ...] = ()
+    donate_argnums: Tuple[int, ...] = ()
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    def param_names(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        names += [p.arg for p in a.kwonlyargs]
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+
+@dataclass
+class JitWrapper:
+    """One ``wrapper = jax.jit(target, ...)`` binding: calls through the
+    wrapper name (``self._decode(...)``) enter traced code at ``target``."""
+    wrapper_name: str               # trailing name the call sites use
+    target: Optional[FunctionInfo]  # resolved target (None if external)
+    target_name: str
+    donate_argnums: Tuple[int, ...]
+    static_argnames: Tuple[str, ...]
+    file: str
+    line: int
+
+
+def _const_int_tuple(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+        return tuple(out)
+    return ()
+
+
+def _const_str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(el.value for el in node.elts
+                     if isinstance(el, ast.Constant)
+                     and isinstance(el.value, str))
+    return ()
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted(node) in ("jax.jit", "jit")
+
+
+def _jit_call_parts(call: ast.Call):
+    """(target expr, donate, static) for a ``jax.jit(...)`` call, or
+    ``@partial(jax.jit, ...)`` decorator call; None otherwise."""
+    if _is_jax_jit(call.func):
+        target = call.args[0] if call.args else None
+    elif call_name(call) == "partial" and call.args \
+            and _is_jax_jit(call.args[0]):
+        target = None               # decorator form: target is the def
+    else:
+        return None
+    donate: Tuple[int, ...] = ()
+    static: Tuple[str, ...] = ()
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            donate = _const_int_tuple(kw.value)
+        elif kw.arg in ("static_argnames",):
+            static = _const_str_tuple(kw.value)
+        elif kw.arg in ("static_argnums",):
+            # keep positions as names later via param list; store ints in
+            # donate-style tuple on the side is not needed by the rules —
+            # the repo uses static_argnames exclusively
+            pass
+    return target, donate, static
+
+
+class CallGraph:
+    def __init__(self):
+        self.functions: Dict[Tuple[str, str], FunctionInfo] = {}
+        self.by_name: Dict[str, List[FunctionInfo]] = {}
+        self.jit_wrappers: List[JitWrapper] = []
+        # trailing wrapper name -> wrappers (call sites enter traced code)
+        self.wrappers_by_name: Dict[str, List[JitWrapper]] = {}
+        # (file, qualname) -> trailing names this function calls
+        self.calls: Dict[Tuple[str, str], List[Tuple[str, int]]] = {}
+
+    def add(self, fi: FunctionInfo) -> None:
+        self.functions[(fi.file, fi.qualname)] = fi
+        self.by_name.setdefault(fi.name, []).append(fi)
+
+    def resolve(self, name: str) -> List[FunctionInfo]:
+        return self.by_name.get(name, [])
+
+    def jit_targets(self) -> List[FunctionInfo]:
+        """Every function traced code enters: decorated defs plus the
+        resolved targets of ``jax.jit(...)`` assignment wrappers."""
+        out = {}
+        for fi in self.functions.values():
+            if fi.jit_decorated:
+                out[(fi.file, fi.qualname)] = fi
+        for w in self.jit_wrappers:
+            if w.target is not None:
+                out[(w.target.file, w.target.qualname)] = w.target
+        return list(out.values())
+
+    def reachable(self, entries: Sequence[str],
+                  stop: Iterable[str] = (),
+                  through_jit: bool = False) -> List[FunctionInfo]:
+        """Functions reachable from the named entries via call edges.
+
+        ``entries``/``stop`` are trailing function names. ``stop`` names
+        are never traversed *into* (their bodies stay out of the result).
+        With ``through_jit=False`` a call that enters traced code (a jit
+        wrapper name or a jit-decorated function) is not followed — host
+        rules stop at the trace boundary."""
+        stop = set(stop)
+        jit_names = set(self.wrappers_by_name)
+        if not through_jit:
+            jit_names |= {fi.name for fi in self.jit_targets()}
+        seen: Dict[Tuple[str, str], FunctionInfo] = {}
+        work = [fi for name in entries for fi in self.resolve(name)]
+        while work:
+            fi = work.pop()
+            key = (fi.file, fi.qualname)
+            if key in seen:
+                continue
+            seen[key] = fi
+            for callee, _line in self.calls.get(key, ()):
+                if callee in stop:
+                    continue
+                if not through_jit and callee in jit_names:
+                    continue
+                for nxt in self.resolve(callee):
+                    if (nxt.file, nxt.qualname) not in seen:
+                        work.append(nxt)
+        return list(seen.values())
+
+
+def build_callgraph(project: Project,
+                    prefix: str = "src/repro") -> CallGraph:
+    cg = CallGraph()
+    for src in project.under(prefix):
+        _index_file(cg, src)
+    # resolve assignment-form wrapper targets now that every def is known
+    for w in cg.jit_wrappers:
+        if w.target is None and w.target_name:
+            cands = cg.resolve(w.target_name)
+            if len(cands) >= 1:
+                # prefer a target in the same file (the engine idiom)
+                same = [c for c in cands if c.file == w.file]
+                w.target = (same or cands)[0]
+        cg.wrappers_by_name.setdefault(w.wrapper_name, []).append(w)
+    return cg
+
+
+def _index_file(cg: CallGraph, src: Source) -> None:
+    for qual, node in walk_functions(src.tree):
+        fi = FunctionInfo(src.rel, qual, node)
+        for dec in node.decorator_list:
+            if _is_jax_jit(dec):
+                fi.jit_decorated = True
+            elif isinstance(dec, ast.Call):
+                parts = _jit_call_parts(dec)
+                if parts is not None:
+                    fi.jit_decorated = True
+                    _, fi.donate_argnums, fi.static_argnames = parts
+        cg.add(fi)
+        calls = []
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = call_name(sub)
+                if name:
+                    calls.append((name, sub.lineno))
+        cg.calls[(src.rel, qual)] = calls
+
+    # assignment-form wrappers: self._decode = jax.jit(self._decode_step,
+    # donate_argnums=(1, 2), ...) — anywhere in the file (typically
+    # __init__), keyed by the wrapper's trailing attribute name
+    for node in ast.walk(src.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.value, ast.Call)):
+            continue
+        parts = _jit_call_parts(node.value)
+        if parts is None or parts[0] is None:
+            continue
+        target_expr, donate, static = parts
+        tname = dotted(target_expr)
+        if tname is None:
+            continue
+        wname = dotted(node.targets[0])
+        if wname is None:
+            continue
+        cg.jit_wrappers.append(JitWrapper(
+            wrapper_name=wname.rsplit(".", 1)[-1],
+            target=None,
+            target_name=tname.rsplit(".", 1)[-1],
+            donate_argnums=donate,
+            static_argnames=static,
+            file=src.rel,
+            line=node.lineno))

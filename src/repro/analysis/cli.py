@@ -1,0 +1,110 @@
+"""``python -m repro.analysis`` — run every rule, diff against the
+baseline, print ``file:line rule-id message`` lines, exit non-zero on any
+new finding or stale baseline entry.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from . import rules_conventions, rules_jax, rules_purity  # noqa: F401
+from .baseline import BASELINE_NAME, load_baseline, save_baseline, \
+    split_findings
+from .core import Finding, RULES, load_project
+
+
+def _find_root(start: Path) -> Path:
+    """Walk up from ``start`` to the directory holding ``src/repro``."""
+    for cand in (start, *start.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    # running from an installed/bare checkout: fall back to the package's
+    # own location (…/src/repro/analysis -> repo root three levels up)
+    return Path(__file__).resolve().parents[3]
+
+
+def run_rules(project, only: Optional[List[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for rule_id in sorted(RULES):
+        if only and rule_id not in only:
+            continue
+        findings.extend(RULES[rule_id].run(project))
+    return sorted(findings, key=lambda f: (f.file, f.line, f.rule,
+                                           f.message))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: repo-specific JAX-hygiene static analysis "
+                    "(RL001-RL006)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detected from cwd)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: <root>/{BASELINE_NAME})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current finding set "
+                         "and exit 0")
+    ap.add_argument("--rules", nargs="*", metavar="RLxxx",
+                    help="run only these rule ids")
+    ap.add_argument("--explain", metavar="RLxxx",
+                    help="print a rule's full documentation and exit")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered rules and exit")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also write a findings report (new/grandfathered/"
+                         "stale) as JSON — the CI artifact")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for rule_id in sorted(RULES):
+            print(f"{rule_id}  {RULES[rule_id].summary}")
+        return 0
+    if args.explain:
+        rule = RULES.get(args.explain)
+        if rule is None:
+            print(f"unknown rule {args.explain!r}; known: "
+                  f"{', '.join(sorted(RULES))}", file=sys.stderr)
+            return 2
+        print(f"{rule.rule_id} — {rule.summary}\n")
+        print(rule.check.__doc__ or "(no documentation)")
+        return 0
+
+    root = (args.root or _find_root(Path.cwd())).resolve()
+    project = load_project(root)
+    findings = run_rules(project, args.rules)
+
+    baseline_path = args.baseline or (root / BASELINE_NAME)
+    if args.update_baseline:
+        save_baseline(baseline_path, findings)
+        print(f"baseline updated: {len(findings)} grandfathered finding(s) "
+              f"-> {baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, old, stale = split_findings(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    for key in stale:
+        print(f"{key[1]} STALE-BASELINE {key[0]} entry no longer matches "
+              f"any finding (fixed? retire it): {key[3]}")
+
+    if args.json:
+        args.json.write_text(json.dumps({
+            "new": [f.__dict__ for f in new],
+            "grandfathered": [f.__dict__ for f in old],
+            "stale_baseline": [list(k) for k in stale],
+        }, indent=2) + "\n")
+
+    if new or stale:
+        print(f"\nreprolint: {len(new)} new finding(s), {len(stale)} stale "
+              f"baseline entr{'y' if len(stale) == 1 else 'ies'} "
+              f"({len(old)} grandfathered)", file=sys.stderr)
+        return 1
+    print(f"reprolint: clean ({len(findings)} finding(s), all "
+          f"grandfathered)" if findings else "reprolint: clean")
+    return 0

@@ -1,0 +1,187 @@
+"""reprolint core: findings, parsed sources, suppressions, rule registry.
+
+The analyzer is deliberately dependency-free (stdlib ``ast`` only) so it
+can run before anything else in CI — a broken jax install must not take
+the lint step down with it. Everything here is *repo-shaped*: rules know
+this codebase's conventions (jitted stage functions, donated buffers,
+``pure_callback`` host lanes, kernel/ref twins, pinned stats schemas)
+rather than generic Python style.
+
+Suppression: a finding on line N is suppressed by a trailing or same-line
+comment ``# reprolint: allow[RL002]`` (comma-separate multiple rule ids;
+bare ``# reprolint: allow`` suppresses every rule on that line). Each
+suppression should carry a reason after the bracket — the sanctioned
+host-sync drain points in the serving hot path are marked exactly this
+way, so the *exceptions* to an invariant are greppable alongside it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "Source", "Project", "Rule", "RULES", "register",
+           "load_project"]
+
+_ALLOW_RE = re.compile(r"#\s*reprolint:\s*allow(?:\[([A-Z0-9,\s]+)\])?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation. ``render()`` is the CI-facing line; ``key()`` is the
+    baseline identity — deliberately line-number-free so unrelated edits
+    above a grandfathered finding don't churn the baseline file."""
+    rule: str           # "RL001".."RL006"
+    file: str           # repo-relative posix path
+    line: int           # 1-based
+    message: str
+    symbol: str = ""    # enclosing function/class qualname ("" = module)
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line} {self.rule} {self.message}"
+
+    def key(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.file, self.symbol, self.message)
+
+
+class Source:
+    """One parsed file: text, AST, and per-line suppression sets."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=rel)
+        # line -> set of suppressed rule ids; "*" suppresses all
+        self.allow: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(line)
+            if m:
+                ids = m.group(1)
+                self.allow[i] = ({"*"} if ids is None else
+                                 {s.strip() for s in ids.split(",") if s.strip()})
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        ids = self.allow.get(line)
+        return ids is not None and ("*" in ids or rule in ids)
+
+
+class Project:
+    """The analyzed tree: parsed sources keyed by repo-relative path.
+
+    ``root`` is the repo root (the directory holding ``src/`` and
+    ``tests/``); rules address files as ``src/repro/...`` / ``tests/...``
+    so findings and baselines are stable across checkouts."""
+
+    def __init__(self, root: Path, sources: Dict[str, Source]):
+        self.root = root
+        self.sources = sources
+
+    def get(self, rel: str) -> Optional[Source]:
+        return self.sources.get(rel)
+
+    def under(self, prefix: str) -> List[Source]:
+        return [s for rel, s in sorted(self.sources.items())
+                if rel.startswith(prefix)]
+
+    def exists(self, rel: str) -> bool:
+        return (self.root / rel).exists()
+
+
+def load_project(root: Path,
+                 subtrees: Sequence[str] = ("src/repro", "tests",
+                                            "benchmarks", "tools"),
+                 ) -> Project:
+    sources: Dict[str, Source] = {}
+    for sub in subtrees:
+        base = root / sub
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            sources[rel] = Source(path, rel)
+    return Project(root, sources)
+
+
+@dataclass
+class Rule:
+    """A registered rule: id, one-line summary, and the check callable
+    (``check(project) -> list[Finding]``). The docstring of the callable
+    is the rule's long-form documentation (``--explain`` prints it)."""
+    rule_id: str
+    summary: str
+    check: callable
+    findings_filter: bool = True   # apply per-line allow[] suppression
+
+    def run(self, project: Project) -> List[Finding]:
+        found = self.check(project)
+        if self.findings_filter:
+            found = [f for f in found
+                     if not self._suppressed(project, f)]
+        return sorted(found, key=lambda f: (f.file, f.line, f.message))
+
+    @staticmethod
+    def _suppressed(project: Project, f: Finding) -> bool:
+        src = project.get(f.file)
+        return src is not None and src.suppressed(f.rule, f.line)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(rule_id: str, summary: str):
+    """Decorator: register ``check(project) -> [Finding]`` under an id."""
+    def deco(fn):
+        RULES[rule_id] = Rule(rule_id, summary, fn)
+        return fn
+    return deco
+
+
+# -- shared AST helpers ------------------------------------------------------
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, 'a[k].b' for constant
+    subscripts; None for anything dynamic."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    if isinstance(node, ast.Subscript):
+        base = dotted(node.value)
+        if base is None:
+            return None
+        sl = node.slice
+        if isinstance(sl, ast.Constant):
+            return f"{base}[{sl.value!r}]"
+        return None
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Trailing name of the callee: ``foo`` for foo(...), x.foo(...)."""
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def walk_functions(tree: ast.AST) -> Iterable[Tuple[str, ast.AST]]:
+    """Yield (qualname, def-node) for every function/method, including
+    nested ones (qualname uses '.' between scopes)."""
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield q, child
+                yield from visit(child, q + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+    yield from visit(tree, "")

@@ -1,0 +1,184 @@
+"""RL005/RL006 — repo landing conventions, machine-checked.
+
+RL005 pins the kernel/jnp-twin convention: every Pallas kernel package
+ships a ``ref.py`` pure-jnp twin and a test asserting bitwise parity
+against it, so interpret-mode CI runs and TPU runs are guarded by the
+same oracle. RL006 pins the stats/bench schema: the counters
+``EngineStats``/``RunStats`` export and the benchmark ``record_run``
+payloads must stay bit-for-bit in sync with the pins in
+``tests/test_bench_schema.py`` — schema drift is how CI artifacts rot.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Finding, Project, Source, call_name, register
+
+KERNELS_PREFIX = "src/repro/kernels/"
+STATS_FILE = "src/repro/serving/stats.py"
+SCHEMA_TEST = "tests/test_bench_schema.py"
+
+# text markers that a module contains a Pallas kernel
+_PALLAS_MARKERS = ("pallas_call", "from jax.experimental import pallas")
+# text markers of a bitwise-parity assertion in a test
+_BITWISE_MARKERS = ("array_equal",)
+
+
+@register("RL005", "Pallas kernel package missing ref.py twin or bitwise "
+                   "parity test")
+def rl005_kernel_twin(project: Project) -> List[Finding]:
+    """RL005: every ``src/repro/kernels/<pkg>/`` package containing a
+    Pallas module (detected by ``pallas_call`` / pallas imports) must
+
+    1. ship a ``ref.py`` pure-jnp twin in the same package, and
+    2. be exercised by at least one test under ``tests/`` that imports
+       the package's ``ref`` module AND asserts bitwise parity
+       (``array_equal``) in the same file.
+
+    This is the repo's kernel landing convention (every kernel since the
+    decode-attention PR pairs with a replay twin); RL005 turns it from a
+    review habit into a gate. The twin is what lets interpret-mode CI
+    (no TPU) and device runs share one numerical oracle."""
+    findings: List[Finding] = []
+    pkgs: Dict[str, Source] = {}
+    for src in project.under(KERNELS_PREFIX):
+        parts = src.rel[len(KERNELS_PREFIX):].split("/")
+        if len(parts) != 2:
+            continue
+        pkg, mod = parts
+        if mod != "ref.py" and any(m in src.text for m in _PALLAS_MARKERS):
+            pkgs.setdefault(pkg, src)
+
+    for pkg, kernel_src in sorted(pkgs.items()):
+        ref_rel = f"{KERNELS_PREFIX}{pkg}/ref.py"
+        if project.get(ref_rel) is None and not project.exists(ref_rel):
+            findings.append(Finding(
+                "RL005", kernel_src.rel, 1,
+                f"kernel package `{pkg}` has a Pallas module but no "
+                f"ref.py jnp twin", symbol=pkg))
+            continue
+        if not _has_parity_test(project, pkg):
+            findings.append(Finding(
+                "RL005", kernel_src.rel, 1,
+                f"kernel package `{pkg}` has no test importing its ref "
+                f"twin and asserting bitwise parity (array_equal)",
+                symbol=pkg))
+    return findings
+
+
+def _has_parity_test(project: Project, pkg: str) -> bool:
+    want_mod = f"repro.kernels.{pkg}"
+    for src in project.under("tests/"):
+        if not any(m in src.text for m in _BITWISE_MARKERS):
+            continue
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ImportFrom) or node.module is None:
+                continue
+            if node.module == want_mod \
+                    and any(a.name == "ref" for a in node.names):
+                return True
+            if node.module == f"{want_mod}.ref":
+                return True
+    return False
+
+
+@register("RL006", "stats/bench schema keys out of sync with "
+                   "test_bench_schema.py pins")
+def rl006_schema_drift(project: Project) -> List[Finding]:
+    """RL006: three schema contracts, checked two-way.
+
+    1. Every scalar field and derived-rate property of ``EngineStats``
+       must appear in the ``ENGINE_KEYS`` pin of
+       ``tests/test_bench_schema.py`` — a counter added to the stats
+       without a pin ships unvalidated in every CI artifact.
+    2. Same for ``RunStats`` fields against ``RUN_KEYS``.
+    3. Vice versa: a pinned key with no backing field/property is a
+       stale pin (the export would fail ``set(d) == ENGINE_KEYS``, but
+       the lint catches it before the test suite boots jax).
+    4. Every benchmark module calling ``record_run`` must be exercised
+       by name in ``tests/test_bench_schema.py`` so its payload shape is
+       validated against the pinned schema."""
+    findings: List[Finding] = []
+    stats_src = project.get(STATS_FILE)
+    schema_src = project.get(SCHEMA_TEST)
+    if stats_src is None or schema_src is None:
+        return findings
+
+    exported = _exported_keys(stats_src)
+    pinned = _pinned_keys(schema_src)
+    for cls, pin_name in (("EngineStats", "ENGINE_KEYS"),
+                          ("RunStats", "RUN_KEYS")):
+        if cls not in exported or pin_name not in pinned:
+            continue
+        keys, lines = exported[cls]
+        pin_keys, pin_line = pinned[pin_name]
+        for key in sorted(keys - pin_keys):
+            findings.append(Finding(
+                "RL006", stats_src.rel, lines.get(key, 1),
+                f"{cls} exports `{key}` but {SCHEMA_TEST} {pin_name} "
+                f"does not pin it", symbol=cls))
+        for key in sorted(pin_keys - keys):
+            findings.append(Finding(
+                "RL006", schema_src.rel, pin_line,
+                f"{pin_name} pins `{key}` but {cls} does not export it",
+                symbol=pin_name))
+
+    # benchmark record_run coverage
+    for src in project.under("benchmarks/"):
+        stem = src.rel.rsplit("/", 1)[-1][:-3]
+        if stem in ("common", "__init__"):
+            continue
+        call_line = _first_record_run(src)
+        if call_line is not None and stem not in schema_src.text:
+            findings.append(Finding(
+                "RL006", src.rel, call_line,
+                f"benchmark `{stem}` calls record_run but "
+                f"{SCHEMA_TEST} never exercises it", symbol=stem))
+    return findings
+
+
+def _exported_keys(src: Source
+                   ) -> Dict[str, Tuple[Set[str], Dict[str, int]]]:
+    """Per stats class: exported key names (scalar fields + @property
+    derived rates) and the line each was declared on."""
+    out: Dict[str, Tuple[Set[str], Dict[str, int]]] = {}
+    for node in src.tree.body:
+        if not isinstance(node, ast.ClassDef) \
+                or node.name not in ("EngineStats", "RunStats"):
+            continue
+        keys: Set[str] = set()
+        lines: Dict[str, int] = {}
+        for item in node.body:
+            if isinstance(item, ast.AnnAssign) \
+                    and isinstance(item.target, ast.Name):
+                keys.add(item.target.id)
+                lines[item.target.id] = item.lineno
+            elif isinstance(item, ast.FunctionDef) and any(
+                    isinstance(d, ast.Name) and d.id == "property"
+                    for d in item.decorator_list):
+                keys.add(item.name)
+                lines[item.name] = item.lineno
+        out[node.name] = (keys, lines)
+    return out
+
+
+def _pinned_keys(src: Source) -> Dict[str, Tuple[Set[str], int]]:
+    out: Dict[str, Tuple[Set[str], int]] = {}
+    for node in src.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id in ("ENGINE_KEYS", "RUN_KEYS") \
+                and isinstance(node.value, ast.Set):
+            keys = {el.value for el in node.value.elts
+                    if isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)}
+            out[node.targets[0].id] = (keys, node.lineno)
+    return out
+
+
+def _first_record_run(src: Source) -> Optional[int]:
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call) and call_name(node) == "record_run":
+            return node.lineno
+    return None

@@ -1,0 +1,585 @@
+"""JAX-hygiene rules: tracer leaks, hot-path host syncs, donation reuse.
+
+All three rules share the callgraph's jit-boundary index: RL001 analyzes
+code *inside* the trace boundary, RL002 code *outside* it (the host
+orchestration loop), RL003 the call sites that cross it with donated
+buffers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, Project, Source, call_name, dotted, register, \
+    walk_functions
+from .callgraph import CallGraph, FunctionInfo, build_callgraph
+
+# Attribute reads that are static under tracing (array metadata), so they
+# never carry taint out of a tracer.
+UNTAINT_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+# Calls whose result is host-static even on traced arguments.
+UNTAINT_CALLS = {"len", "isinstance", "type", "hasattr", "callable",
+                 "issubclass", "id", "repr"}
+# Calls that force a concrete value out of a tracer: each is a trace-time
+# error (or a silent constant-fold hazard) inside jitted code.
+LEAK_CALLS = {"bool", "float", "int"}
+
+# RL001 findings are scoped to the files the issue names; taint still
+# PROPAGATES through every analyzed file so a leak in engine.py caused by
+# a call chain through models/attention.py is attributed correctly.
+RL001_SCOPE = ("src/repro/serving/engine.py",
+               "src/repro/core/collaborative.py",
+               "src/repro/models/transformer.py")
+
+_cg_cache: Dict[int, Tuple["Project", CallGraph]] = {}
+
+
+def _graph(project: Project) -> CallGraph:
+    """One cached callgraph per live project. The cache holds a strong
+    reference to the keyed project, so its id() cannot be recycled for a
+    different Project while the entry exists; the identity check guards
+    the swap when a new project arrives."""
+    key = id(project)
+    hit = _cg_cache.get(key)
+    if hit is None or hit[0] is not project:
+        _cg_cache.clear()               # one live project at a time
+        _cg_cache[key] = (project, build_callgraph(project))
+    return _cg_cache[key][1]
+
+
+# ---------------------------------------------------------------------------
+# shared taint machinery
+# ---------------------------------------------------------------------------
+
+class _Taint:
+    """Flow-insensitive name-level taint over one function body."""
+
+    def __init__(self, tainted: Set[str]):
+        self.tainted = set(tainted)
+
+    def expr(self, node: ast.AST) -> bool:
+        t = self.expr
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in UNTAINT_ATTRS:
+                return False
+            return t(node.value)
+        if isinstance(node, ast.Subscript):
+            return t(node.value) or t(node.slice)
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in UNTAINT_CALLS:
+                return False
+            parts = [node.func] if isinstance(node.func, ast.Attribute) \
+                else []
+            parts += list(node.args) + [kw.value for kw in node.keywords]
+            return any(t(p) for p in parts)
+        if isinstance(node, ast.Compare):
+            static_ops = (ast.Is, ast.IsNot, ast.In, ast.NotIn)
+            if all(isinstance(op, static_ops) for op in node.ops):
+                return False
+            return t(node.left) or any(t(c) for c in node.comparators)
+        if isinstance(node, (ast.BinOp,)):
+            return t(node.left) or t(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return t(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(t(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return t(node.test) or t(node.body) or t(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(t(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(t(v) for v in node.values if v is not None)
+        if isinstance(node, ast.Starred):
+            return t(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return any(t(g.iter) for g in node.generators) or t(node.elt)
+        if isinstance(node, ast.DictComp):
+            return any(t(g.iter) for g in node.generators) \
+                or t(node.key) or t(node.value)
+        if isinstance(node, ast.JoinedStr):
+            return False
+        if isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        if isinstance(node, ast.Slice):
+            return any(t(p) for p in (node.lower, node.upper, node.step)
+                       if p is not None)
+        return False
+
+    def bind(self, target: ast.AST, tainted: bool) -> None:
+        """Strong update: assigning an untainted value clears the name."""
+        if isinstance(target, ast.Name):
+            (self.tainted.add if tainted
+             else self.tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self.bind(el, tainted)
+        elif isinstance(target, ast.Starred):
+            self.bind(target.value, tainted)
+        # Attribute / Subscript stores: name-level tracking ignores them
+
+
+def _func_params(fi: FunctionInfo) -> List[str]:
+    return fi.param_names()
+
+
+def _map_call_taint(call: ast.Call, callee: FunctionInfo,
+                    taint: _Taint, static: Sequence[str]) -> FrozenSet[str]:
+    """Tainted parameter names of ``callee`` for this call site."""
+    params = _func_params(callee)
+    if params and params[0] in ("self", "cls") \
+            and isinstance(call.func, ast.Attribute):
+        params = params[1:]
+    out: Set[str] = set()
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            if taint.expr(arg.value):
+                out.update(params[i:])
+            break
+        if i < len(params) and taint.expr(arg):
+            out.add(params[i])
+    for kw in call.keywords:
+        if kw.arg is not None and kw.arg in params and taint.expr(kw.value):
+            out.add(kw.arg)
+    return frozenset(n for n in out if n not in static)
+
+
+# ---------------------------------------------------------------------------
+# RL001 — tracer leak
+# ---------------------------------------------------------------------------
+
+@register("RL001", "Python control flow / concretization on a traced value "
+                   "inside jit-reachable code")
+def rl001_tracer_leak(project: Project) -> List[Finding]:
+    """RL001: inside a function reachable from a ``jax.jit`` boundary, a
+    value derived from traced arguments must never decide Python control
+    flow (``if`` / ``while`` / ternary test) or be concretized
+    (``bool()`` / ``float()`` / ``int()`` / ``.item()``) — each is a
+    trace-time ``TracerBoolConversionError`` waiting for the first input
+    that exercises the branch, or a silent constant-fold if the value is
+    weakly typed.
+
+    The analysis is an interprocedural taint pass: a jit root's
+    non-static parameters are the sources (``static_argnames`` declared
+    on the wrapper are exempt — they ARE Python values at trace time);
+    taint follows assignments and call arguments through every function
+    in ``src/repro``; array metadata (``.shape`` / ``.ndim`` /
+    ``.dtype``), identity/membership tests (``is`` / ``in``) and
+    ``len()`` / ``isinstance()`` stay static under tracing and drop the
+    taint. Functions defined *inside* a jit-reachable function (scan
+    bodies) are analyzed with all parameters traced — their arguments
+    are carries. Findings are reported for the serving/engine,
+    core/collaborative and models/transformer layers (the files the
+    trace boundary actually crosses)."""
+    cg = _graph(project)
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, str, FrozenSet[str]]] = set()
+    reported: Set[Tuple[str, int, str]] = set()
+
+    # wrapper static_argnames apply to the wrapped target's params
+    statics: Dict[Tuple[str, str], Set[str]] = {}
+    for w in cg.jit_wrappers:
+        if w.target is not None:
+            statics.setdefault((w.target.file, w.target.qualname),
+                               set()).update(w.static_argnames)
+    for fi in cg.functions.values():
+        if fi.jit_decorated:
+            statics.setdefault((fi.file, fi.qualname),
+                               set()).update(fi.static_argnames)
+
+    work: List[Tuple[FunctionInfo, FrozenSet[str]]] = []
+    for fi in cg.jit_targets():
+        st = statics.get((fi.file, fi.qualname), set())
+        params = [p for p in _func_params(fi)
+                  if p not in ("self", "cls") and p not in st]
+        work.append((fi, frozenset(params)))
+
+    def emit(fi: FunctionInfo, node: ast.AST, what: str) -> None:
+        if not fi.file.startswith(RL001_SCOPE):
+            if fi.file not in RL001_SCOPE:
+                return
+        key = (fi.file, node.lineno, what)
+        if key in reported:
+            return
+        reported.add(key)
+        findings.append(Finding("RL001", fi.file, node.lineno,
+                                f"{what} on a traced value inside "
+                                f"jit-reachable `{fi.qualname}`",
+                                symbol=fi.qualname))
+
+    def analyze(fi: FunctionInfo, tainted_params: FrozenSet[str]) -> None:
+        key = (fi.file, fi.qualname, tainted_params)
+        if key in seen or not tainted_params:
+            return
+        seen.add(key)
+        taint = _Taint(set(tainted_params))
+        _walk_jit_body(fi, fi.node, taint)
+
+    def _walk_jit_body(fi: FunctionInfo, func_node: ast.AST,
+                       taint: _Taint) -> None:
+        for stmt in ast.iter_child_nodes(func_node):
+            _stmt(fi, stmt, taint)
+
+    def _scan_calls(fi: FunctionInfo, node: ast.AST, taint: _Taint) -> None:
+        """Leak calls + interprocedural propagation in one expression."""
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = call_name(sub)
+            if name in LEAK_CALLS and sub.args \
+                    and taint.expr(sub.args[0]):
+                emit(fi, sub, f"{name}()")
+            elif name == "item" and isinstance(sub.func, ast.Attribute) \
+                    and taint.expr(sub.func.value):
+                emit(fi, sub, ".item()")
+            elif name and name not in UNTAINT_CALLS \
+                    and name not in LEAK_CALLS:
+                targets = []
+                for w in cg.wrappers_by_name.get(name, ()):
+                    if w.target is not None:
+                        targets.append(
+                            (w.target, set(w.static_argnames)))
+                if not targets:
+                    for cand in cg.resolve(name):
+                        targets.append(
+                            (cand, statics.get(
+                                (cand.file, cand.qualname), set())))
+                for cand, st in targets:
+                    mapped = _map_call_taint(sub, cand, taint, sorted(st))
+                    if mapped:
+                        work.append((cand, mapped))
+
+    def _stmt(fi: FunctionInfo, stmt: ast.AST, taint: _Taint) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def (scan body): params receive traced carries;
+            # closure taint flows in from the enclosing frame
+            inner = _Taint(taint.tainted
+                           | {p.arg for p in stmt.args.args
+                              + stmt.args.posonlyargs + stmt.args.kwonlyargs})
+            _walk_jit_body(fi, stmt, inner)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            if taint.expr(stmt.test):
+                emit(fi, stmt,
+                     "`while`" if isinstance(stmt, ast.While) else "`if`")
+            _scan_calls(fi, stmt.test, taint)
+            for s in stmt.body + stmt.orelse:
+                _stmt(fi, s, taint)
+            return
+        if isinstance(stmt, ast.For):
+            _scan_calls(fi, stmt.iter, taint)
+            taint.bind(stmt.target, taint.expr(stmt.iter))
+            for s in stmt.body + stmt.orelse:
+                _stmt(fi, s, taint)
+            return
+        if isinstance(stmt, (ast.With,)):
+            for s in stmt.body:
+                _stmt(fi, s, taint)
+            return
+        if isinstance(stmt, (ast.Try,)):
+            for s in stmt.body + stmt.orelse + stmt.finalbody:
+                _stmt(fi, s, taint)
+            for h in stmt.handlers:
+                for s in h.body:
+                    _stmt(fi, s, taint)
+            return
+        # expression-bearing statements: find ternary tests, leak calls,
+        # then apply assignments
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.IfExp) and taint.expr(sub.test):
+                emit(fi, sub, "ternary `if`")
+        _scan_calls(fi, stmt, taint)
+        if isinstance(stmt, ast.Assign):
+            val = taint.expr(stmt.value)
+            for tgt in stmt.targets:
+                taint.bind(tgt, val)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            taint.bind(stmt.target, taint.expr(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if taint.expr(stmt.value):
+                taint.bind(stmt.target, True)
+
+    guard = 0
+    while work:
+        guard += 1
+        if guard > 10000:            # name-collision blowup backstop
+            break
+        fi, params = work.pop()
+        analyze(fi, params)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL002 — host sync in the decode/segment hot path
+# ---------------------------------------------------------------------------
+
+# the steady-state loop: one scheduler tick, the batched decode step, and
+# the segment-stream advance — computed reachability from these
+HOT_ENTRIES = ("_tick", "decode_batch", "advance_prefill_state")
+# admission / intake / retirement: per-request transitions, not the
+# steady-state loop (the compile gate covers them dynamically)
+HOT_STOP = ("_admit", "_retire", "submit", "cancel", "fork", "fork_slot",
+            "start_prefill", "_open_ticket", "_start_segmented",
+            "bind_slot", "claim_slot", "release_slot", "can_admit",
+            "prefill_chunked", "prefill_request", "generate", "stats")
+# sanctioned drain points: the ONLY places the hot path may synchronize —
+# the stats accumulators (one host conversion per tick/chunk batch) and
+# the deferred first-token sample (the token must reach the host to
+# stream). Inline sites use `# reprolint: allow[RL002] <reason>` instead.
+HOT_SANCTIONED = ("_accumulate", "_accumulate_prefill", "sample_first")
+
+# calls that create device values inside a host function (their results
+# must not be pulled back with np.asarray & friends in the hot path)
+_DEVICE_NS = ("jnp", "lax")
+_SYNC_CALLS = {"asarray", "array", "nonzero", "copy"}       # np.<these>
+
+
+@register("RL002", "host synchronization inside the decode/segment hot "
+                   "path outside sanctioned drain points")
+def rl002_host_sync(project: Project) -> List[Finding]:
+    """RL002: the steady-state serving loop — everything reachable from
+    the scheduler tick, the batched decode step and the segment-stream
+    advance — must not block on the device. Flagged inside that computed
+    call graph:
+
+    * ``jax.device_get(...)`` / ``.block_until_ready()`` — explicit
+      syncs, flagged unconditionally;
+    * ``np.asarray`` / ``np.array`` / ``np.nonzero`` / ``bool`` /
+      ``int`` / ``float`` applied to a value the SAME function created
+      on-device (assigned from a ``jnp.*`` / ``jax.*`` op or a jitted
+      call) — an implicit transfer+sync.
+
+    The hot path is computed, not hand-listed: reachability from
+    ``_tick`` / ``decode_batch`` / ``advance_prefill_state`` by call
+    name, stopping at the admission/retirement set (per-request
+    transitions) and at the trace boundary (jitted functions are RL001's
+    jurisdiction). The sanctioned drain points — the stats accumulators
+    and the deferred first-token sample — are exempt by name; inline
+    exemptions (the scheduler's once-per-tick token drain) carry a
+    ``# reprolint: allow[RL002]`` comment with the reason."""
+    cg = _graph(project)
+    findings: List[Finding] = []
+    hot = cg.reachable(HOT_ENTRIES, stop=set(HOT_STOP) | set(HOT_SANCTIONED))
+    wrapper_names = set(cg.wrappers_by_name)
+    reported: Set[Tuple[str, int, str]] = set()
+
+    def report(fi: FunctionInfo, line: int, msg: str) -> None:
+        # visit() rescans nested statements at every ancestor level so
+        # assignments bind before deeper calls are judged — dedup keeps
+        # each violation to one finding
+        key = (fi.file, line, msg)
+        if key not in reported:
+            reported.add(key)
+            findings.append(Finding("RL002", fi.file, line, msg,
+                                    symbol=fi.qualname))
+
+    for fi in hot:
+        taint = _Taint(set())
+        device = taint.tainted         # device-created names, same frame
+
+        def visit(node, fi=fi, taint=taint, device=device):
+            for stmt in ast.iter_child_nodes(node):
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    continue           # nested defs analyzed via callgraph
+                for sub in ast.walk(stmt):
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    name = call_name(sub)
+                    path = dotted(sub.func) or ""
+                    if path in ("jax.device_get", "jax.block_until_ready"):
+                        report(fi, sub.lineno,
+                               f"`{path}` in hot-path `{fi.qualname}` — "
+                               f"blocks the decode loop on the device")
+                    elif name == "block_until_ready" \
+                            and isinstance(sub.func, ast.Attribute):
+                        report(fi, sub.lineno,
+                               f"`.block_until_ready()` in hot-path "
+                               f"`{fi.qualname}`")
+                    elif ((path.startswith("np.") or path.startswith(
+                            "numpy.")) and name in _SYNC_CALLS
+                            or name in ("bool", "int", "float")) \
+                            and sub.args and taint.expr(sub.args[0]):
+                        report(fi, sub.lineno,
+                               f"`{path or name}()` on a device value in "
+                               f"hot-path `{fi.qualname}` — implicit "
+                               f"device->host sync")
+                if isinstance(stmt, ast.Assign):
+                    tainted = _device_expr(stmt.value, taint,
+                                           wrapper_names)
+                    for tgt in stmt.targets:
+                        taint.bind(tgt, tainted)
+                elif isinstance(stmt, ast.AugAssign):
+                    if _device_expr(stmt.value, taint, wrapper_names):
+                        taint.bind(stmt.target, True)
+                visit(stmt)
+
+        visit(fi.node)
+    return findings
+
+
+def _device_expr(node: ast.AST, taint: _Taint,
+                 wrapper_names: Set[str]) -> bool:
+    """Does this expression produce a device value? jnp/lax namespace
+    calls, calls through jit wrappers, and derivations of existing
+    device-tainted names count; ``jax.device_get`` results are host."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            path = dotted(sub.func) or ""
+            name = call_name(sub)
+            if path in ("jax.device_get",):
+                return False
+            root = path.split(".", 1)[0]
+            if root in _DEVICE_NS or path.startswith("jax.lax.") \
+                    or path.startswith("jax.nn."):
+                return True
+            if name in wrapper_names:
+                return True
+        if isinstance(sub, ast.Name) and sub.id in taint.tainted:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# RL003 — donated buffer reused after the call
+# ---------------------------------------------------------------------------
+
+@register("RL003", "buffer passed at a donate_argnums position referenced "
+                   "again after the call")
+def rl003_donation_reuse(project: Project) -> List[Finding]:
+    """RL003: a buffer passed at a ``donate_argnums`` position is DEAD
+    after the call — XLA may have aliased its memory into the outputs —
+    so any later read of the same reference observes garbage (or raises
+    a deleted-buffer error on strict backends). For every call through a
+    wrapper bound by ``x = jax.jit(fn, donate_argnums=(...))``, the rule
+    takes each donated argument with a resolvable path (``state``,
+    ``self.fast``, ``batch_state["scan"]``) and scans the remainder of
+    the enclosing function for a read of that exact path (or an
+    extension of it) before the path is rebound. Rebinding through the
+    call's own assignment targets — the repo's threading idiom
+    ``logits, state, self.fast, stats = self._decode(..., state,
+    self.fast, ...)`` — clears the donation immediately. The scan is
+    lexical (single forward pass), which matches the engine's straight-
+    line threading style."""
+    cg = _graph(project)
+    findings: List[Finding] = []
+    donating = {w.wrapper_name: w for w in cg.jit_wrappers
+                if w.donate_argnums}
+
+    for (file, qual), fi in cg.functions.items():
+        if not file.startswith("src/repro"):
+            continue
+        body_stmts = list(ast.walk(fi.node))
+        for stmt in body_stmts:
+            if not isinstance(stmt, (ast.Assign, ast.Expr, ast.Return)):
+                continue
+            calls = [c for c in ast.walk(stmt) if isinstance(c, ast.Call)
+                     and call_name(c) in donating]
+            for call in calls:
+                w = donating[call_name(call)]
+                donated: List[str] = []
+                for pos in w.donate_argnums:
+                    if pos < len(call.args):
+                        path = dotted(call.args[pos])
+                        if path is not None:
+                            donated.append(path)
+                if not donated:
+                    continue
+                # targets of the same statement rebind immediately
+                rebound: Set[str] = set()
+                if isinstance(stmt, ast.Assign):
+                    for tgt in stmt.targets:
+                        rebound.update(_target_paths(tgt))
+                live = [p for p in donated
+                        if p not in rebound
+                        and not any(p == r or p.startswith(r + ".")
+                                    or p.startswith(r + "[")
+                                    for r in rebound)]
+                if live:
+                    findings.extend(_scan_after(fi, file, stmt, call,
+                                                live, set(rebound)))
+    # cg.functions lists nested defs separately AND ast.walk on the
+    # enclosing function covers their bodies — keep one finding per site
+    uniq: Dict[Tuple[str, int, str], Finding] = {}
+    for f in findings:
+        uniq.setdefault((f.file, f.line, f.message), f)
+    return list(uniq.values())
+
+
+def _target_paths(tgt: ast.AST) -> List[str]:
+    if isinstance(tgt, (ast.Tuple, ast.List)):
+        out = []
+        for el in tgt.elts:
+            out.extend(_target_paths(el))
+        return out
+    if isinstance(tgt, ast.Starred):
+        return _target_paths(tgt.value)
+    p = dotted(tgt)
+    return [p] if p is not None else []
+
+
+def _scan_after(fi: FunctionInfo, file: str, call_stmt: ast.AST,
+                call: ast.Call, donated: List[str],
+                rebound: Set[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    live = {p: True for p in donated}
+
+    def kills(path: str, rebinds: Set[str]) -> bool:
+        return any(path == r or path.startswith(r + ".")
+                   or path.startswith(r + "[")
+                   or r.startswith(path + ".") or r.startswith(path + "[")
+                   for r in rebinds)
+
+    for stmt in ast.walk(fi.node):
+        if not hasattr(stmt, "lineno") or stmt.lineno <= call_stmt.lineno:
+            continue
+        if not isinstance(stmt, (ast.Assign, ast.AugAssign, ast.Expr,
+                                 ast.Return, ast.If, ast.While, ast.For,
+                                 ast.Raise, ast.Assert, ast.AnnAssign)):
+            continue
+        # reads first (an AugAssign/self-referencing assign reads before
+        # it writes)
+        exprs: List[ast.AST] = []
+        new_rebinds: Set[str] = set()
+        if isinstance(stmt, ast.Assign):
+            exprs = [stmt.value]
+            for tgt in stmt.targets:
+                new_rebinds.update(_target_paths(tgt))
+        elif isinstance(stmt, ast.AnnAssign):
+            exprs = [stmt.value] if stmt.value is not None else []
+            new_rebinds.update(_target_paths(stmt.target))
+        elif isinstance(stmt, ast.AugAssign):
+            exprs = [stmt.value, stmt.target]
+            new_rebinds.update(_target_paths(stmt.target))
+        elif isinstance(stmt, (ast.Expr, ast.Return, ast.Raise)):
+            exprs = [v for v in (getattr(stmt, "value", None),) if v]
+        elif isinstance(stmt, (ast.If, ast.While)):
+            exprs = [stmt.test]
+        elif isinstance(stmt, ast.For):
+            exprs = [stmt.iter]
+        elif isinstance(stmt, ast.Assert):
+            exprs = [stmt.test]
+        for path in list(live):
+            if not live[path]:
+                continue
+            for ex in exprs:
+                for sub in ast.walk(ex):
+                    p = dotted(sub)
+                    if p is not None and (p == path
+                                          or p.startswith(path + ".")
+                                          or p.startswith(path + "[")):
+                        findings.append(Finding(
+                            "RL003", file, sub.lineno,
+                            f"`{path}` was donated to `{call_name(call)}` "
+                            f"on line {call.lineno} and read again — the "
+                            f"buffer may already be aliased into the "
+                            f"outputs", symbol=fi.qualname))
+                        live[path] = False
+                        break
+                if not live[path]:
+                    break
+            if live[path] and kills(path, new_rebinds):
+                live[path] = False
+    return findings

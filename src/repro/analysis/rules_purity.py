@@ -1,0 +1,171 @@
+"""RL004 — ``pure_callback`` targets must stay effect-free.
+
+``jax.pure_callback`` tells XLA the callback is pure: the runtime may
+cache it, re-invoke it (donation replays, multi-device broadcast) or
+elide it entirely when the output is dead. A target that mutates
+persistent state therefore double-counts, under-counts or silently
+drops its writes. The host-executor lane holds the one sanctioned
+exception: best-effort pool telemetry whose docstring already declares
+it "a floor, not a ledger".
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .core import Finding, Project, Source, call_name, dotted, register
+
+# The executor's sanctioned telemetry attributes (repro/hostexec/
+# executor.py documents them as best-effort floors — pure_callback may
+# legally re-invoke — with the exact counts living in the traced
+# EngineStats channel). Writes to anything else inside a callback target
+# are a correctness bug, not telemetry.
+SANCTIONED_TELEMETRY = {"calls", "groups", "fused", "census_calls",
+                        "census_threads", "affinity_hits", "_affinity"}
+
+HOSTEXEC_PREFIX = "src/repro/hostexec/"
+
+
+@register("RL004", "pure_callback target writes non-telemetry persistent "
+                   "state")
+def rl004_callback_purity(project: Project) -> List[Finding]:
+    """RL004: every function passed to ``jax.pure_callback`` from the
+    ``hostexec`` package is located (method references like
+    ``executor.compute_groups`` resolve by trailing name across the
+    package) and its body — including nested worker functions — is
+    checked for writes to persistent state: ``self.<attr>`` stores,
+    ``global`` / ``nonlocal`` rebinding, and stores to module-level
+    names. Writes to the executor's sanctioned pool-telemetry attributes
+    are exempt; everything else is flagged. Local buffers (including
+    closure-captured locals of the callback itself, like the output
+    array worker threads fill) are fine — they die with the invocation."""
+    findings: List[Finding] = []
+    sources = project.under(HOSTEXEC_PREFIX)
+
+    # 1) collect callback target names at pure_callback call sites
+    target_names: Set[str] = set()
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) \
+                    and call_name(node) == "pure_callback" and node.args:
+                tname = dotted(node.args[0])
+                if tname is not None:
+                    target_names.add(tname.rsplit(".", 1)[-1])
+
+    if not target_names:
+        return findings
+
+    # 2) resolve each target function in the package and audit its writes
+    for src in sources:
+        module_globals = _module_names(src.tree)
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in target_names:
+                findings.extend(_audit(src, node, module_globals))
+    return findings
+
+
+def _module_names(tree: ast.Module) -> Set[str]:
+    names: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            names.add(node.target.id)
+    return names
+
+
+def _bound_names(tgt: ast.AST):
+    """Names a store target actually binds (plain ``x = ...`` and tuple
+    unpacking). ``x[k] = ...`` / ``x.a = ...`` mutate an existing object
+    and bind nothing — treating their root as local would mask writes to
+    module globals."""
+    if isinstance(tgt, ast.Name):
+        yield tgt.id
+    elif isinstance(tgt, ast.Starred):
+        yield from _bound_names(tgt.value)
+    elif isinstance(tgt, (ast.Tuple, ast.List)):
+        for el in tgt.elts:
+            yield from _bound_names(el)
+
+
+def _audit(src: Source, func: ast.AST,
+           module_globals: Set[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    declared_global: Set[str] = set()
+    # names bound locally anywhere in the callback (params, assignments):
+    # stores to these are invocation-local, not persistent
+    local_names = {a.arg for a in func.args.args + func.args.posonlyargs
+                   + func.args.kwonlyargs}
+    if func.args.vararg:
+        local_names.add(func.args.vararg.arg)
+    if func.args.kwarg:
+        local_names.add(func.args.kwarg.arg)
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                local_names.update(_bound_names(tgt))
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign, ast.For)) \
+                and isinstance(getattr(node, "target", None), ast.Name):
+            local_names.add(node.target.id)
+
+    def root_name(node: ast.AST) -> Optional[str]:
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        return node.id if isinstance(node, ast.Name) else None
+
+    def check_store(tgt: ast.AST, line: int) -> None:
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                check_store(el, line)
+            return
+        root = root_name(tgt)
+        if root == "self":
+            # self.<attr>[...] / self.<attr> — attr is the persistence unit
+            node = tgt
+            attr = None
+            while isinstance(node, (ast.Attribute, ast.Subscript)):
+                if isinstance(node, ast.Attribute) \
+                        and isinstance(node.value, ast.Name) \
+                        and node.value.id == "self":
+                    attr = node.attr
+                node = node.value
+            if attr is not None and attr not in SANCTIONED_TELEMETRY:
+                findings.append(Finding(
+                    "RL004", src.rel, line,
+                    f"pure_callback target `{func.name}` writes "
+                    f"`self.{attr}` — not sanctioned pool telemetry; "
+                    f"pure_callback may re-invoke, cache or elide the "
+                    f"call", symbol=func.name))
+        elif root is not None and (
+                root in declared_global
+                or (root in module_globals and root not in local_names)):
+            # G = v (under `global G`), G[k] = v, G.attr = v — persistent
+            # module state either way
+            findings.append(Finding(
+                "RL004", src.rel, line,
+                f"pure_callback target `{func.name}` writes module "
+                f"global `{root}`", symbol=func.name))
+
+    for node in ast.walk(func):
+        if isinstance(node, ast.Global):
+            declared_global.update(node.names)
+            findings.append(Finding(
+                "RL004", src.rel, node.lineno,
+                f"pure_callback target `{func.name}` declares "
+                f"`global {', '.join(node.names)}`", symbol=func.name))
+        elif isinstance(node, ast.Nonlocal):
+            findings.append(Finding(
+                "RL004", src.rel, node.lineno,
+                f"pure_callback target `{func.name}` declares "
+                f"`nonlocal {', '.join(node.names)}`", symbol=func.name))
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                check_store(tgt, node.lineno)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            check_store(node.target, node.lineno)
+    return findings

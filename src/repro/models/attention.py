@@ -272,10 +272,16 @@ def segment_attention_paged(p: Params, x: jax.Array, cache: Params,
     table only where ``write_min <= idx < write_max`` — shared prefix
     pages (other requests still reference them) and pad rows past the
     prompt are never rewritten; out-of-range rows redirect to page id
-    ``num_pages`` and drop. The pool is then gathered into the dense
-    [B, max_pages*page_size, Hk, hd] view and scored by the same offset
-    flash scan as :func:`segment_attention`, so paged and dense segment
-    outputs are bitwise identical.
+    ``num_pages`` and drop.
+
+    Scoring streams the pool through the Pallas chunked paged-prefill
+    kernel (:mod:`repro.kernels.prefill_attention`) when the sliding
+    window is static and ``write_max`` bounds the valid KV length — the
+    kernel's page-table indirection reads each physical page once
+    instead of gathering the [B, max_pages*page_size, Hk, hd] dense view
+    first. Otherwise (traced window / unbounded write) it falls back to
+    the gather + offset flash scan, which is bitwise-identical to the
+    dense :func:`segment_attention` path.
     Returns (output [B, C, D], updated pool).
     """
     B, C, _ = x.shape
@@ -300,13 +306,29 @@ def segment_attention_paged(p: Params, x: jax.Array, cache: Params,
     k_pool = cache["k"].at[page, off].set(k_new, mode="drop")
     v_pool = cache["v"].at[page, off].set(v_new, mode="drop")
 
-    k_cache = k_pool[pages].reshape(B, S, Hk, hd)
-    v_cache = v_pool[pages].reshape(B, S, Hk, hd)
-
-    q = constrain(q, ("pod", "data"), None, "model", None)
-    k_att = constrain(k_cache, ("pod", "data"), None, None, None)
-    o, _ = _flash_fwd_scan(q, k_att, v_cache, window, True, 1024,
-                           q_offset=jnp.asarray(pos, jnp.int32))
+    if write_max is not None and isinstance(window, int):
+        # Pallas paged-prefill path: full-width CSR rows (n_pages ==
+        # max_pages for every row) make the kernel's valid-length mask
+        # `(n_pages-1)*page_size + lastlen - 1` come out to exactly
+        # write_max - 1; pad page ids (N, out of pool bounds) redirect
+        # to page 0 — their keys sit past every query's causal horizon,
+        # so the kernel never unmasks them.
+        from repro.kernels.prefill_attention import paged_prefill_attention
+        plen = jnp.broadcast_to(jnp.asarray(write_max, jnp.int32), (B,))
+        indptr = jnp.arange(B + 1, dtype=jnp.int32) * max_pages
+        indices = jnp.where(pages < N, pages, 0).reshape(-1)
+        lastlen = plen - (max_pages - 1) * page_size
+        pos0 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        o = paged_prefill_attention(q, k_pool, v_pool, indptr, indices,
+                                    lastlen, pos0, max_pages=max_pages,
+                                    window=window)
+    else:
+        k_cache = k_pool[pages].reshape(B, S, Hk, hd)
+        v_cache = v_pool[pages].reshape(B, S, Hk, hd)
+        q = constrain(q, ("pod", "data"), None, "model", None)
+        k_att = constrain(k_cache, ("pod", "data"), None, None, None)
+        o, _ = _flash_fwd_scan(q, k_att, v_cache, window, True, 1024,
+                               q_offset=jnp.asarray(pos, jnp.int32))
     o = o.reshape(B, C, cfg.num_heads * hd)
     return o @ p["wo"], {"k": k_pool, "v": v_pool}
 

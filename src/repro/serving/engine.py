@@ -367,6 +367,13 @@ class CollaborativeEngine:
             c["prefix_hits"] = self.kv_pool.prefix_hits
             c["cow_forks"] = self.kv_pool.cow_forks
             c["prefix_pages_retained"] = self.kv_pool.prefix_pages_retained
+        if self.host_executor is not None:
+            # the executor's pool-census channel: best-effort floors (the
+            # pure_callback lane may re-invoke), surfaced so the artifact
+            # schema carries them — see test_bench_schema.py pins
+            c["census_calls"] = self.host_executor.census_calls
+            c["census_threads"] = self.host_executor.census_threads
+            c["affinity_hits"] = self.host_executor.affinity_hits
         return EngineStats(
             per_layer_hits=tuple(int(x) for x in self._per_layer_hits),
             per_layer_accesses=tuple(int(x) for x in self._per_layer_accesses),
@@ -1107,10 +1114,15 @@ class CollaborativeEngine:
         and the (possibly updated) page-id rows ride into the jitted step;
         after the step the appends commit (the plan is idempotent, so a
         step that dies between plan and commit replans identically)."""
-        active = jnp.asarray(active, bool)
+        # derive the host-side views (page planning, stats row count) from
+        # the caller's host value BEFORE it becomes a device array — the
+        # old order np.asarray(jnp.asarray(active)) round-tripped through
+        # the device and blocked the decode loop twice per step
+        active_np = np.asarray(active, bool)
+        active = jnp.asarray(active_np)
         pages = None
         if self.ecfg.kv_paged:
-            act = np.nonzero(np.asarray(active))[0]
+            act = np.nonzero(active_np)[0]
             for t in act:
                 table = self._slot_tables[int(t)]
                 if table is None:
@@ -1129,7 +1141,7 @@ class CollaborativeEngine:
         if self.ecfg.kv_paged:
             for t in act:
                 self.kv_pool.commit_append(self._slot_tables[int(t)])
-        self._accumulate(stats, int(jax.device_get(active.sum())))
+        self._accumulate(stats, int(active_np.sum()))
         return logits, state
 
     def _accumulate(self, stats, n_active: int) -> None:

@@ -485,7 +485,10 @@ class ContinuousBatchingScheduler:
                 counts = np.array([len(r.generated) if r is not None else 0
                                    for r in self.slots], np.int32)
                 keys = fold_keys(self._bases, counts)
-            toks = np.asarray(jax.device_get(self.engine.select_tokens(
+            # the sanctioned once-per-tick token drain: selected tokens
+            # MUST reach the host to stream to callers and feed the next
+            # step's input buffer — this is the tick's single sync point
+            toks = np.asarray(jax.device_get(self.engine.select_tokens(  # reprolint: allow[RL002] once-per-tick token drain
                 logits[:, 0], params, keys))).astype(np.int32)
             for t, req in enumerate(self.slots):
                 if req is None or not active[t]:

@@ -71,6 +71,13 @@ class EngineStats:
     # CPU-miss groups the host executor's small-group fusion lane batched
     # into one stacked matmul instead of one pool task each
     fused_groups: int = 0
+    # executor pool-census channel (best-effort floors — the pure_callback
+    # lane may re-invoke): censused dispatches, their summed effective
+    # worker counts (mean workers = census_threads / census_calls), and
+    # groups that landed on their thread-affinity bucket
+    census_calls: int = 0
+    census_threads: int = 0
+    affinity_hits: int = 0
     # paged-KV channel (kv_paged engines): current page-pool occupancy
     # (gauge), admissions served from the prefix index, and partial last
     # pages duplicated by copy-on-write appends

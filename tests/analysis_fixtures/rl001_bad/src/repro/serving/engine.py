@@ -1,0 +1,23 @@
+"""RL001 bad fixture: tracer leaks inside jit-reachable code."""
+import jax
+
+
+def _helper(mask):
+    if mask.any():                      # line 6: leak via call taint
+        return 1
+    return 0
+
+
+class Engine:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_step,
+                               static_argnames=("greedy",))
+
+    def _decode_step(self, tokens, state, greedy=True):
+        if tokens.sum() > 0:            # line 17: `if` on traced value
+            state = state + 1
+        scale = float(tokens.mean())    # line 19: float() concretizes
+        while state > 0:                # line 20: `while` on traced value
+            state = state - 1
+        flag = _helper(tokens > 0)      # taints _helper's `mask`
+        return state * scale + flag

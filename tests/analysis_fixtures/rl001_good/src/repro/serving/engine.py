@@ -1,0 +1,18 @@
+"""RL001 good fixture: static-at-trace-time control flow only."""
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_step,
+                               static_argnames=("greedy",))
+
+    def _decode_step(self, tokens, state, greedy=True):
+        if greedy:                      # static_argnames param: a Python bool
+            state = state + 1
+        if tokens.shape[0] > 2:         # array metadata is trace-static
+            state = state * 2
+        if state is None:               # identity tests never concretize
+            return tokens
+        n = len(tokens)                 # len() is trace-static
+        return state + n

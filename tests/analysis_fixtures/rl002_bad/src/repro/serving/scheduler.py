@@ -1,0 +1,19 @@
+"""RL002 bad fixture: host syncs inside the hot tick loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Sched:
+    def _tick(self):
+        x = jnp.ones((4,))              # device value born in this frame
+        toks = np.asarray(x)            # line 10: implicit transfer+sync
+        y = jax.device_get(x)           # line 11: explicit sync
+        x.block_until_ready()           # line 12: explicit sync
+        n = int(x.sum())                # line 13: implicit sync via int()
+        return toks, y, n
+
+    def _drain(self, x):
+        # parameters are not device-tainted in THIS frame: the rule only
+        # flags syncs on values the same function created on-device
+        return np.asarray(x)

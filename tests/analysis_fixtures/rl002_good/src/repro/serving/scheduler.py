@@ -1,0 +1,16 @@
+"""RL002 good fixture: sanctioned drains + inline allow suppression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Sched:
+    def _tick(self):
+        x = jnp.ones((4,))
+        self._accumulate(x)             # sanctioned drain point (by name)
+        toks = np.asarray(jax.device_get(x))  # reprolint: allow[RL002] once-per-tick token drain
+        return toks
+
+    def _accumulate(self, stats):
+        # stop name: this body is outside the computed hot path
+        return int(np.asarray(stats).sum())

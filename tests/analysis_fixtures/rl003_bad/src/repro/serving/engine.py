@@ -1,0 +1,14 @@
+"""RL003 bad fixture: donated buffer read after the donating call."""
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
+
+    def _decode_step(self, tokens, state):
+        return state + 1
+
+    def step(self, tokens, state):
+        logits = self._decode(tokens, state)
+        return logits + state.mean()    # line 14: `state` was donated

@@ -1,0 +1,14 @@
+"""RL004 bad fixture: impure pure_callback target."""
+import jax
+
+TABLE = {}
+
+
+class Exec:
+    def run(self, layer, x):
+        return jax.pure_callback(self.compute, x, layer, x)
+
+    def compute(self, layer, x):
+        self.total = 1                  # line 12: non-telemetry self write
+        TABLE[layer] = x                # line 13: module-global write
+        return x

@@ -1,0 +1,14 @@
+"""RL004 good fixture: sanctioned telemetry + invocation-local buffers."""
+import jax
+import numpy as np
+
+
+class Exec:
+    def run(self, layer, x):
+        return jax.pure_callback(self.compute, x, layer, x)
+
+    def compute(self, layer, x):
+        self.calls += 1                 # sanctioned pool telemetry
+        out = np.zeros_like(x)          # local buffer: dies with the call
+        out[:] = x
+        return out

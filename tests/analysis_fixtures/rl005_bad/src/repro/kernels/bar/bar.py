@@ -1,0 +1,6 @@
+"""RL005 bad fixture: ref twin exists but no bitwise parity test."""
+from jax.experimental import pallas as pl
+
+
+def kernel(x):
+    return pl.pallas_call(lambda x_ref, o_ref: None, out_shape=None)(x)

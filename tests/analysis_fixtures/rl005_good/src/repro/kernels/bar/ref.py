@@ -1,0 +1,5 @@
+"""jnp twin for the bar kernel."""
+
+
+def kernel_ref(x):
+    return x

@@ -1,0 +1,9 @@
+import numpy as np
+
+from repro.kernels.bar import ref
+from repro.kernels.bar.bar import kernel
+
+
+def test_bar_bitwise_matches_ref_twin():
+    x = np.ones((4,))
+    assert np.array_equal(kernel(x), ref.kernel_ref(x))

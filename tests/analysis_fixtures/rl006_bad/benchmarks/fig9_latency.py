@@ -1,0 +1,9 @@
+"""RL006 bad fixture: emits a benchmark record with no schema-test coverage."""
+
+
+def record_run(name, payload):
+    return name, payload
+
+
+def main():
+    record_run("fig9.latency", {"wall_s": 1.0})

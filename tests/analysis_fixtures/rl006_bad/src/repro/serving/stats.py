@@ -1,0 +1,13 @@
+"""RL006 bad fixture: EngineStats field not pinned; test pins a stale key."""
+from dataclasses import dataclass
+
+
+@dataclass
+class EngineStats:
+    decode_steps: int = 0
+    new_counter: int = 0  # not pinned in test_bench_schema.py -> finding
+
+
+@dataclass
+class RunStats:
+    wall_s: float = 0.0

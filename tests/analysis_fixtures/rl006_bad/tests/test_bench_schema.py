@@ -1,0 +1,6 @@
+ENGINE_KEYS = {
+    "decode_steps",
+    "ghost_key",  # not an EngineStats field -> stale-pin finding
+}
+
+RUN_KEYS = {"wall_s"}

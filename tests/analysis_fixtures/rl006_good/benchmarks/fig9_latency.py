@@ -1,0 +1,9 @@
+"""RL006 good fixture: benchmark whose stem appears in the schema test."""
+
+
+def record_run(name, payload):
+    return name, payload
+
+
+def main():
+    record_run("fig9.latency", {"wall_s": 1.0})

@@ -1,0 +1,12 @@
+"""RL006 good fixture: stats fields and schema pins match exactly."""
+from dataclasses import dataclass
+
+
+@dataclass
+class EngineStats:
+    decode_steps: int = 0
+
+
+@dataclass
+class RunStats:
+    wall_s: float = 0.0

@@ -1,0 +1,4 @@
+# Covers benchmarks/fig9_latency.py artifacts.
+ENGINE_KEYS = {"decode_steps"}
+
+RUN_KEYS = {"wall_s"}

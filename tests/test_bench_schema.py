@@ -30,7 +30,8 @@ SAMPLE = EngineStats(hits=7, accesses=12, host_assignments=5,
                      prefill_tokens=10, prefill_chunks=2, first_tokens=2,
                      prefill_segments=3, prefix_tokens_skipped=4,
                      cpu_expert_calls=2, cpu_tokens=3, miss_expert_groups=3,
-                     fused_groups=2, kv_pages_in_use=5, prefix_hits=1,
+                     fused_groups=2, census_calls=2, census_threads=7,
+                     affinity_hits=1, kv_pages_in_use=5, prefix_hits=1,
                      cow_forks=1, prefix_pages_retained=2,
                      per_layer_hits=(3, 4), per_layer_accesses=(6, 6))
 
@@ -41,7 +42,8 @@ ENGINE_KEYS = {
     "prefill_fetched", "prefill_tokens", "prefill_chunks", "first_tokens",
     "prefill_segments", "prefix_tokens_skipped", "generated_tokens",
     "cpu_expert_calls", "cpu_tokens", "miss_expert_groups",
-    "fused_groups", "kv_pages_in_use", "prefix_hits", "cow_forks",
+    "fused_groups", "census_calls", "census_threads", "affinity_hits",
+    "kv_pages_in_use", "prefix_hits", "cow_forks",
     "prefix_pages_retained",
     "hit_rate", "prefetch_hit_rate", "prefetch_waste_rate",
     "prediction_accuracy", "prefill_hit_rate", "cpu_offload_rate",
@@ -137,6 +139,30 @@ def test_dump_json_schema(tmp_path, monkeypatch):
     common.dump_json(str(path))
     doc = json.loads(path.read_text())
     assert set(doc["runs"][1]["stats"]) == ENGINE_KEYS
+
+
+def test_live_fleet_artifact_shapes(tmp_path, monkeypatch):
+    """BENCH_fig5_throughput.json / BENCH_fig6_hitrate.json: the live-mode
+    sweeps (fig5_throughput's concurrency scaling, fig6_hitrate's policy/
+    prefetch matrix) record RunStats payloads that validate against the
+    pinned schema like every other benchmark artifact."""
+    importlib.import_module("benchmarks.fig5_throughput")
+    importlib.import_module("benchmarks.fig6_hitrate")
+    monkeypatch.setattr(common, "_RESULTS", [])
+    monkeypatch.setattr(common, "_RUNS", [])
+    names = ["fig5.live.slots1", "fig5.live.slots4",
+             "fig6.live.lru.pf", "fig6.live.lfu"]
+    for name in names:
+        common.record_run(name, RunStats(engine=SAMPLE,
+                                         requests_submitted=4,
+                                         requests_finished=4))
+    path = tmp_path / "BENCH_fig5_throughput.json"
+    common.dump_json(str(path))
+    doc = json.loads(path.read_text())
+    assert [r["name"] for r in doc["runs"]] == names
+    for run in doc["runs"]:
+        assert set(run["stats"]) == RUN_KEYS
+        assert set(run["stats"]["engine"]) == ENGINE_KEYS
 
 
 def test_admission_overlap_artifact_shape(tmp_path, monkeypatch):

@@ -51,6 +51,28 @@ def test_moe_ffn_matches_ref(shape, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+def test_gmm_bitwise_matches_ref_twin():
+    """Kernel/ref-twin landing convention (reprolint RL005): in the
+    single-K-block regime the kernel's fp32 accumulator performs the
+    exact contraction the einsum oracle does, so interpret mode and the
+    jnp twin must agree BITWISE — both for the plain grouped matmul and
+    the fused SwiGLU gate."""
+    E, C, D, F = 2, 8, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = jax.random.normal(ks[0], (E, C, D), jnp.float32)
+    w = jax.random.normal(ks[1], (E, D, F), jnp.float32)
+    got = gmm(x, w, interpret=True)
+    want = ref.gmm_ref(x, w)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), \
+        "gmm kernel drifted from its ref.py twin (bitwise)"
+    w1 = jax.random.normal(ks[2], (E, D, F), jnp.float32)
+    w3 = jax.random.normal(ks[3], (E, D, F), jnp.float32)
+    fused = swiglu_gmm(x, w1, w3, interpret=True)
+    want2 = ref.swiglu_gmm_ref(x, w1, w3)
+    assert np.array_equal(np.asarray(fused), np.asarray(want2)), \
+        "swiglu_gmm kernel drifted from its ref.py twin (bitwise)"
+
+
 def test_tiled_equals_untiled():
     """Block-shape independence: different tilings, same numbers."""
     E, C, D, F = 2, 256, 256, 256

@@ -42,6 +42,28 @@ def test_ssd_scan_matches_ref(case, dtype):
                                    rtol=2e-2, atol=2e-2)
 
 
+def test_ssd_scan_bitwise_matches_ref_twin():
+    """Kernel/ref-twin landing convention (reprolint RL005): with one
+    chunk per sequence the kernel body performs exactly the oracle's op
+    sequence, so interpret mode and the jnp twin agree BITWISE on both
+    the output and the carried state."""
+    G, S, hp, ds = 2, 16, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    a = -jnp.abs(jax.random.normal(ks[0], (G, S))) * 0.1
+    x = jax.random.normal(ks[1], (G, S, hp), jnp.float32)
+    B = jax.random.normal(ks[2], (G, S, ds), jnp.float32)
+    C = jax.random.normal(ks[3], (G, S, ds), jnp.float32)
+    y, h = ssd_scan(a, x, B, C, interpret=True)
+    for g in range(G):
+        y_ref, h_ref = ref.ssd_multi_chunk_ref(
+            a[g][None], x[g][None], B[g][None], C[g][None],
+            jnp.zeros((ds, hp), jnp.float32))
+        assert np.array_equal(np.asarray(y[g]), np.asarray(y_ref[0])), \
+            "ssd_scan kernel drifted from its ref.py twin (bitwise)"
+        assert np.array_equal(np.asarray(h[g]), np.asarray(h_ref)), \
+            "ssd_scan carried state drifted from its ref.py twin (bitwise)"
+
+
 def test_kernel_matches_model_ssd_chunked():
     """The Pallas kernel and the XLA model path agree end-to-end."""
     Bb, S, nh, hp, ds = 2, 256, 4, 64, 128
