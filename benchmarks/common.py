@@ -20,13 +20,14 @@ def run_live_scheduler(policy: str = "lru", slots: int = 4,
                        prefetch: bool = False, prefetch_min_prob: float = 0.0,
                        prefill_chunk: int = 8, host_compute: bool = False,
                        host_threads: int = 8, host_backend: str = "jax",
-                       **serving_overrides):
+                       recorder=None, **serving_overrides):
     """Serve `requests` random prompts through the continuous-batching
     scheduler on a reduced live model (one shared expert cache, grouped
     gmm execution, per-slot KV positions, cache-warming chunked prefill,
     optional cross-layer speculative prefetch). Extra keyword arguments
     pass straight into ``EngineConfig`` (e.g. ``kv_paged=True``,
-    ``prefetch_rank_votes=False``). Returns
+    ``prefetch_rank_votes=False``); ``recorder`` wires a
+    ``repro.obs.TraceRecorder`` through the stack (None = no-op). Returns
     (outputs, RunStats, wall_seconds)."""
     import numpy as np
     from repro.config import get_config, reduced
@@ -42,14 +43,16 @@ def run_live_scheduler(policy: str = "lru", slots: int = 4,
                                   host_threads=host_threads,
                                   host_backend=host_backend,
                                   **serving_overrides),
-                     seed=seed)
+                     seed=seed, recorder=recorder)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         sched.submit(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 9))),
                      max_new_tokens=new_tokens)
-    t0 = time.time()
+    # perf_counter throughout (time.time() is wall-clock and can step;
+    # every other timing in benchmarks/ already uses the monotonic clock)
+    t0 = time.perf_counter()
     outs = sched.run()
-    return outs, sched.stats, time.time() - t0
+    return outs, sched.stats, time.perf_counter() - t0
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

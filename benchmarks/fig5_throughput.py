@@ -31,6 +31,14 @@ def live_scaling() -> None:
         emit(f"live.mixtral_reduced.slots{slots}.tok_s", total / dt * 1e6,
              f"steps={stats.steps} hit_rate={stats.hit_rate:.3f} "
              f"(wall clock on this container, not the paper metric)")
+        # latency percentiles from the scheduler's streaming log-bucket
+        # histograms (RunStats carries them; no ad-hoc percentile math)
+        emit(f"live.mixtral_reduced.slots{slots}.ttft_p50_us",
+             stats.ttft_ms_p50 * 1e3,
+             f"p99={stats.ttft_ms_p99 * 1e3:.0f}us (streaming histogram)")
+        emit(f"live.mixtral_reduced.slots{slots}.tpot_p50_us",
+             stats.tpot_ms_p50 * 1e3,
+             f"p99={stats.tpot_ms_p99 * 1e3:.0f}us (streaming histogram)")
 
 THREADS = (1, 2, 4, 8, 16, 24)
 # Phi-3.5's published hit rates (Fig. 6b: LRU >> random) imply stickier

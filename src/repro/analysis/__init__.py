@@ -1,6 +1,6 @@
 """reprolint — repo-specific JAX-hygiene static analysis.
 
-Six rules over the serving stack's hard-won invariants:
+Seven rules over the serving stack's hard-won invariants:
 
 =====  ==============================================================
 RL001  tracer leak: Python control flow / ``bool()`` / ``float()`` /
@@ -14,13 +14,16 @@ RL005  Pallas kernel package without a ``ref.py`` twin + bitwise parity
        test
 RL006  ``EngineStats``/``RunStats``/bench ``record_run`` schema drift
        against the ``tests/test_bench_schema.py`` pins
+RL007  ``repro.obs`` trace emission reachable from the jitted call
+       graph or the host hot path outside an ``_obs_*`` drain helper
 =====  ==============================================================
 
 Run ``python -m repro.analysis`` (see ``--help``); the dynamic complement
 is ``tools/compile_gate.py``.
 """
 from .core import Finding, Project, Rule, RULES, load_project  # noqa: F401
-from . import rules_conventions, rules_jax, rules_purity       # noqa: F401
+from . import rules_conventions, rules_jax, rules_obs, \
+    rules_purity                                               # noqa: F401
 from .baseline import BASELINE_NAME, load_baseline, save_baseline, \
     split_findings                                             # noqa: F401
 from .cli import main, run_rules                               # noqa: F401

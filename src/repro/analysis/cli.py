@@ -10,7 +10,8 @@ import sys
 from pathlib import Path
 from typing import List, Optional
 
-from . import rules_conventions, rules_jax, rules_purity  # noqa: F401
+from . import rules_conventions, rules_jax, rules_obs, \
+    rules_purity                                          # noqa: F401
 from .baseline import BASELINE_NAME, load_baseline, save_baseline, \
     split_findings
 from .core import Finding, RULES, load_project
@@ -40,7 +41,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="reprolint: repo-specific JAX-hygiene static analysis "
-                    "(RL001-RL006)")
+                    "(RL001-RL007)")
     ap.add_argument("--root", type=Path, default=None,
                     help="repo root (default: auto-detected from cwd)")
     ap.add_argument("--baseline", type=Path, default=None,

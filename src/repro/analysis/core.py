@@ -33,7 +33,7 @@ class Finding:
     """One violation. ``render()`` is the CI-facing line; ``key()`` is the
     baseline identity — deliberately line-number-free so unrelated edits
     above a grandfathered finding don't churn the baseline file."""
-    rule: str           # "RL001".."RL006"
+    rule: str           # "RL001".."RL007"
     file: str           # repo-relative posix path
     line: int           # 1-based
     message: str

@@ -1,0 +1,120 @@
+"""Observability-hygiene rule: trace emission only at drain points.
+
+The ``repro.obs`` recorder is cheap, but it is still host work — an
+emission call appends an event, formats args, and (in the jitted graph)
+would force a trace-time side effect. The serving stack's contract is
+therefore *event-sourced at the edges*: hot-path code reads the
+monotonic clock (``now_ns()`` is just ``time.perf_counter_ns``) and
+carries plain integers; the events themselves are emitted only by the
+``_obs_*`` drain helpers that run once per tick / decode step / prefill
+advance, next to the sanctioned RL002 stats drains. RL007 makes that
+contract static.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set, Tuple
+
+from .core import Finding, Project, call_name, register
+from .callgraph import FunctionInfo
+from .rules_jax import HOT_ENTRIES, HOT_SANCTIONED, HOT_STOP, _graph
+
+# the TraceRecorder emission surface (NoopRecorder mirrors it); reading
+# the clock (now_ns) and feeding histograms (LogHistogram.observe) are
+# NOT emission — both are branch-free host arithmetic the hot path may do
+EMISSION_CALLS = ("complete", "instant", "counter", "span")
+
+
+@register("RL007", "repro.obs emission call reachable from the jitted "
+                   "call graph or the host hot path outside an _obs_* "
+                   "drain helper")
+def rl007_emission_outside_drain(project: Project) -> List[Finding]:
+    """RL007: a ``repro.obs`` emission call (``.complete()`` /
+    ``.instant()`` / ``.counter()`` / ``.span()``) may only run at a
+    sanctioned drain point. Two call graphs are checked, in every
+    analyzed file that imports ``repro.obs`` (the ``src/repro/obs``
+    package itself — the recorder's own implementation — is exempt):
+
+    * the **traced graph**: functions reachable from a jit boundary
+      (decorated defs, ``jax.jit(...)`` wrapper targets) followed
+      *through* the trace boundary, plus ``pure_callback`` host-lane
+      targets. Emission here is flagged unconditionally — even inside a
+      function named ``_obs_*`` — because an emission under tracing
+      fires at trace time, not at step time, and a ``pure_callback``
+      body may be re-invoked or elided by XLA;
+    * the **host hot path**: RL002's computed reachability from
+      ``_tick`` / ``decode_batch`` / ``advance_prefill_state``, with the
+      ``_obs_*`` drain helpers added to the stop set. Emission inside
+      that graph is flagged unless the enclosing function itself is an
+      ``_obs_*`` helper — timing is collected inline as plain
+      ``now_ns()`` integers and emitted retroactively at the drain.
+
+    Reading the clock is not emission: ``now_ns()`` calls and
+    ``LogHistogram.observe()`` are allowed anywhere. An inline exemption
+    (``# reprolint: allow[RL007] <reason>``) works like every other
+    rule's."""
+    cg = _graph(project)
+    findings: List[Finding] = []
+    reported: Set[Tuple[str, int]] = set()
+
+    def in_scope(rel: str) -> bool:
+        if rel.startswith("src/repro/obs/"):
+            return False
+        src = project.get(rel)
+        return src is not None and "repro.obs" in src.text
+
+    # --- traced graph: through the jit boundary + pure_callback lanes --
+    jit_entries = {fi.name for fi in cg.jit_targets()}
+    cb_targets: Set[str] = set()
+    for src in project.under("src/repro"):
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) \
+                    and call_name(node) == "pure_callback" and node.args:
+                arg0 = node.args[0]
+                name = None
+                if isinstance(arg0, ast.Name):
+                    name = arg0.id
+                elif isinstance(arg0, ast.Attribute):
+                    name = arg0.attr
+                if name:
+                    cb_targets.add(name)
+    traced = cg.reachable(sorted(jit_entries | cb_targets),
+                          through_jit=True)
+
+    # --- host hot path: RL002's graph, with drain helpers stopped -----
+    obs_helpers = {fi.name for fi in cg.functions.values()
+                   if fi.name.startswith("_obs_")}
+    hot = cg.reachable(
+        HOT_ENTRIES,
+        stop=set(HOT_STOP) | set(HOT_SANCTIONED) | obs_helpers)
+
+    def scan(fi: FunctionInfo, where: str, allow_obs_helper: bool) -> None:
+        if not in_scope(fi.file):
+            return
+        if allow_obs_helper and fi.name.startswith("_obs_"):
+            return
+        # whole-body walk (nested defs included — they execute in this
+        # frame's dynamic extent); (file, line) dedup keeps one finding
+        # per site when a nested def is also a reachable FunctionInfo
+        for sub in ast.walk(fi.node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = call_name(sub)
+            if name not in EMISSION_CALLS:
+                continue
+            key = (fi.file, sub.lineno)
+            if key in reported:
+                continue
+            reported.add(key)
+            findings.append(Finding(
+                "RL007", fi.file, sub.lineno,
+                f"`.{name}()` trace emission in {where} "
+                f"`{fi.qualname}` — emit only from an `_obs_*` drain "
+                f"helper (carry now_ns() integers to the drain)",
+                symbol=fi.qualname))
+
+    for fi in traced:
+        scan(fi, "jit-reachable", allow_obs_helper=False)
+    for fi in hot:
+        scan(fi, "hot-path", allow_obs_helper=True)
+    return findings

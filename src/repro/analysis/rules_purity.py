@@ -21,7 +21,8 @@ from .core import Finding, Project, Source, call_name, dotted, register
 # EngineStats channel). Writes to anything else inside a callback target
 # are a correctness bug, not telemetry.
 SANCTIONED_TELEMETRY = {"calls", "groups", "fused", "census_calls",
-                        "census_threads", "affinity_hits", "_affinity"}
+                        "census_threads", "affinity_hits", "_affinity",
+                        "busy_ns", "queue_peak"}
 
 HOSTEXEC_PREFIX = "src/repro/hostexec/"
 

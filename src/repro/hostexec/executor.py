@@ -22,6 +22,7 @@ bit-exactness use the in-graph fallback (``host_backend="jax"``).
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
@@ -88,6 +89,12 @@ class HostExpertExecutor:
         self.census_calls = 0
         self.census_threads = 0
         self.affinity_hits = 0
+        # pool-utilization telemetry (same floor caveat, and busy_ns is a
+        # racy += across workers — a floor by construction): summed
+        # per-worker nanoseconds spent inside expert FFN compute, and the
+        # high-water mark of bucket tasks one dispatch submitted
+        self.busy_ns = 0
+        self.queue_peak = 0
 
     def _effective_threads(self, census: int) -> int:
         """Workers for this step's miss-group census: linear to 8, then
@@ -122,6 +129,7 @@ class HostExpertExecutor:
                 small = np.zeros((0,), np.int64)
                 big = todo
             if small.size:
+                t0 = time.perf_counter_ns()
                 es = rep_e[small].astype(np.int64)
                 xs = x32[small]                              # [Gs, A, D]
                 h1 = np.matmul(xs, self.w1[layer, es])       # [Gs, A, F]
@@ -129,6 +137,7 @@ class HostExpertExecutor:
                     xs, self.w3[layer, es])
                 out[small] = np.matmul(h, self.w2[layer, es])
                 self.fused += int(small.size)
+                self.busy_ns += time.perf_counter_ns() - t0
 
             def one(g: int) -> None:
                 e = int(rep_e[g])
@@ -154,17 +163,23 @@ class HostExpertExecutor:
                     buckets[b].append(int(g))
 
                 def run_bucket(groups) -> None:
+                    t0 = time.perf_counter_ns()
                     for g in groups:
                         one(g)
+                    self.busy_ns += time.perf_counter_ns() - t0
 
                 if eff > 1:
-                    list(self._pool.map(
-                        run_bucket, [bk for bk in buckets if bk]))
+                    live = [bk for bk in buckets if bk]
+                    if len(live) > self.queue_peak:
+                        self.queue_peak = len(live)
+                    list(self._pool.map(run_bucket, live))
                 else:
                     run_bucket(buckets[0])
             else:
+                t0 = time.perf_counter_ns()
                 for g in big:
                     one(g)
+                self.busy_ns += time.perf_counter_ns() - t0
         self.calls += 1
         self.groups += int(todo.size)
         return out.astype(xbuf.dtype)

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.config import get_config, reduced
 from repro.models import decode_step, init_params, prefill
+from repro.obs import TraceRecorder, write_chrome_trace
 from repro.serving import SamplingParams, build
 
 
@@ -97,6 +98,15 @@ def main() -> None:
                     help="page pool size (default: dense-equivalent "
                          "slots*capacity/page_size)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(request lifecycles, step phases, lane "
+                         "counters; open in ui.perfetto.dev or "
+                         "chrome://tracing; collaborative path only)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="print a periodic latency summary every N "
+                         "scheduler ticks (p50/p99 TTFT/TPOT/stall from "
+                         "the streaming histograms; 0 = off)")
     args = ap.parse_args()
     if not 0.0 < args.top_p <= 1.0:
         ap.error(f"--top-p must be in (0, 1], got {args.top_p}")
@@ -141,6 +151,7 @@ def main() -> None:
                  f"{args.host_threads}t)" if args.host_compute else "")
               + (f" kv_paged(page_size={args.page_size})"
                  if args.kv_paged else ""))
+        recorder = TraceRecorder() if args.trace_out else None
         _, sched = build(
             cfg,
             cache=dict(num_indexes=n, num_ways=args.ways,
@@ -159,7 +170,8 @@ def main() -> None:
                          page_size=args.page_size,
                          kv_pages=args.kv_pages,
                          prefix_keep_pages=args.prefix_keep_pages),
-            seed=args.seed, params=params, max_queue=args.max_queue)
+            seed=args.seed, params=params, max_queue=args.max_queue,
+            recorder=recorder)
         rng = np.random.default_rng(args.seed)
         for r in range(R):
             plen = int(rng.integers(max(args.prompt // 2, 1),
@@ -171,7 +183,28 @@ def main() -> None:
             sched.submit(rng.integers(0, cfg.vocab_size, plen),
                          max_new_tokens=args.tokens, sampling=sp)
         t0 = time.time()
-        outs = sched.run()
+        if args.metrics_every > 0:
+            # step-driven drain so the periodic summary can fire between
+            # ticks; sched.run() is the one-shot equivalent
+            done, tick = 0, 0
+            while done < R:
+                done += len(sched.step())
+                tick += 1
+                if tick % args.metrics_every == 0:
+                    s = sched.stats
+                    print(f"  [metrics] tick={tick} "
+                          f"finished={s.requests_finished} "
+                          f"active={s.requests_active} "
+                          f"queued={s.requests_queued} | "
+                          f"ttft_ms {s.ttft_ms_p50:.1f}/"
+                          f"{s.ttft_ms_p99:.1f} "
+                          f"tpot_ms {s.tpot_ms_p50:.2f}/"
+                          f"{s.tpot_ms_p99:.2f} "
+                          f"stall_ms {s.stall_ms_p50:.2f}/"
+                          f"{s.stall_ms_p99:.2f} (p50/p99)")
+            outs = {req.rid: req.output for req in sched.finished}
+        else:
+            outs = sched.run()
         dt = time.time() - t0
         stats = sched.stats
         total = sum(len(o) for o in outs.values())
@@ -209,6 +242,16 @@ def main() -> None:
                   f"prefix_hits={stats.prefix_hits} "
                   f"cow_forks={stats.cow_forks} "
                   f"prefix_pages_retained={stats.prefix_pages_retained}")
+        print(f"  latency: ttft_ms p50={stats.ttft_ms_p50:.1f} "
+              f"p99={stats.ttft_ms_p99:.1f}, "
+              f"tpot_ms p50={stats.tpot_ms_p50:.2f} "
+              f"p99={stats.tpot_ms_p99:.2f}, "
+              f"stall_ms p50={stats.stall_ms_p50:.2f} "
+              f"p99={stats.stall_ms_p99:.2f}")
+        if args.trace_out:
+            write_chrome_trace(recorder, args.trace_out)
+            print(f"  trace: {len(recorder)} events "
+                  f"({recorder.dropped} dropped) -> {args.trace_out}")
     else:
         print(f"[serve] generic path: {cfg.name}")
         batch = {"tokens": jnp.asarray(prompt)}

@@ -29,7 +29,8 @@ def build(arch: Union[str, ModelConfig], *,
           seed: int = 0,
           params=None,
           reduce: bool = True,
-          max_queue: Optional[int] = None
+          max_queue: Optional[int] = None,
+          recorder=None
           ) -> Tuple[CollaborativeEngine, ContinuousBatchingScheduler]:
     """Build the collaborative engine + continuous-batching scheduler.
 
@@ -52,6 +53,9 @@ def build(arch: Union[str, ModelConfig], *,
     max_queue — bound the scheduler's waiting line (None = unbounded);
               a full queue makes ``submit(..., block=False)`` raise
               :class:`~repro.serving.scheduler.QueueFull`.
+    recorder — a :class:`repro.obs.TraceRecorder` to wire through the
+              engine AND scheduler (request-lifecycle + step-phase
+              tracing); None serves untraced with the no-op recorder.
 
     Returns ``(engine, scheduler)``.
     """
@@ -83,7 +87,9 @@ def build(arch: Union[str, ModelConfig], *,
     key = jax.random.PRNGKey(seed)
     if params is None:
         params = init_params(cfg, key)
-    engine = CollaborativeEngine(cfg, params, ecfg, key=key)
+    engine = CollaborativeEngine(cfg, params, ecfg, key=key,
+                                 recorder=recorder)
     scheduler = ContinuousBatchingScheduler(
-        engine, key=jax.random.fold_in(key, 1), max_queue=max_queue)
+        engine, key=jax.random.fold_in(key, 1), max_queue=max_queue,
+        recorder=recorder)
     return engine, scheduler

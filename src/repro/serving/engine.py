@@ -81,6 +81,7 @@ import numpy as np
 
 from repro.config import CacheConfig, ModelConfig
 from repro.core import collaborative as collab
+from repro.obs.trace import NULL_RECORDER, now_ns
 from repro.models import transformer
 from repro.models import attention as attn
 from repro.models.layers import rmsnorm
@@ -275,12 +276,20 @@ class CollaborativeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, ecfg: EngineConfig,
-                 key=None):
+                 key=None, recorder=None):
         assert cfg.moe is not None and cfg.moe_every == 1 and not cfg.is_encdec
         slots, G, R = transformer.build_slots(cfg)
         assert len(slots) == 1 and R == 0, "engine expects homogeneous stacks"
         self.cfg, self.ecfg = cfg, ecfg
         self.params = params
+        # trace recorder (repro.obs): the no-op twin when tracing is off,
+        # so the instrumented path is identical either way. All emission
+        # happens in the _obs_* drain helpers — never inside jitted code
+        # or between a dispatch and its drain (reprolint RL007).
+        self.obs = recorder if recorder is not None else NULL_RECORDER
+        # last-seen cumulative pool/executor counters, so the drain
+        # helpers can emit per-step deltas as instants
+        self._obs_prev: Dict[str, int] = {}
         key = key if key is not None else jax.random.PRNGKey(0)
 
         # Split expert weights out of the param tree into the two tiers.
@@ -374,6 +383,8 @@ class CollaborativeEngine:
             c["census_calls"] = self.host_executor.census_calls
             c["census_threads"] = self.host_executor.census_threads
             c["affinity_hits"] = self.host_executor.affinity_hits
+            c["host_busy_us"] = self.host_executor.busy_ns // 1000
+            c["host_queue_peak"] = self.host_executor.queue_peak
         return EngineStats(
             per_layer_hits=tuple(int(x) for x in self._per_layer_hits),
             per_layer_accesses=tuple(int(x) for x in self._per_layer_accesses),
@@ -971,6 +982,7 @@ class CollaborativeEngine:
         comes back rebuilt (other modes return it untouched). Returns
         (batch_state, done)."""
         chunk, P = ticket.chunk, ticket.prompt_len
+        t0 = now_ns()
         if ticket.seg > 0:
             n = 0
             plen = jnp.asarray(P, jnp.int32)
@@ -1005,6 +1017,7 @@ class CollaborativeEngine:
                 ticket.cursor += 1
                 n += 1
             self._counters["prefill_segments"] += n
+            self._obs_prefill(t0, n, ticket)
             return batch_state, ticket.done
         advanced = []
         while ticket.cursor < ticket.n_chunks and len(advanced) < max_chunks:
@@ -1021,6 +1034,7 @@ class CollaborativeEngine:
         for wstats, n_tok in advanced:
             self._accumulate_prefill(wstats, n_tok)
         self._counters["prefill_chunks"] += len(advanced)
+        self._obs_prefill(t0, len(advanced), ticket)
         return batch_state, ticket.done
 
     def prefill_chunked(self, prompt: np.ndarray,
@@ -1118,6 +1132,7 @@ class CollaborativeEngine:
         # the caller's host value BEFORE it becomes a device array — the
         # old order np.asarray(jnp.asarray(active)) round-tripped through
         # the device and blocked the decode loop twice per step
+        t0 = now_ns()
         active_np = np.asarray(active, bool)
         active = jnp.asarray(active_np)
         pages = None
@@ -1136,12 +1151,23 @@ class CollaborativeEngine:
                                       jnp.asarray(plan.page, jnp.int32))
                 self._slot_pages[int(t), len(table.pages) - 1] = plan.page
             pages = jnp.asarray(self._slot_pages)
+        t_plan = now_ns()
         logits, state, self.fast, stats = self._decode(
             jnp.asarray(tokens, jnp.int32), state, self.fast, active, pages)
+        t_disp = now_ns()                 # async dispatch returned
         if self.ecfg.kv_paged:
             for t in act:
                 self.kv_pool.commit_append(self._slot_tables[int(t)])
-        self._accumulate(stats, int(active_np.sum()))
+        t_commit = now_ns()
+        c = self._counters
+        snap = (c["hits"], c["fetched_experts"], c["cpu_expert_calls"],
+                c["prefetch_issued"], c["prefetch_hits"])
+        busy0 = (self.host_executor.busy_ns
+                 if self.host_executor is not None else 0)
+        n_active = int(active_np.sum())
+        self._accumulate(stats, n_active)
+        self._obs_decode(t0, t_plan, t_disp, t_commit, snap, busy0,
+                         n_active)
         return logits, state
 
     def _accumulate(self, stats, n_active: int) -> None:
@@ -1169,6 +1195,77 @@ class CollaborativeEngine:
         c["prefill_fetched"] += int(
             np.asarray(stats["fetched_experts"]).sum())
         c["prefill_tokens"] += n_tokens
+
+    # -- trace drain helpers (the ONLY emission sites; see RL007) ----------
+    def _obs_decode(self, t0: int, t_plan: int, t_disp: int, t_commit: int,
+                    snap, busy0: int, n_active: int) -> None:
+        """Sanctioned drain point: emit the decode step's phase spans and
+        lane attribution AFTER ``_accumulate`` drained the step's stats.
+        Device work is timed by bracketing the jitted call at the drain
+        (dispatch returns asynchronously; the drain's device_get blocks
+        until the step completes), never by syncing inside it."""
+        t1 = now_ns()
+        obs = self.obs
+        c = self._counters
+        hit = c["hits"] - snap[0]
+        fetch = c["fetched_experts"] - snap[1]
+        cpu = c["cpu_expert_calls"] - snap[2]
+        obs.complete("engine", "decode_step", t0, t1,
+                     {"tokens": n_active, "hit_experts": hit,
+                      "fetched_experts": fetch, "cpu_expert_calls": cpu})
+        if self.ecfg.kv_paged:
+            obs.complete("engine", "plan", t0, t_plan)
+        obs.complete("engine", "dispatch", t_plan, t_disp)
+        if self.ecfg.kv_paged:
+            obs.complete("engine", "commit", t_disp, t_commit)
+        obs.complete("engine", "execute+drain", t_commit, t1)
+        # per-step lane attribution from the probe/census counters: the
+        # gpu-hit vs fetch vs cpu-miss split of this step's assignments
+        obs.counter("lane:gpu", "hit_experts", hit, ts_ns=t1)
+        obs.counter("lane:fetch", "fetched_experts", fetch, ts_ns=t1)
+        obs.counter("lane:cpu", "cpu_expert_calls", cpu, ts_ns=t1)
+        if c["prefetch_issued"] - snap[3]:
+            obs.instant("lane:fetch", "prefetch_reserve",
+                        {"issued": c["prefetch_issued"] - snap[3]},
+                        ts_ns=t1)
+        if c["prefetch_hits"] - snap[4]:
+            obs.instant("lane:gpu", "prefetch_land",
+                        {"hits": c["prefetch_hits"] - snap[4]}, ts_ns=t1)
+        if self.host_executor is not None:
+            dbusy = self.host_executor.busy_ns - busy0
+            if dbusy > 0:
+                # the host pool's aggregate busy time this step, placed to
+                # end at the drain (per-worker placement is unknowable
+                # without timing inside the callback)
+                obs.complete("lane:cpu", "host_execute", t1 - dbusy, t1,
+                             {"queue_peak": self.host_executor.queue_peak})
+        if self.kv_pool is not None:
+            pool = self.kv_pool
+            obs.counter("engine", "kv_pages_in_use", pool.pages_in_use,
+                        ts_ns=t1)
+            for name, cur in (("prefix_hits", pool.prefix_hits),
+                              ("cow_forks", pool.cow_forks),
+                              ("retention_evictions",
+                               pool.retention_evictions)):
+                prev = self._obs_prev.get(name, 0)
+                if cur > prev:
+                    obs.instant("engine", name, {"count": cur - prev},
+                                ts_ns=t1)
+                    self._obs_prev[name] = cur
+
+    def _obs_prefill(self, t0: int, n_units: int,
+                     ticket: "PrefillTicket") -> None:
+        """Sanctioned drain point: one span per advance_prefill_state
+        call (its per-unit ``_accumulate_prefill`` drains already
+        synchronized), covering the segments/chunks it advanced."""
+        if n_units == 0:
+            return
+        self.obs.complete(
+            "engine",
+            "segment_stream" if ticket.seg > 0 else "warm_replay",
+            t0, now_ns(),
+            {"units": n_units, "cursor": ticket.cursor,
+             "of": ticket.n_chunks})
 
     # -- static-batch convenience path ------------------------------------
     def generate(self, prompt: np.ndarray, steps: int,

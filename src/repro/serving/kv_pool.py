@@ -115,6 +115,9 @@ class KVPagePool:
         self.prefix_tokens_shared = 0
         self.cow_forks = 0
         self.peak_pages_in_use = 0
+        # cumulative retained-page reclaims (LRU evictions): the ledger
+        # the trace's eviction instants are derived from at drain points
+        self.retention_evictions = 0
 
     # -- geometry ----------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -142,6 +145,7 @@ class KVPagePool:
         p = next(iter(self._retained))
         del self._retained[p]
         self._epoch[p] += 1
+        self.retention_evictions += 1
         return p
 
     def _take(self) -> int:

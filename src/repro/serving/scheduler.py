@@ -64,6 +64,9 @@ from typing import Callable, Deque, Dict, Iterator, List, Optional, \
 import jax
 import numpy as np
 
+from repro.obs.metrics import LogHistogram
+from repro.obs.trace import NULL_RECORDER, now_ns
+
 from .engine import CollaborativeEngine, PrefillTicket, _one_prompt
 from .sampling import GREEDY, SamplingParams, fold_keys, request_key
 from .stats import RunStats
@@ -98,6 +101,16 @@ class Request:
     on_token: Optional[Callable[[int, bool], None]] = None
     generated: List[int] = field(default_factory=list)
     cancelled: bool = False
+    # lifecycle stamps (perf_counter_ns; 0 = phase not reached) written as
+    # the request moves submit → admit → first token → done. Plain clock
+    # reads — the spans they become are emitted retroactively at the
+    # scheduler's _obs_retire drain point, never on the hot path.
+    t_submit: int = 0
+    t_admit: int = 0
+    t_first: int = 0
+    t_last: int = 0
+    t_done: int = 0
+    slot: int = -1
 
     @property
     def done(self) -> bool:
@@ -133,10 +146,22 @@ class ContinuousBatchingScheduler:
     unbounded); see :meth:`submit` for the blocking/raising behaviour."""
 
     def __init__(self, engine: CollaborativeEngine, key=None,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None, recorder=None):
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.engine = engine
+        # trace recorder (repro.obs.TraceRecorder, or the no-op twin when
+        # tracing is off); a recorder passed here also becomes the
+        # engine's, so one flag wires the whole stack. Emission happens
+        # only in the _obs_* drain helpers (reprolint RL007).
+        self.obs = recorder if recorder is not None else engine.obs
+        if recorder is not None:
+            engine.obs = recorder
+        # streaming latency histograms: always on (cheap host float math
+        # feeding the RunStats percentiles, tracing or not)
+        self._h_ttft = LogHistogram()
+        self._h_tpot = LogHistogram()
+        self._h_stall = LogHistogram()
         self.num_slots = engine.ecfg.max_batch
         self.max_queue = max_queue
         self.state = engine.init_slots()
@@ -214,7 +239,7 @@ class ContinuousBatchingScheduler:
                       sampling if sampling is not None else GREEDY,
                       tuple(tuple(int(t) for t in s)
                             for s in stop_sequences),
-                      on_token)
+                      on_token, t_submit=now_ns())
         self._rid += 1
         self._submitted += 1
         self.queue.append(req)
@@ -274,11 +299,13 @@ class ContinuousBatchingScheduler:
         if req is None:
             return False
         req.cancelled = True                      # done; rejects new tokens
+        req.t_done = now_ns()
         self.finished.append(req)
         self._pending_done.append(req)            # next _tick reports it
         self._pending_events.append((req.rid, -1, True))
         if req.on_token is not None:
             req.on_token(-1, True)
+        self._obs_retire([req])
         return True
 
     def fork(self, rid: int, max_new_tokens: Optional[int] = None,
@@ -322,6 +349,11 @@ class ContinuousBatchingScheduler:
                         sampling if sampling is not None else parent.sampling,
                         parent.stop_sequences,
                         generated=list(parent.generated))
+        # the child is born mid-decode: its lifecycle starts (and its
+        # queued/prefill phases collapse to zero) at the fork instant
+        child.t_submit = child.t_admit = child.t_first = child.t_last \
+            = now_ns()
+        child.slot = dst
         self._rid += 1
         self._submitted += 1
         self.state = self.engine.fork_slot(self.state, src, dst,
@@ -363,19 +395,31 @@ class ContinuousBatchingScheduler:
                 self.engine.release_slot(t)   # paged: pages back to pool
                 out.append(req)
         self.finished.extend(out)
+        if out:
+            self._obs_retire(out)
         return out
 
     def _append(self, req: Request, tok: int,
                 events: List[StreamEvent]) -> None:
+        t = now_ns()
         req.generated.append(tok)
+        if req.t_first == 0:
+            req.t_first = t
+            self._h_ttft.observe((t - req.t_submit) / 1e6)
+        else:
+            self._h_tpot.observe((t - req.t_last) / 1e6)
+        req.t_last = t
         done = req.done
+        if done:
+            req.t_done = t
         events.append((req.rid, tok, done))
         if req.on_token is not None:
             req.on_token(tok, done)
 
-    def _admit(self, events: List[StreamEvent]) -> None:
+    def _admit(self, events: List[StreamEvent]) -> int:
         if self._paused:
-            return
+            return 0
+        admitted = 0
         for t in range(self.num_slots):
             if self.slots[t] is None and self.queue:
                 req = self.queue[0]
@@ -387,6 +431,9 @@ class ContinuousBatchingScheduler:
                     # a later tick, counted by the stall signal below
                     break
                 self.queue.popleft()
+                req.t_admit = now_ns()
+                req.slot = t
+                admitted += 1
                 base = request_key(req.sampling, self._split())
                 self._bases[t] = base
                 ticket = self.engine.start_prefill(
@@ -413,6 +460,7 @@ class ContinuousBatchingScheduler:
                 self.slots[t] = req
                 self._tickets[t] = None if ticket.done else ticket
                 self._append(req, first_tok, events)
+        return admitted
 
     def _advance_prefills(self, events: List[StreamEvent]) -> None:
         """Drive every PREFILLING slot's warming replay (or segment
@@ -451,6 +499,7 @@ class ContinuousBatchingScheduler:
         Returns (requests finished this tick, stream events in order)."""
         events: List[StreamEvent] = []
         finished: List[Request] = []
+        t0 = now_ns()
         if self._pending_events or self._pending_done:
             # buffered events since the last consumer-driven tick drain
             # first, in production order — a cancellation's done=True and
@@ -462,7 +511,9 @@ class ContinuousBatchingScheduler:
             finished.extend(self._pending_done)
             self._pending_done.clear()
         finished += self._retire()
-        self._admit(events)
+        t_adm0 = now_ns()
+        warming = self.prefill_pending
+        admitted = self._admit(events)
         finished += self._retire()       # an admitted req may already be done
         if self.queue:
             # a request is waiting and no slot took it this tick (every
@@ -473,8 +524,16 @@ class ContinuousBatchingScheduler:
         # request just now: retire it before the decode step so its slot
         # neither decodes a phantom token nor blocks a later admission
         finished += self._retire()
+        t_adm1 = now_ns()
+        if admitted or warming:
+            # the admission-stall sample: time this tick spent on
+            # admission work (prefill forward, warm replay, slot binding)
+            # that the established slots' decode step had to wait behind
+            self._h_stall.observe((t_adm1 - t_adm0) / 1e6)
+        decoded = 0
         active = self.decode_mask
         if active.any():
+            decoded = int(active.sum())
             logits, self.state = self.engine.decode_batch(
                 self._next, self.state, active)
             params = [r.sampling if r is not None and tk is None else GREEDY
@@ -495,7 +554,55 @@ class ContinuousBatchingScheduler:
                     continue
                 self._append(req, int(toks[t]), events)
                 self._next[t, 0] = toks[t]
+        self._obs_tick(t0, t_adm0, t_adm1, admitted, warming, decoded)
         return finished, events
+
+    # -- trace drain helpers (the ONLY emission sites; see RL007) ----------
+    def _obs_tick(self, t0: int, t_adm0: int, t_adm1: int, admitted: int,
+                  warming: int, decoded: int) -> None:
+        """Sanctioned drain point: the tick's step-phase spans, emitted
+        after the tick's token drain from plain clock readings the tick
+        collected along the way (reading the clock is not emission)."""
+        t1 = now_ns()
+        self.obs.complete("sched", "tick", t0, t1,
+                          {"admitted": admitted, "warming": warming,
+                           "decoded": decoded,
+                           "queued": len(self.queue)})
+        if admitted or warming:
+            self.obs.complete("sched", "admission", t_adm0, t_adm1)
+        if decoded:
+            self.obs.complete("sched", "decode+drain", t_adm1, t1)
+
+    def _obs_retire(self, reqs: Sequence[Request]) -> None:
+        """Sanctioned drain point: each retired (or cancelled) request's
+        lifecycle spans, emitted retroactively from its timing stamps —
+        the queued / prefill / decode phases, the terminal instant, and
+        the slot-occupancy span on the slot's own track."""
+        for req in reqs:
+            track = f"req:{req.rid}"
+            end = req.t_done if req.t_done else now_ns()
+            if req.t_admit:
+                self.obs.complete(track, "queued", req.t_submit,
+                                  req.t_admit)
+                first = req.t_first if req.t_first else end
+                self.obs.complete(
+                    track, "prefill", req.t_admit, first,
+                    {"prompt_tokens": int(req.prompt.shape[0])})
+                if req.t_first:
+                    self.obs.complete(
+                        track, "decode", req.t_first, end,
+                        {"tokens": len(req.generated),
+                         "ttft_ms": (req.t_first - req.t_submit) / 1e6})
+            else:
+                # cancelled while still queued: its whole life was the
+                # queue — there is no prefill or decode phase to cover
+                self.obs.complete(track, "queued", req.t_submit, end)
+            self.obs.instant(
+                track, "cancelled" if req.cancelled else "done",
+                {"generated": len(req.generated)}, ts_ns=end)
+            if req.slot >= 0 and req.t_admit:
+                self.obs.complete(f"slot:{req.slot}", "occupied",
+                                  req.t_admit, end, {"rid": req.rid})
 
     def step(self) -> List[Request]:
         """One tick; returns the requests that finished on it."""
@@ -528,6 +635,7 @@ class ContinuousBatchingScheduler:
         """Typed run statistics: request accounting + the admission
         channel + an immutable engine counter snapshot (rates
         zero-guarded on EngineStats)."""
+        ttft, tpot, stall = self._h_ttft, self._h_tpot, self._h_stall
         return RunStats(engine=self.engine.stats,
                         requests_submitted=self._submitted,
                         requests_finished=len(self.finished),
@@ -535,4 +643,13 @@ class ContinuousBatchingScheduler:
                         requests_queued=len(self.queue),
                         prefill_pending=self.prefill_pending,
                         admission_stalls=self._admission_stalls,
-                        queue_rejected=self._queue_rejected)
+                        queue_rejected=self._queue_rejected,
+                        ttft_ms_p50=ttft.percentile(50.0),
+                        ttft_ms_p95=ttft.percentile(95.0),
+                        ttft_ms_p99=ttft.percentile(99.0),
+                        tpot_ms_p50=tpot.percentile(50.0),
+                        tpot_ms_p95=tpot.percentile(95.0),
+                        tpot_ms_p99=tpot.percentile(99.0),
+                        stall_ms_p50=stall.percentile(50.0),
+                        stall_ms_p95=stall.percentile(95.0),
+                        stall_ms_p99=stall.percentile(99.0))

@@ -78,6 +78,11 @@ class EngineStats:
     census_calls: int = 0
     census_threads: int = 0
     affinity_hits: int = 0
+    # executor pool-utilization channel (same best-effort floor caveat):
+    # summed per-worker microseconds spent inside expert FFN compute, and
+    # the high-water mark of bucket tasks one dispatch submitted
+    host_busy_us: int = 0
+    host_queue_peak: int = 0
     # paged-KV channel (kv_paged engines): current page-pool occupancy
     # (gauge), admissions served from the prefix index, and partial last
     # pages duplicated by copy-on-write appends
@@ -169,6 +174,20 @@ class RunStats:
     prefill_pending: int = 0
     admission_stalls: int = 0
     queue_rejected: int = 0
+    # latency percentiles (milliseconds) from the scheduler's streaming
+    # log-bucket histograms (repro.obs.metrics.LogHistogram — ~4%
+    # relative bucket error): time to first token (submit → first token),
+    # per-token inter-arrival (TPOT), and the admission-work stall the
+    # decode loop absorbed on ticks that admitted or warmed a request
+    ttft_ms_p50: float = 0.0
+    ttft_ms_p95: float = 0.0
+    ttft_ms_p99: float = 0.0
+    tpot_ms_p50: float = 0.0
+    tpot_ms_p95: float = 0.0
+    tpot_ms_p99: float = 0.0
+    stall_ms_p50: float = 0.0
+    stall_ms_p95: float = 0.0
+    stall_ms_p99: float = 0.0
 
     def __getattr__(self, name):
         # delegate unknown attributes to the engine snapshot so call sites
@@ -190,5 +209,14 @@ class RunStats:
             "prefill_pending": int(self.prefill_pending),
             "admission_stalls": int(self.admission_stalls),
             "queue_rejected": int(self.queue_rejected),
+            "ttft_ms_p50": float(self.ttft_ms_p50),
+            "ttft_ms_p95": float(self.ttft_ms_p95),
+            "ttft_ms_p99": float(self.ttft_ms_p99),
+            "tpot_ms_p50": float(self.tpot_ms_p50),
+            "tpot_ms_p95": float(self.tpot_ms_p95),
+            "tpot_ms_p99": float(self.tpot_ms_p99),
+            "stall_ms_p50": float(self.stall_ms_p50),
+            "stall_ms_p95": float(self.stall_ms_p95),
+            "stall_ms_p99": float(self.stall_ms_p99),
             "engine": self.engine.to_json(),
         }

@@ -1,0 +1,32 @@
+"""RL007 bad fixture: trace emission in the hot path / jitted graph /
+pure_callback lane."""
+import jax
+import jax.numpy as jnp
+
+from repro.obs.trace import now_ns
+
+
+class Sched:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_step)
+
+    def _tick(self):
+        t0 = now_ns()
+        self.obs.instant("sched", "tick")        # emission in the hot entry
+        with self.obs.span("sched", "phase"):    # span() is emission too
+            self._step_phase()
+        return t0
+
+    def _step_phase(self):
+        self.obs.counter("sched", "depth", 1)    # hot-reachable emission
+
+    def _decode_step(self, x):
+        self.obs.complete("engine", "mm", 0, 1)  # emission under tracing
+        return jnp.sum(x)
+
+    def _lane(self, x):
+        self.obs.instant("lane", "cb")           # pure_callback lane emission
+        return x
+
+    def dispatch(self, x):
+        return jax.pure_callback(self._lane, x, x)

@@ -1,0 +1,35 @@
+"""RL007 good fixture: clock reads inline, emission at the _obs_* drain."""
+import jax
+import jax.numpy as jnp
+
+from repro.obs.metrics import LogHistogram
+from repro.obs.trace import now_ns
+
+
+class Sched:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_step)
+        self._h = LogHistogram()
+
+    def _tick(self):
+        t0 = now_ns()                      # reading the clock is not emission
+        y = self._decode(jnp.ones((4,)))
+        self._h.observe(1.0)               # histograms are not emission
+        self._step_phase()
+        self._obs_tick(t0)                 # drain helper: sanctioned by name
+        return y
+
+    def _step_phase(self):
+        self.obs.counter("sched", "depth", 1)  # reprolint: allow[RL007] documented exception
+
+    def _obs_tick(self, t0):
+        # the one emission site: stopped out of the hot graph by name
+        self.obs.complete("sched", "tick", t0, now_ns())
+        self.obs.instant("sched", "drained")
+
+    def _decode_step(self, x):
+        return jnp.sum(x)
+
+    def _retire(self):
+        # outside the hot graph entirely (stop name): emission is legal
+        self.obs.instant("sched", "retired")

@@ -31,7 +31,8 @@ SAMPLE = EngineStats(hits=7, accesses=12, host_assignments=5,
                      prefill_segments=3, prefix_tokens_skipped=4,
                      cpu_expert_calls=2, cpu_tokens=3, miss_expert_groups=3,
                      fused_groups=2, census_calls=2, census_threads=7,
-                     affinity_hits=1, kv_pages_in_use=5, prefix_hits=1,
+                     affinity_hits=1, host_busy_us=150, host_queue_peak=2,
+                     kv_pages_in_use=5, prefix_hits=1,
                      cow_forks=1, prefix_pages_retained=2,
                      per_layer_hits=(3, 4), per_layer_accesses=(6, 6))
 
@@ -43,6 +44,7 @@ ENGINE_KEYS = {
     "prefill_segments", "prefix_tokens_skipped", "generated_tokens",
     "cpu_expert_calls", "cpu_tokens", "miss_expert_groups",
     "fused_groups", "census_calls", "census_threads", "affinity_hits",
+    "host_busy_us", "host_queue_peak",
     "kv_pages_in_use", "prefix_hits", "cow_forks",
     "prefix_pages_retained",
     "hit_rate", "prefetch_hit_rate", "prefetch_waste_rate",
@@ -51,7 +53,11 @@ ENGINE_KEYS = {
 }
 RUN_KEYS = {"requests_submitted", "requests_finished", "requests_active",
             "requests_queued", "prefill_pending", "admission_stalls",
-            "queue_rejected", "engine"}
+            "queue_rejected",
+            "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
+            "tpot_ms_p50", "tpot_ms_p95", "tpot_ms_p99",
+            "stall_ms_p50", "stall_ms_p95", "stall_ms_p99",
+            "engine"}
 
 
 def test_engine_stats_json_round_trips():
@@ -266,3 +272,37 @@ def test_host_compute_artifact_shape_and_cost_model(tmp_path, monkeypatch):
     ms_off0, ms_on0 = host_compute.miss_handling_ms(
         none, HostDispatchPolicy(MIXTRAL_TIMINGS, threads=1))
     assert ms_on0 == ms_off0
+
+
+def test_obs_overhead_artifact_shape(tmp_path, monkeypatch):
+    """BENCH_obs_overhead.json: the tracing-overhead artifact records a
+    RunStats whose latency-percentile channel (ttft_ms_* / tpot_ms_* /
+    stall_ms_*) is part of the pinned run schema, next to the traced /
+    untraced tok/s and overhead_pct results."""
+    importlib.import_module("benchmarks.obs_overhead")      # importable
+    monkeypatch.setattr(common, "_RESULTS", [])
+    monkeypatch.setattr(common, "_RUNS", [])
+    common.emit("obs_overhead.tok_s.untraced", 120.0, "median tok/s")
+    common.emit("obs_overhead.tok_s.traced", 118.0, "median tok/s")
+    common.emit("obs_overhead.overhead_pct", 1.7, "bound 5%")
+    common.record_run("obs_overhead.traced",
+                      RunStats(engine=SAMPLE, requests_submitted=5,
+                               requests_finished=5, ttft_ms_p50=12.5,
+                               ttft_ms_p99=20.0, tpot_ms_p50=3.0,
+                               tpot_ms_p99=6.5, stall_ms_p50=0.4,
+                               stall_ms_p99=2.0))
+    path = tmp_path / "BENCH_obs_overhead.json"
+    common.dump_json(str(path))
+    doc = json.loads(path.read_text())
+    (run,) = doc["runs"]
+    assert run["name"] == "obs_overhead.traced"
+    stats = run["stats"]
+    assert set(stats) == RUN_KEYS
+    assert {"ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
+            "tpot_ms_p50", "tpot_ms_p95", "tpot_ms_p99",
+            "stall_ms_p50", "stall_ms_p95", "stall_ms_p99"} <= set(stats)
+    assert stats["ttft_ms_p50"] == pytest.approx(12.5)
+    assert stats["tpot_ms_p95"] == 0.0          # unset percentiles default
+    assert set(stats["engine"]) == ENGINE_KEYS
+    # the executor pool-utilization channel rides in the engine export
+    assert {"host_busy_us", "host_queue_peak"} <= set(stats["engine"])

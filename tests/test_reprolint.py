@@ -115,6 +115,31 @@ def test_rl006_good_fixture():
     assert run_fixture("rl006_good", "RL006") == []
 
 
+# -- RL007 trace emission outside drain points -------------------------------
+
+def test_rl007_bad_fixture():
+    found = run_fixture("rl007_bad", "RL007")
+    assert all(f.rule == "RL007" for f in found)
+    assert lines(found) == {
+        ("src/repro/serving/scheduler.py", 15),   # instant in hot entry
+        ("src/repro/serving/scheduler.py", 16),   # span in hot entry
+        ("src/repro/serving/scheduler.py", 21),   # counter, hot-reachable
+        ("src/repro/serving/scheduler.py", 24),   # complete under tracing
+        ("src/repro/serving/scheduler.py", 28),   # instant in callback lane
+    }
+
+
+def test_rl007_good_fixture():
+    assert run_fixture("rl007_good", "RL007") == []
+
+
+def test_rl007_allow_comment_suppresses():
+    project = load_project(FIXTURES / "rl007_good")
+    src = project.get("src/repro/serving/scheduler.py")
+    assert any("reprolint: allow[RL007]" in line for line in src.lines)
+    assert run_rules(project, only=["RL007"]) == []
+
+
 # -- suppression comments ----------------------------------------------------
 
 def test_allow_comment_suppresses_only_named_rule():
@@ -158,7 +183,8 @@ def test_baseline_keys_are_line_number_free():
 def test_cli_list_and_explain(capsys):
     assert main(["--list"]) == 0
     out = capsys.readouterr().out
-    for rule_id in ("RL001", "RL002", "RL003", "RL004", "RL005", "RL006"):
+    for rule_id in ("RL001", "RL002", "RL003", "RL004", "RL005", "RL006",
+                    "RL007"):
         assert rule_id in out
     assert main(["--explain", "RL001"]) == 0
     assert "RL001" in capsys.readouterr().out

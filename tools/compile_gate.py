@@ -89,6 +89,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     import numpy as np
     from repro.config import get_config, reduced
+    from repro.obs import TraceRecorder
     from repro.serving import build
 
     cfg = reduced(get_config(args.arch))
@@ -98,8 +99,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         serving.update(kv_paged=True)
     if args.prefill_segment:
         serving.update(prefill_segment=args.prefill_segment)
+    # gate WITH tracing live: the obs drain helpers are host-only work,
+    # so a recorder must never change what compiles (a trace-induced
+    # recompile would show up here as a steady-phase failure)
+    recorder = TraceRecorder()
     _, sched = build(cfg, cache=dict(policy="lru"), serving=serving,
-                     seed=0)
+                     seed=0, recorder=recorder)
 
     rng = np.random.default_rng(0)
     prompt_a = rng.integers(0, cfg.vocab_size, 6)
@@ -135,7 +140,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                    "new_tokens": args.new_tokens,
                    "prefill_chunk": args.prefill_chunk,
                    "kv_paged": args.kv_paged,
-                   "prefill_segment": args.prefill_segment},
+                   "prefill_segment": args.prefill_segment,
+                   "traced": True},
+        "trace_events": len(recorder),
         "ticks": ticks,
         "counts": counts,
         "events": log.events,
