@@ -1,6 +1,11 @@
-"""reprolint — repo-specific JAX-hygiene static analysis.
+"""reprolint — repo-specific static analysis on a shared dataflow engine.
 
-Seven rules over the serving stack's hard-won invariants:
+Eleven rules over the serving stack's hard-won invariants. All rules
+consume one shared interprocedural engine (``dataflow.Analysis``): a
+project-wide call graph (``callgraph``), per-function summaries of how
+parameters escape or get released (``summaries``), and per-function CFGs
+with exception edges (``cfg``) — rules query these instead of re-walking
+the AST.
 
 =====  ==============================================================
 RL001  tracer leak: Python control flow / ``bool()`` / ``float()`` /
@@ -16,18 +21,42 @@ RL006  ``EngineStats``/``RunStats``/bench ``record_run`` schema drift
        against the ``tests/test_bench_schema.py`` pins
 RL007  ``repro.obs`` trace emission reachable from the jitted call
        graph or the host hot path outside an ``_obs_*`` drain helper
+RL008  resource-lifecycle pairing: every KV acquisition
+       (``alloc_prompt``/``fork``/``prepare_append``/``claim_slot``/
+       ``reserve``) released or handed off on every outgoing path,
+       including exception paths
+RL009  executor/pool attribute written from a worker callable and the
+       submitting thread without a lock or a
+       ``# reprolint: shared[atomic]`` annotation
+RL010  Pallas kernel contract mismatch: BlockSpec index-map arity,
+       kernel/operand counts vs specs, ``out_shape`` vs ``out_specs``
+       or the ref twin's dtype, unmasked ragged tails
+RL011  config/flag drift: ``EngineConfig`` field unreachable from
+       ``serve.py``/README, or a CLI flag nothing consumes
 =====  ==============================================================
 
-Run ``python -m repro.analysis`` (see ``--help``); the dynamic complement
-is ``tools/compile_gate.py``.
+Severity (``error``/``warning``) is reporting metadata — the SARIF
+``level`` and the ``--list`` tag; every *new* finding fails CI. Run
+``python -m repro.analysis`` (see ``--help``; ``--sarif`` and
+``--changed-only REF`` are the CI integration points); the dynamic
+complement is ``tools/compile_gate.py``.
 """
 from .core import Finding, Project, Rule, RULES, load_project  # noqa: F401
-from . import rules_conventions, rules_jax, rules_obs, \
+from . import rules_concurrency, rules_config, rules_conventions, \
+    rules_jax, rules_kernels, rules_lifecycle, rules_obs, \
     rules_purity                                               # noqa: F401
 from .baseline import BASELINE_NAME, load_baseline, save_baseline, \
     split_findings                                             # noqa: F401
+from .callgraph import CallGraph, CallSite, FunctionInfo       # noqa: F401
+from .cfg import CFG, EXIT, RAISED, build_cfg, reaches_terminal  # noqa: F401
+from .dataflow import Analysis, analysis                       # noqa: F401
+from .sarif import sarif_report, write_sarif                   # noqa: F401
+from .summaries import FunctionSummary, summarize              # noqa: F401
 from .cli import main, run_rules                               # noqa: F401
 
 __all__ = ["Finding", "Project", "Rule", "RULES", "load_project",
            "BASELINE_NAME", "load_baseline", "save_baseline",
-           "split_findings", "main", "run_rules"]
+           "split_findings", "CallGraph", "CallSite", "FunctionInfo",
+           "CFG", "EXIT", "RAISED", "build_cfg", "reaches_terminal",
+           "Analysis", "analysis", "sarif_report", "write_sarif",
+           "FunctionSummary", "summarize", "main", "run_rules"]

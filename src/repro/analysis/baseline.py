@@ -45,8 +45,19 @@ def load_baseline(path: Path) -> Set[Key]:
     return keys
 
 
+def _clean_key(key: Key) -> Key:
+    """The on-disk form of a key: the format is tab-separated and
+    newline-terminated, so a tab/newline inside a message would corrupt
+    the row. Applied on save AND on comparison so a finding whose
+    message contains whitespace-control chars still matches its entry."""
+    return tuple(part.replace("\t", " ").replace("\n", " ")
+                 .replace("\r", " ") for part in key)  # type: ignore
+
+
 def save_baseline(path: Path, findings: Iterable[Finding]) -> None:
-    rows = sorted({f.key() for f in findings})
+    # byte-stable output (sorted, deduped, sanitized) is pinned by the
+    # schema tests: the same finding set always serializes identically
+    rows = sorted({_clean_key(f.key()) for f in findings})
     body = "".join("\t".join(row) + "\n" for row in rows)
     path.write_text(_HEADER + body)
 
@@ -59,7 +70,7 @@ def split_findings(findings: List[Finding], baseline: Set[Key]
     old: List[Finding] = []
     matched: Set[Key] = set()
     for f in findings:
-        k = f.key()
+        k = _clean_key(f.key())
         if k in baseline:
             old.append(f)
             matched.add(k)

@@ -17,7 +17,16 @@ Two facts the rules need are *computed* here rather than hand-listed:
 Resolution is deliberately name-based, not type-based: the codebase's
 method names are distinctive (``advance_prefill_state``, ``_warm_chunk``)
 and a static analyzer that needs a type checker to boot defeats the
-"runs before everything else in CI" property.
+"runs before everything else in CI" property. Two refinements keep the
+name-based graph honest where it matters:
+
+* **import aliases** — ``from repro.util import helper as h`` makes a
+  bare ``h(...)`` call record ``helper``, so renamed imports still land
+  on the defining function;
+* **``self.`` context** — ``self.m(...)`` inside class ``A`` resolves to
+  ``A.m`` in the same file when that method exists, falling back to the
+  global by-name set only for names the class doesn't define (mixins,
+  monkey-patched hooks).
 """
 from __future__ import annotations
 
@@ -27,7 +36,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .core import Project, Source, call_name, dotted, walk_functions
 
-__all__ = ["FunctionInfo", "JitWrapper", "CallGraph", "build_callgraph"]
+__all__ = ["FunctionInfo", "JitWrapper", "CallSite", "CallGraph",
+           "build_callgraph"]
 
 
 @dataclass
@@ -52,6 +62,20 @@ class FunctionInfo:
         if a.kwarg:
             names.append(a.kwarg.arg)
         return names
+
+
+@dataclass
+class CallSite:
+    """One call expression inside a function: the (alias-normalized)
+    trailing callee name, the dotted base it was called through
+    (``"self"`` for ``self.m(...)``, ``"self.kv_pool"`` for
+    ``self.kv_pool.free(...)``, None for bare calls), and the Call node
+    itself — enough for rules to resolve context-sensitively without
+    re-walking the AST."""
+    name: str
+    line: int
+    base: Optional[str]
+    node: ast.Call
 
 
 @dataclass
@@ -127,6 +151,10 @@ class CallGraph:
         self.wrappers_by_name: Dict[str, List[JitWrapper]] = {}
         # (file, qualname) -> trailing names this function calls
         self.calls: Dict[Tuple[str, str], List[Tuple[str, int]]] = {}
+        # (file, qualname) -> full call sites (base + node, for dataflow)
+        self.call_sites: Dict[Tuple[str, str], List[CallSite]] = {}
+        # file -> {local alias -> imported trailing name} (ImportFrom asname)
+        self.aliases: Dict[str, Dict[str, str]] = {}
 
     def add(self, fi: FunctionInfo) -> None:
         self.functions[(fi.file, fi.qualname)] = fi
@@ -134,6 +162,18 @@ class CallGraph:
 
     def resolve(self, name: str) -> List[FunctionInfo]:
         return self.by_name.get(name, [])
+
+    def resolve_site(self, file: str, caller_qualname: str,
+                     site: CallSite) -> List[FunctionInfo]:
+        """Context-sensitive resolution of one call site: ``self.m(...)``
+        prefers the caller's own class's ``m`` in the same file; everything
+        else falls back to the global trailing-name set."""
+        if site.base == "self" and "." in caller_qualname:
+            cls = caller_qualname.split(".", 1)[0]
+            own = self.functions.get((file, f"{cls}.{site.name}"))
+            if own is not None:
+                return [own]
+        return self.resolve(site.name)
 
     def jit_targets(self) -> List[FunctionInfo]:
         """Every function traced code enters: decorated defs plus the
@@ -198,6 +238,16 @@ def build_callgraph(project: Project,
 
 
 def _index_file(cg: CallGraph, src: Source) -> None:
+    # import aliases: bare calls through `from m import f as g` record f,
+    # so renaming an import never hides a call edge
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.asname and a.asname != a.name:
+                    aliases[a.asname] = a.name.rsplit(".", 1)[-1]
+    cg.aliases[src.rel] = aliases
+
     for qual, node in walk_functions(src.tree):
         fi = FunctionInfo(src.rel, qual, node)
         for dec in node.decorator_list:
@@ -210,12 +260,20 @@ def _index_file(cg: CallGraph, src: Source) -> None:
                     _, fi.donate_argnums, fi.static_argnames = parts
         cg.add(fi)
         calls = []
+        sites = []
         for sub in ast.walk(node):
             if isinstance(sub, ast.Call):
                 name = call_name(sub)
                 if name:
+                    base = None
+                    if isinstance(sub.func, ast.Name):
+                        name = aliases.get(name, name)
+                    else:
+                        base = dotted(sub.func.value)
                     calls.append((name, sub.lineno))
+                    sites.append(CallSite(name, sub.lineno, base, sub))
         cg.calls[(src.rel, qual)] = calls
+        cg.call_sites[(src.rel, qual)] = sites
 
     # assignment-form wrappers: self._decode = jax.jit(self._decode_step,
     # donate_argnums=(1, 2), ...) — anywhere in the file (typically

@@ -1,0 +1,273 @@
+"""Per-function control-flow graphs with exception edges.
+
+RL008's "released on every outgoing path *including exception paths*"
+needs more than a lexical scan: it needs to know that the statement after
+a ``try:`` body is reachable both normally and through each handler, that
+a ``finally:`` runs on the exceptional route out, and that a ``raise``
+inside a handler leaves the function. This module builds exactly enough
+CFG for that query and nothing more:
+
+* nodes are **statements** (plus ``ExceptHandler`` markers); expressions
+  never get their own node;
+* a statement *may raise* iff it contains a ``Call`` (or is ``raise`` /
+  ``assert``) — attribute access, arithmetic and subscripts are assumed
+  total, which deliberately under-approximates Python's real exception
+  surface: the repo's lifecycle bugs live on call boundaries, and taking
+  every BINARY_OP edge would drown the rule in vacuous paths;
+* ``finally`` bodies are **duplicated** — one copy on the normal route to
+  the continuation, one on the exceptional route to the enclosing
+  handler/exit — so a release inside ``finally`` discharges both routes
+  without edge labels;
+* two synthetic terminals: ``EXIT`` (fell off the end / ``return``) and
+  ``RAISED`` (an exception left the function).
+
+Handler matching is over-approximated by position: an exception edge from
+a protected statement enters the *first* handler node, and each handler
+node chains exceptionally to the next (or out of the ``try`` when the
+last handler is not a catch-all) — "which handler matches" is a dynamic
+type question a name-based analyzer refuses to guess.
+
+The one deliberate piece of path-sensitivity lives in the traversal, not
+the graph: :func:`reaches_terminal` takes a ``branch_skip`` map so a rule
+can declare "on this ``if``'s else-branch the resource is known None" —
+the idiom ``except: if table is not None: free(table); raise`` would
+otherwise flag its own guard.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["CFG", "EXIT", "RAISED", "build_cfg", "reaches_terminal",
+           "header_exprs"]
+
+EXIT = -1      # normal function exit
+RAISED = -2    # exceptional function exit
+
+
+def _may_raise(stmt: ast.AST) -> bool:
+    if isinstance(stmt, (ast.Raise, ast.Assert)):
+        return True
+    for sub in ast.walk(stmt):
+        if isinstance(sub, ast.Call):
+            return True
+    return False
+
+
+def _catch_all(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:
+        return True
+    names = [handler.type] if not isinstance(handler.type, ast.Tuple) \
+        else list(handler.type.elts)
+    for n in names:
+        tail = n.attr if isinstance(n, ast.Attribute) else \
+            (n.id if isinstance(n, ast.Name) else "")
+        if tail in ("BaseException", "Exception"):
+            return True
+    return False
+
+
+class CFG:
+    """One function's statement graph. ``stmts[i]`` is the AST node for
+    node ``i`` (a statement or an ``ExceptHandler``); ``succ_normal`` /
+    ``succ_exc`` hold fall-through vs may-raise successors (``EXIT`` /
+    ``RAISED`` are terminal pseudo-ids)."""
+
+    def __init__(self, func: ast.AST):
+        self.func = func
+        self.stmts: List[ast.AST] = []
+        self.succ_normal: Dict[int, Set[int]] = {}
+        self.succ_exc: Dict[int, Set[int]] = {}
+        # if-statement node -> (body entry, orelse entry): lets a rule
+        # prune a branch its predicate proves impossible (None-guards)
+        self.if_branches: Dict[int, Tuple[int, int]] = {}
+        self.entry: int = EXIT
+
+    def _add(self, stmt: ast.AST) -> int:
+        i = len(self.stmts)
+        self.stmts.append(stmt)
+        self.succ_normal[i] = set()
+        self.succ_exc[i] = set()
+        return i
+
+    def succ(self, i: int) -> Set[int]:
+        return self.succ_normal.get(i, set()) | self.succ_exc.get(i, set())
+
+    def nodes_of(self, pred: Callable[[ast.AST], bool]) -> List[int]:
+        """Node ids whose statement satisfies ``pred`` (a statement
+        duplicated by ``finally`` modeling appears once per copy)."""
+        return [i for i, s in enumerate(self.stmts) if pred(s)]
+
+
+def build_cfg(func: ast.AST) -> CFG:
+    """CFG for one ``FunctionDef`` body (nested defs become opaque
+    single statements — their bodies don't run at definition time)."""
+    cfg = CFG(func)
+
+    def seq(body: Sequence[ast.stmt], follow: int, exc: int,
+            brk: Optional[int], cont: Optional[int]) -> int:
+        entry = follow
+        for stmt in reversed(body):
+            entry = one(stmt, entry, exc, brk, cont)
+        return entry
+
+    def one(stmt: ast.stmt, follow: int, exc: int,
+            brk: Optional[int], cont: Optional[int]) -> int:
+        if isinstance(stmt, ast.If):
+            node = cfg._add(stmt)
+            body = seq(stmt.body, follow, exc, brk, cont)
+            orelse = seq(stmt.orelse, follow, exc, brk, cont)
+            cfg.succ_normal[node] |= {body, orelse}
+            cfg.if_branches[node] = (body, orelse)
+            if _may_raise(stmt.test):
+                cfg.succ_exc[node].add(exc)
+            return node
+
+        if isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+            node = cfg._add(stmt)
+            body = seq(stmt.body, node, exc, follow, node)
+            cfg.succ_normal[node].add(body)
+            infinite = (isinstance(stmt, ast.While)
+                        and isinstance(stmt.test, ast.Constant)
+                        and bool(stmt.test.value))
+            if not infinite:
+                # the zero-iteration / loop-exhausted edge (orelse bodies
+                # are folded into it — the repo doesn't use for/else)
+                cfg.succ_normal[node].add(
+                    seq(stmt.orelse, follow, exc, brk, cont))
+            header = stmt.test if isinstance(stmt, ast.While) else stmt.iter
+            if _may_raise(header):
+                cfg.succ_exc[node].add(exc)
+            return node
+
+        if isinstance(stmt, ast.Try):
+            # exceptional continuation: through a duplicated finally copy
+            # when one exists, else straight to the enclosing target
+            f_exc = seq(stmt.finalbody, exc, exc, brk, cont) \
+                if stmt.finalbody else exc
+            f_norm = seq(stmt.finalbody, follow, exc, brk, cont) \
+                if stmt.finalbody else follow
+            # handler chain: body exceptions enter the first handler;
+            # each handler may decline (exceptionally) to the next
+            h_entry = f_exc
+            for h in reversed(stmt.handlers):
+                h_node = cfg._add(h)
+                h_body = seq(h.body, f_norm, f_exc, brk, cont)
+                cfg.succ_normal[h_node].add(h_body)
+                if not _catch_all(h):
+                    cfg.succ_exc[h_node].add(h_entry)
+                h_entry = h_node
+            orelse = seq(stmt.orelse, f_norm, f_exc, brk, cont)
+            return seq(stmt.body, orelse, h_entry, brk, cont)
+
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            node = cfg._add(stmt)
+            cfg.succ_normal[node].add(seq(stmt.body, follow, exc, brk, cont))
+            if any(_may_raise(it.context_expr) for it in stmt.items):
+                cfg.succ_exc[node].add(exc)
+            return node
+
+        if isinstance(stmt, (ast.Return, ast.Yield)):
+            node = cfg._add(stmt)
+            cfg.succ_normal[node].add(EXIT)
+            if _may_raise(stmt):
+                cfg.succ_exc[node].add(exc)
+            return node
+
+        if isinstance(stmt, ast.Raise):
+            node = cfg._add(stmt)
+            cfg.succ_exc[node].add(exc)
+            return node
+
+        if isinstance(stmt, ast.Break):
+            node = cfg._add(stmt)
+            cfg.succ_normal[node].add(follow if brk is None else brk)
+            return node
+
+        if isinstance(stmt, ast.Continue):
+            node = cfg._add(stmt)
+            cfg.succ_normal[node].add(follow if cont is None else cont)
+            return node
+
+        if isinstance(stmt, ast.Match):
+            node = cfg._add(stmt)
+            for case in stmt.cases:
+                cfg.succ_normal[node].add(
+                    seq(case.body, follow, exc, brk, cont))
+            cfg.succ_normal[node].add(follow)   # no case matched
+            if _may_raise(stmt.subject):
+                cfg.succ_exc[node].add(exc)
+            return node
+
+        # simple statement (incl. nested def/class, which don't execute
+        # their bodies here): fall through, may-raise edge if it calls
+        node = cfg._add(stmt)
+        cfg.succ_normal[node].add(follow)
+        if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)) and _may_raise(stmt):
+            cfg.succ_exc[node].add(exc)
+        return node
+
+    cfg.entry = seq(func.body, EXIT, RAISED, None, None)
+    return cfg
+
+
+def reaches_terminal(cfg: CFG, start: Set[int],
+                     blocked_always: Set[int],
+                     blocked_normal: Optional[Set[int]] = None,
+                     branch_skip: Optional[Dict[int, int]] = None
+                     ) -> Optional[int]:
+    """First terminal (``EXIT``/``RAISED``) reachable from ``start``
+    without passing through a discharge node, or None.
+
+    ``blocked_always`` nodes absorb completely (a release call: once
+    reached, every continuation is safe). ``blocked_normal`` nodes
+    absorb only their fall-through — their *exception* successors stay
+    live, modeling "this statement hands the resource off only if it
+    completes" (``return self._open_ticket(..., table, ...)`` raising
+    mid-call has NOT escaped the table: that is PR 7's leak class).
+    ``branch_skip`` maps an ``If`` node id to the one branch-entry id
+    that must NOT be followed from it (the branch the caller's predicate
+    analysis proved impossible, e.g. the ``table is None`` arm after a
+    successful allocation)."""
+    blocked_normal = blocked_normal or set()
+    branch_skip = branch_skip or {}
+    seen: Set[int] = set()
+    work = list(start)
+    while work:
+        i = work.pop()
+        if i in seen:
+            continue
+        seen.add(i)
+        if i in (EXIT, RAISED):
+            return i
+        if i in blocked_always:
+            continue
+        if i in blocked_normal:
+            nxt = set(cfg.succ_exc.get(i, ()))
+        else:
+            nxt = cfg.succ(i)
+        skip = branch_skip.get(i)
+        if skip is not None:
+            nxt = nxt - {skip}
+        work.extend(j for j in nxt if j not in seen)
+    return None
+
+
+def header_exprs(stmt: ast.AST) -> List[ast.AST]:
+    """The expressions a *compound* statement evaluates itself, excluding
+    its nested body (body statements are their own CFG nodes — scanning
+    the whole ``If`` node would double-attribute everything inside it).
+    Simple statements return themselves."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [it.context_expr for it in stmt.items]
+    if isinstance(stmt, ast.Match):
+        return [stmt.subject]
+    if isinstance(stmt, (ast.Try, ast.ExceptHandler, ast.FunctionDef,
+                         ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    return [stmt]

@@ -6,15 +6,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
-from typing import List, Optional
+from typing import List, Optional, Set
 
-from . import rules_conventions, rules_jax, rules_obs, \
+from . import rules_concurrency, rules_config, rules_conventions, \
+    rules_jax, rules_kernels, rules_lifecycle, rules_obs, \
     rules_purity                                          # noqa: F401
 from .baseline import BASELINE_NAME, load_baseline, save_baseline, \
     split_findings
 from .core import Finding, RULES, load_project
+from .sarif import write_sarif
 
 
 def _find_root(start: Path) -> Path:
@@ -37,11 +40,29 @@ def run_rules(project, only: Optional[List[str]] = None) -> List[Finding]:
                                            f.message))
 
 
+def _changed_files(root: Path, ref: str) -> Optional[Set[str]]:
+    """Repo-relative paths changed vs ``ref`` plus untracked files, or
+    None when git is unavailable (fail open: report everything)."""
+    try:
+        diff = subprocess.run(
+            ["git", "diff", "--name-only", ref],
+            cwd=root, capture_output=True, text=True, check=True)
+        untracked = subprocess.run(
+            ["git", "ls-files", "--others", "--exclude-standard"],
+            cwd=root, capture_output=True, text=True, check=True)
+    except (OSError, subprocess.CalledProcessError) as e:
+        print(f"reprolint: --changed-only: git failed ({e}); "
+              f"reporting all files", file=sys.stderr)
+        return None
+    return {line.strip() for line in
+            (diff.stdout + untracked.stdout).splitlines() if line.strip()}
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="reprolint: repo-specific JAX-hygiene static analysis "
-                    "(RL001-RL007)")
+                    "(RL001-RL011)")
     ap.add_argument("--root", type=Path, default=None,
                     help="repo root (default: auto-detected from cwd)")
     ap.add_argument("--baseline", type=Path, default=None,
@@ -58,11 +79,20 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--json", type=Path, default=None,
                     help="also write a findings report (new/grandfathered/"
                          "stale) as JSON — the CI artifact")
+    ap.add_argument("--sarif", type=Path, default=None,
+                    help="also write the NEW findings as SARIF 2.1.0 "
+                         "(code-scanning upload)")
+    ap.add_argument("--changed-only", metavar="REF", default=None,
+                    help="report only findings (and stale baseline "
+                         "entries) in files changed vs this git ref; "
+                         "rules still analyze the whole project so "
+                         "cross-file reasoning stays sound")
     args = ap.parse_args(argv)
 
     if args.list:
         for rule_id in sorted(RULES):
-            print(f"{rule_id}  {RULES[rule_id].summary}")
+            r = RULES[rule_id]
+            print(f"{rule_id}  [{r.severity}] {r.summary}")
         return 0
     if args.explain:
         rule = RULES.get(args.explain)
@@ -88,6 +118,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     baseline = load_baseline(baseline_path)
     new, old, stale = split_findings(findings, baseline)
 
+    if args.changed_only:
+        changed = _changed_files(root, args.changed_only)
+        if changed is not None:
+            new = [f for f in new if f.file in changed]
+            stale = [k for k in stale if k[1] in changed]
+
     for f in new:
         print(f.render())
     for key in stale:
@@ -96,10 +132,18 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.json:
         args.json.write_text(json.dumps({
-            "new": [f.__dict__ for f in new],
-            "grandfathered": [f.__dict__ for f in old],
+            "new": [dict(f.__dict__,
+                         severity=RULES[f.rule].severity
+                         if f.rule in RULES else "error")
+                    for f in new],
+            "grandfathered": [dict(f.__dict__,
+                                   severity=RULES[f.rule].severity
+                                   if f.rule in RULES else "error")
+                              for f in old],
             "stale_baseline": [list(k) for k in stale],
         }, indent=2) + "\n")
+    if args.sarif:
+        write_sarif(args.sarif, new)
 
     if new or stale:
         print(f"\nreprolint: {len(new)} new finding(s), {len(stale)} stale "

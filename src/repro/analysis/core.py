@@ -110,11 +110,17 @@ def load_project(root: Path,
 class Rule:
     """A registered rule: id, one-line summary, and the check callable
     (``check(project) -> list[Finding]``). The docstring of the callable
-    is the rule's long-form documentation (``--explain`` prints it)."""
+    is the rule's long-form documentation (``--explain`` prints it).
+
+    ``severity`` is reporting metadata (the SARIF ``level`` and the
+    ``--list`` tag): every *new* finding fails CI regardless of severity
+    — ``warning`` marks rules whose findings are contract drift rather
+    than latent runtime defects."""
     rule_id: str
     summary: str
     check: callable
     findings_filter: bool = True   # apply per-line allow[] suppression
+    severity: str = "error"        # "error" | "warning" | "note"
 
     def run(self, project: Project) -> List[Finding]:
         found = self.check(project)
@@ -132,10 +138,10 @@ class Rule:
 RULES: Dict[str, Rule] = {}
 
 
-def register(rule_id: str, summary: str):
+def register(rule_id: str, summary: str, severity: str = "error"):
     """Decorator: register ``check(project) -> [Finding]`` under an id."""
     def deco(fn):
-        RULES[rule_id] = Rule(rule_id, summary, fn)
+        RULES[rule_id] = Rule(rule_id, summary, fn, severity=severity)
         return fn
     return deco
 

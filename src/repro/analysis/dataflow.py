@@ -1,0 +1,153 @@
+"""The shared interprocedural engine every rule consumes.
+
+One :class:`Analysis` per :class:`~repro.analysis.core.Project` bundles
+
+* the project call graph (:mod:`repro.analysis.callgraph`) — built once,
+  shared by RL001/RL002/RL003/RL007/RL008/RL009;
+* per-function :class:`~repro.analysis.summaries.FunctionSummary`
+  objects, computed lazily and memoized;
+* per-function CFGs (:mod:`repro.analysis.cfg`), likewise lazy;
+* the two interprocedural fixpoints the summaries alone can't answer:
+  :meth:`param_escapes` ("does this argument leave the callee's frame,
+  transitively?") and :meth:`param_released_by` ("does the callee, or
+  anything it forwards to, pass it to one of these release calls?").
+
+The cache is keyed by object identity with a liveness check, exactly like
+the rule-local cache it replaces: the CLI builds one project per run, and
+tests that build many small projects must not cross-pollinate.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .callgraph import CallGraph, CallSite, FunctionInfo, build_callgraph
+from .cfg import CFG, build_cfg
+from .core import Project
+from .summaries import FunctionSummary, summarize
+
+__all__ = ["Analysis", "analysis"]
+
+
+class Analysis:
+    def __init__(self, project: Project):
+        self.project = project
+        self.graph: CallGraph = build_callgraph(project)
+        self._summaries: Dict[Tuple[str, str], FunctionSummary] = {}
+        self._cfgs: Dict[Tuple[str, str], CFG] = {}
+        self._escape_memo: Dict[Tuple[str, str, str], bool] = {}
+        self._release_memo: Dict[Tuple[str, str, str, frozenset], bool] = {}
+
+    # -- lazy per-function artifacts --------------------------------------
+    def summary(self, fi: FunctionInfo) -> FunctionSummary:
+        key = (fi.file, fi.qualname)
+        if key not in self._summaries:
+            self._summaries[key] = summarize(fi.file, fi.qualname, fi.node)
+        return self._summaries[key]
+
+    def cfg(self, fi: FunctionInfo) -> CFG:
+        key = (fi.file, fi.qualname)
+        if key not in self._cfgs:
+            self._cfgs[key] = build_cfg(fi.node)
+        return self._cfgs[key]
+
+    # -- interprocedural queries ------------------------------------------
+    def _callee_param(self, callee: FunctionInfo, pos: int,
+                      keyword: Optional[str],
+                      through_attr: bool) -> Optional[str]:
+        """Map a call-site argument slot to the callee's parameter name
+        (shifting past ``self`` for attribute-style method calls)."""
+        params = self.summary(callee).params
+        if keyword is not None:
+            return keyword if keyword in params else None
+        off = 1 if (through_attr and params and params[0] == "self") else 0
+        idx = pos + off
+        return params[idx] if 0 <= idx < len(params) else None
+
+    def param_escapes(self, fi: FunctionInfo, param: str,
+                      _depth: int = 0) -> bool:
+        """True iff ``param`` can leave ``fi``'s frame: stored into
+        ``self.*``/a global, returned/yielded, or passed whole to a
+        callee that (transitively) does either — or to a callee this
+        project doesn't define, which must be assumed to keep it."""
+        key = (fi.file, fi.qualname, param)
+        if key in self._escape_memo:
+            return self._escape_memo[key]
+        if _depth > 6:
+            return True                       # deep chain: assume escape
+        self._escape_memo[key] = False        # optimistic on cycles
+        s = self.summary(fi)
+        out = param in s.param_stored or param in s.param_returned
+        if not out:
+            for site in s.param_passed.get(param, ()):
+                cands = self._resolve_pass(fi, site)
+                if not cands:
+                    out = True                # unknown callee keeps it
+                    break
+                for c in cands:
+                    cp = self._callee_param(c, site.pos, site.keyword,
+                                            site.base is not None)
+                    if cp is None:
+                        out = True            # *args soup: assume escape
+                    elif self.param_escapes(c, cp, _depth + 1):
+                        out = True
+                if out:
+                    break
+        self._escape_memo[key] = out
+        return out
+
+    def param_released_by(self, fi: FunctionInfo, param: str,
+                          release_names: Iterable[str],
+                          _depth: int = 0) -> bool:
+        """True iff ``fi`` passes ``param`` (whole) to a call whose
+        trailing name is in ``release_names`` — directly or through a
+        project-defined callee. Unknown callees do NOT release."""
+        rel = frozenset(release_names)
+        key = (fi.file, fi.qualname, param, rel)
+        if key in self._release_memo:
+            return self._release_memo[key]
+        if _depth > 6:
+            return False
+        self._release_memo[key] = False
+        s = self.summary(fi)
+        out = False
+        for site in s.param_passed.get(param, ()):
+            if site.callee in rel:
+                out = True
+                break
+            for c in self._resolve_pass(fi, site):
+                cp = self._callee_param(c, site.pos, site.keyword,
+                                        site.base is not None)
+                if cp is not None and self.param_released_by(
+                        c, cp, rel, _depth + 1):
+                    out = True
+                    break
+            if out:
+                break
+        self._release_memo[key] = out
+        return out
+
+    def _resolve_pass(self, caller: FunctionInfo,
+                      site) -> List[FunctionInfo]:
+        cs = CallSite(site.callee, 0, site.base, None)
+        return self.graph.resolve_site(caller.file, caller.qualname, cs)
+
+
+_cache: Dict[int, Tuple[Project, Analysis]] = {}
+
+
+def analysis(project: Project) -> Analysis:
+    """Memoized Analysis for ``project`` (one live project at a time —
+    the CLI's case; tests with many small projects stay correct because
+    the key is checked by identity, not reused across objects)."""
+    key = id(project)
+    hit = _cache.get(key)
+    if hit is None or hit[0] is not project:
+        _cache.clear()
+        _cache[key] = (project, Analysis(project))
+    return _cache[key][1]
+
+
+def _graph(project: Project) -> CallGraph:
+    """Back-compat shim: the v1 rules asked for the bare call graph."""
+    return analysis(project).graph

@@ -1,0 +1,220 @@
+"""RL009 — thread-shared-state discipline in executor/pool classes.
+
+The host miss lane fans work out through ``ThreadPoolExecutor``; its
+telemetry counters are the textbook place for a silent data race: a
+``self.x += ...`` inside a worker callable races both other workers and
+the submitting thread. The paper's cost model *reads* those counters
+(``host_busy_us`` feeds the CPU-vs-fetch dispatch decision), so a torn
+or lost update skews real scheduling, not just a dashboard.
+
+The rule finds, per class:
+
+* **worker callables** — functions passed to ``<pool>.map`` /
+  ``<pool>.submit`` / ``<pool>.apply_async`` or ``Thread(target=...)``,
+  resolved to nested ``def``s in the submitting method or to ``self.``
+  methods of the class; writes reachable from a worker through same-
+  scope helper calls count as worker writes (``run_bucket`` calling
+  ``one``);
+* **shared attributes** — ``self.`` attributes written inside a worker
+  AND written or read elsewhere in the class outside ``__init__``
+  (construction happens before the pool exists, so ``__init__`` writes
+  don't race).
+
+Every write site of a shared attribute — worker-side or submitting-side
+— must be either inside a ``with self.<...lock...>:`` block or
+annotated ``# reprolint: shared[atomic] <reason>`` on the writing line,
+the repo's explicit "this is telemetry, a torn read is an acceptable
+floor" marker (distinct from ``allow[RL009]``, which would hide the
+site instead of documenting the contract).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Finding, Project, Source, call_name, dotted, register
+
+_SHARED_RE = re.compile(r"#\s*reprolint:\s*shared\[atomic\]")
+_SUBMITTERS = ("map", "submit", "apply_async")
+
+RL009_PREFIX = "src/repro"
+
+
+def _worker_exprs(method: ast.AST):
+    """Callable expressions handed to a pool/thread inside ``method``."""
+    for n in ast.walk(method):
+        if not isinstance(n, ast.Call):
+            continue
+        name = call_name(n)
+        if name in _SUBMITTERS and isinstance(n.func, ast.Attribute):
+            if n.args:
+                yield n.args[0]
+        elif name == "Thread":
+            for kw in n.keywords:
+                if kw.arg == "target":
+                    yield kw.value
+            if n.args:
+                yield n.args[0]
+
+
+def _local_defs(scope: ast.AST) -> Dict[str, ast.AST]:
+    """Nested function defs directly inside ``scope`` (any depth)."""
+    return {d.name: d for d in ast.walk(scope)
+            if isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and d is not scope}
+
+
+def _self_attr_writes(fn: ast.AST) -> List[Tuple[str, int]]:
+    out = []
+    for n in ast.walk(fn):
+        if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+            for t in targets:
+                base = t
+                while isinstance(base, ast.Subscript):
+                    base = base.value
+                if isinstance(base, ast.Attribute) \
+                        and isinstance(base.value, ast.Name) \
+                        and base.value.id == "self":
+                    out.append((base.attr, n.lineno))
+    return out
+
+
+def _self_attr_reads(fn: ast.AST) -> Set[str]:
+    return {n.attr for n in ast.walk(fn)
+            if isinstance(n, ast.Attribute)
+            and isinstance(n.ctx, ast.Load)
+            and isinstance(n.value, ast.Name) and n.value.id == "self"}
+
+
+def _lock_ranges(method: ast.AST) -> List[Tuple[int, int]]:
+    """Line ranges of ``with`` blocks whose context looks like a lock."""
+    out = []
+    for n in ast.walk(method):
+        if isinstance(n, (ast.With, ast.AsyncWith)):
+            for it in n.items:
+                d = dotted(it.context_expr) or (
+                    dotted(it.context_expr.func)
+                    if isinstance(it.context_expr, ast.Call) else None)
+                if d and "lock" in d.lower():
+                    out.append((n.lineno, n.end_lineno or n.lineno))
+                    break
+    return out
+
+
+def _worker_closure(root_fn: ast.AST, siblings: Dict[str, ast.AST],
+                    methods: Dict[str, ast.AST]) -> List[ast.AST]:
+    """The worker plus every same-scope helper it calls (transitively):
+    writes inside ``one(g)`` called from ``run_bucket`` are worker
+    writes."""
+    seen: List[ast.AST] = []
+    work = [root_fn]
+    while work:
+        fn = work.pop()
+        if any(fn is s for s in seen):
+            continue
+        seen.append(fn)
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Call):
+                name = call_name(n)
+                if name in siblings:
+                    work.append(siblings[name])
+                elif isinstance(n.func, ast.Attribute) \
+                        and isinstance(n.func.value, ast.Name) \
+                        and n.func.value.id == "self" and name in methods:
+                    work.append(methods[name])
+    return seen
+
+
+@register("RL009", "executor/pool attribute written from a worker "
+                   "callable and the submitting thread without a lock or "
+                   "a shared[atomic] annotation")
+def check_shared_state(project: Project) -> List[Finding]:
+    """Attributes mutated across the pool boundary must declare their
+    discipline.
+
+    For each class that submits callables to a thread pool, the rule
+    intersects the ``self.`` attributes written inside worker callables
+    with those written or read by the rest of the class (``__init__``
+    excluded — it runs before the pool). Every write site of such a
+    shared attribute must sit inside a ``with self.<lock>:`` block or
+    carry ``# reprolint: shared[atomic]`` on its line. The annotation is
+    the repo's documented-race marker: the executor's ``busy_ns`` floor
+    is the sanctioned example."""
+    findings: List[Finding] = []
+    for src in project.under(RL009_PREFIX):
+        for cls in ast.walk(src.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            methods = {m.name: m for m in cls.body
+                       if isinstance(m, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))}
+            # worker functions, resolved per submitting method
+            workers: List[ast.AST] = []
+            for mname, m in methods.items():
+                siblings = _local_defs(m)
+                for expr in _worker_exprs(m):
+                    target = None
+                    if isinstance(expr, ast.Name):
+                        target = siblings.get(expr.id) \
+                            or methods.get(expr.id)
+                    elif isinstance(expr, ast.Attribute) \
+                            and isinstance(expr.value, ast.Name) \
+                            and expr.value.id == "self":
+                        target = methods.get(expr.attr)
+                    if target is not None:
+                        workers.extend(_worker_closure(
+                            target, siblings, methods))
+            if not workers:
+                continue
+
+            def in_worker(line: int) -> bool:
+                return any(w.lineno <= line <= (w.end_lineno or w.lineno)
+                           for w in workers)
+
+            worker_writes: Dict[str, List[int]] = {}
+            outside_writes: Dict[str, List[int]] = {}
+            outside_reads: Set[str] = set()
+            for mname, m in methods.items():
+                for attr, line in _self_attr_writes(m):
+                    if in_worker(line):
+                        worker_writes.setdefault(attr, []).append(line)
+                    elif mname != "__init__":
+                        outside_writes.setdefault(attr, []).append(line)
+                for n in ast.walk(m):
+                    if isinstance(n, ast.Attribute) \
+                            and isinstance(n.ctx, ast.Load) \
+                            and isinstance(n.value, ast.Name) \
+                            and n.value.id == "self" \
+                            and mname != "__init__" \
+                            and not in_worker(n.lineno):
+                        outside_reads.add(n.attr)
+
+            shared = {a for a in worker_writes
+                      if a in outside_writes or a in outside_reads}
+            if not shared:
+                continue
+            locked = [r for m in methods.values()
+                      for r in _lock_ranges(m)]
+
+            def guarded(line: int) -> bool:
+                if any(lo <= line <= hi for lo, hi in locked):
+                    return True
+                idx = line - 1
+                return 0 <= idx < len(src.lines) \
+                    and _SHARED_RE.search(src.lines[idx]) is not None
+
+            for attr in sorted(shared):
+                sites = worker_writes.get(attr, []) \
+                    + outside_writes.get(attr, [])
+                for line in sorted(sites):
+                    if guarded(line):
+                        continue
+                    findings.append(Finding(
+                        "RL009", src.rel, line,
+                        f"'{attr}' is written from a pool worker and the "
+                        f"submitting thread without a lock; guard it or "
+                        f"annotate the write '# reprolint: "
+                        f"shared[atomic] <reason>'", cls.name))
+    return findings

@@ -1,0 +1,109 @@
+"""RL011 — config/flag drift between ``EngineConfig`` and the CLI.
+
+The serving stack is steered by two surfaces that must stay in sync by
+hand: ``EngineConfig`` (the dataclass every knob lands in) and
+``serve.py`` (the flags an operator can actually set). Drift is silent
+in both directions — a config field nobody can reach from the CLI or
+the docs is dead weight that readers will assume is tunable, and an
+``add_argument`` whose ``dest`` no code ever reads is a flag that
+parses, prints in ``--help``, and does nothing.
+
+Two checks, both textual-with-AST-anchors (warning severity — drift is
+a documentation bug, not a correctness bug):
+
+* every annotated field of a class named ``EngineConfig`` must appear
+  as a whole word in some ``serve.py`` under ``src/repro`` or in the
+  repo-root ``README.md``;
+* every ``add_argument`` dest in a ``serve.py`` must be consumed as
+  ``args.<dest>`` somewhere in that file.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from .core import Finding, Project, Source, call_name, register
+
+CONFIG_CLASS = "EngineConfig"
+
+
+def _config_fields(src: Source) -> List[ast.AnnAssign]:
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.ClassDef) and node.name == CONFIG_CLASS:
+            return [s for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)]
+    return []
+
+
+def _arg_dest(call: ast.Call) -> Optional[str]:
+    """The argparse dest: explicit ``dest=`` kw, else the first long
+    option with dashes mapped to underscores."""
+    for kw in call.keywords:
+        if kw.arg == "dest" and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, str):
+            return kw.value.value
+    for a in call.args:
+        if isinstance(a, ast.Constant) and isinstance(a.value, str) \
+                and a.value.startswith("--"):
+            return a.value.lstrip("-").replace("-", "_")
+    # positional argument ("prompt"): consumed as args.<name> too
+    for a in call.args:
+        if isinstance(a, ast.Constant) and isinstance(a.value, str) \
+                and not a.value.startswith("-"):
+            return a.value.replace("-", "_")
+    return None
+
+
+@register("RL011", "config/flag drift: EngineConfig field unreachable "
+                   "from serve.py or README, or a CLI flag with no "
+                   "args.<dest> consumer", severity="warning")
+def check_config_drift(project: Project) -> List[Finding]:
+    """Both steering surfaces must acknowledge each other.
+
+    ``EngineConfig`` fields are checked for whole-word mentions in any
+    ``serve.py`` under ``src/repro`` or in the repo-root ``README.md``
+    (either counts: a field may be launch-wired or docs-only-by-design,
+    but invisible-in-both means operators cannot discover it). CLI
+    dests are checked for an ``args.<dest>`` read in their own file —
+    an unparsed-into-anything flag is dead."""
+    findings: List[Finding] = []
+
+    serve_srcs = [s for s in project.under("src/repro")
+                  if s.rel.endswith("/serve.py") or s.rel == "serve.py"]
+    surfaces = [s.text for s in serve_srcs]
+    readme = project.root / "README.md"
+    if readme.exists():
+        surfaces.append(readme.read_text())
+
+    for src in project.under("src/repro"):
+        if CONFIG_CLASS not in src.text:
+            continue
+        for field in _config_fields(src):
+            name = field.target.id
+            pat = re.compile(rf"\b{re.escape(name)}\b")
+            if any(pat.search(t) for t in surfaces):
+                continue
+            findings.append(Finding(
+                "RL011", src.rel, field.lineno,
+                f"EngineConfig field '{name}' appears in no serve.py "
+                f"and not in README.md: operators cannot discover or "
+                f"set it", CONFIG_CLASS))
+
+    for src in serve_srcs:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call) \
+                    or call_name(node) != "add_argument":
+                continue
+            dest = _arg_dest(node)
+            if dest is None:
+                continue
+            if dest == "help" or re.search(
+                    rf"\bargs\.{re.escape(dest)}\b", src.text):
+                continue
+            findings.append(Finding(
+                "RL011", src.rel, node.lineno,
+                f"CLI flag dest '{dest}' is parsed but 'args.{dest}' "
+                f"is never read: the flag does nothing", dest))
+    return findings

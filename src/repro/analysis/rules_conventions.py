@@ -26,7 +26,7 @@ _BITWISE_MARKERS = ("array_equal",)
 
 
 @register("RL005", "Pallas kernel package missing ref.py twin or bitwise "
-                   "parity test")
+                   "parity test", severity="warning")
 def rl005_kernel_twin(project: Project) -> List[Finding]:
     """RL005: every ``src/repro/kernels/<pkg>/`` package containing a
     Pallas module (detected by ``pallas_call`` / pallas imports) must
@@ -84,7 +84,7 @@ def _has_parity_test(project: Project, pkg: str) -> bool:
 
 
 @register("RL006", "stats/bench schema keys out of sync with "
-                   "test_bench_schema.py pins")
+                   "test_bench_schema.py pins", severity="warning")
 def rl006_schema_drift(project: Project) -> List[Finding]:
     """RL006: three schema contracts, checked two-way.
 

@@ -12,7 +12,8 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 from .core import Finding, Project, Source, call_name, dotted, register, \
     walk_functions
-from .callgraph import CallGraph, FunctionInfo, build_callgraph
+from .callgraph import CallGraph, FunctionInfo
+from .dataflow import _graph                                  # noqa: F401
 
 # Attribute reads that are static under tracing (array metadata), so they
 # never carry taint out of a tracer.
@@ -31,21 +32,10 @@ RL001_SCOPE = ("src/repro/serving/engine.py",
                "src/repro/core/collaborative.py",
                "src/repro/models/transformer.py")
 
-_cg_cache: Dict[int, Tuple["Project", CallGraph]] = {}
-
-
-def _graph(project: Project) -> CallGraph:
-    """One cached callgraph per live project. The cache holds a strong
-    reference to the keyed project, so its id() cannot be recycled for a
-    different Project while the entry exists; the identity check guards
-    the swap when a new project arrives."""
-    key = id(project)
-    hit = _cg_cache.get(key)
-    if hit is None or hit[0] is not project:
-        _cg_cache.clear()               # one live project at a time
-        _cg_cache[key] = (project, build_callgraph(project))
-    return _cg_cache[key][1]
-
+# The shared-engine port: the project call graph (and everything layered
+# on it) now lives in repro.analysis.dataflow — `_graph` above is that
+# engine's call-graph accessor, re-exported here because rules_obs and
+# older tests import it from this module.
 
 # ---------------------------------------------------------------------------
 # shared taint machinery

@@ -1,0 +1,328 @@
+"""RL010 — Pallas kernel contracts: the arithmetic ``pallas_call``
+enforces at trace time, checked statically (and a ragged-tail mask check
+trace time cannot do at all).
+
+RL005 guarantees every kernel package has a ``ref.py`` twin and a
+bitwise parity test; RL010 extends "twin exists" to "contract matches".
+For every ``pl.pallas_call`` (including via an assigned
+``PrefetchScalarGridSpec``), with ``P = num_scalar_prefetch``:
+
+1. every ``BlockSpec`` **index map** must take ``len(grid) + P``
+   arguments (grid coordinates plus the prefetched scalar refs; specs
+   without an index map — full-array/SMEM operands — are exempt);
+2. the **kernel signature** must take ``P + len(in_specs) + n_out +
+   len(scratch_shapes)`` positional parameters (resolved through
+   ``functools.partial``);
+3. the **call site** must pass ``P + len(in_specs)`` operands;
+4. ``out_shape`` and ``out_specs`` must agree on the number of outputs;
+5. a scalar-prefetch kernel walks indirection lists (CSR page tables)
+   whose last grid axis is a *padded upper bound* — the kernel must
+   compare against the last-axis ``pl.program_id`` (a ``<``/``>``-style
+   bound feeding ``pl.when``/``jnp.where``) or the ragged tail is
+   read unmasked;
+6. each ``out_shape`` dtype written as a dotted expression
+   (``q.dtype``, ``jnp.float32``) must appear in the package's
+   ``ref.py`` — the twin must produce the same output dtype or the
+   bitwise parity test is comparing casts.
+
+Everything is best-effort static: a count that isn't syntactically
+evident (computed grids, ``*specs`` splats) skips the check rather than
+guessing.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import Dict, List, Optional, Tuple
+
+from .core import Finding, Project, Source, call_name, dotted, register
+
+RL010_MARKER = "pallas_call"
+
+
+def _module_defs(tree: ast.AST) -> Dict[str, ast.AST]:
+    return {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _positional_count(fn: ast.AST) -> Optional[int]:
+    a = fn.args
+    if a.vararg is not None:
+        return None                     # *args: count not evident
+    return len(a.posonlyargs) + len(a.args)
+
+
+def _index_map_arity(spec: ast.Call,
+                     defs: Dict[str, ast.AST]) -> Optional[int]:
+    """Arg count of a BlockSpec's index map (None = no map / unknown)."""
+    imap = None
+    if len(spec.args) >= 2:
+        imap = spec.args[1]
+    for kw in spec.keywords:
+        if kw.arg == "index_map":
+            imap = kw.value
+    if imap is None:
+        return None
+    if isinstance(imap, ast.Lambda):
+        return len(imap.args.posonlyargs) + len(imap.args.args)
+    if isinstance(imap, ast.Name) and imap.id in defs:
+        return _positional_count(defs[imap.id])
+    return None
+
+
+def _spec_list(node: Optional[ast.AST]) -> Optional[List[ast.Call]]:
+    """BlockSpec call list from an in_specs/out_specs expression."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Call):
+        return [node]
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out = []
+        for el in node.elts:
+            if not isinstance(el, ast.Call):
+                return None
+            out.append(el)
+        return out
+    return None
+
+
+def _grid_len(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return 1
+    return None
+
+
+def _int_const(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _out_shape_entries(node: Optional[ast.AST]) -> Optional[List[ast.AST]]:
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+class _CallPlan:
+    """Everything statically evident about one pallas_call."""
+
+    def __init__(self):
+        self.kernel: Optional[ast.AST] = None       # resolved def
+        self.kernel_expr: Optional[ast.AST] = None
+        self.grid_len: Optional[int] = None
+        self.prefetch: int = 0
+        self.in_specs: Optional[List[ast.Call]] = None
+        self.out_specs: Optional[List[ast.Call]] = None
+        self.out_shape: Optional[List[ast.AST]] = None
+        self.scratch_n: Optional[int] = 0
+
+
+def _resolve_local(name: str, func: ast.AST) -> Optional[ast.AST]:
+    """Value of the most recent `name = <expr>` assignment in ``func``."""
+    val = None
+    for n in ast.walk(func):
+        if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                and isinstance(n.targets[0], ast.Name) \
+                and n.targets[0].id == name:
+            val = n.value
+    return val
+
+
+def _plan(call: ast.Call, enclosing: ast.AST,
+          defs: Dict[str, ast.AST]) -> _CallPlan:
+    p = _CallPlan()
+    kw = {k.arg: k.value for k in call.keywords if k.arg}
+
+    spec_kw = kw
+    gs = kw.get("grid_spec")
+    if gs is not None:
+        if isinstance(gs, ast.Name):
+            gs = _resolve_local(gs.id, enclosing)
+        if isinstance(gs, ast.Call):
+            spec_kw = {k.arg: k.value for k in gs.keywords if k.arg}
+        else:
+            spec_kw = {}
+    p.grid_len = _grid_len(spec_kw.get("grid"))
+    p.prefetch = _int_const(spec_kw.get("num_scalar_prefetch")) or 0
+    p.in_specs = _spec_list(spec_kw.get("in_specs"))
+    p.out_specs = _spec_list(spec_kw.get("out_specs"))
+    scratch = spec_kw.get("scratch_shapes")
+    p.scratch_n = len(scratch.elts) \
+        if isinstance(scratch, (ast.List, ast.Tuple)) else \
+        (0 if scratch is None else None)
+    p.out_shape = _out_shape_entries(kw.get("out_shape"))
+
+    if call.args:
+        k = call.args[0]
+        p.kernel_expr = k
+        if isinstance(k, ast.Call) and call_name(k) == "partial" \
+                and k.args:
+            k = k.args[0]
+        if isinstance(k, ast.Name) and k.id in defs:
+            p.kernel = defs[k.id]
+    return p
+
+
+def _ragged_masked(kernel: ast.AST, last_axis: int) -> bool:
+    """Does the kernel bound-compare the last grid axis's program id?"""
+    bound_names = set()
+    for n in ast.walk(kernel):
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call) \
+                and call_name(n.value) == "program_id" \
+                and n.value.args \
+                and _int_const(n.value.args[0]) == last_axis:
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    bound_names.add(t.id)
+    for n in ast.walk(kernel):
+        if not isinstance(n, ast.Compare):
+            continue
+        if not any(isinstance(op, (ast.Lt, ast.LtE, ast.Gt, ast.GtE))
+                   for op in n.ops):
+            continue
+        for side in [n.left] + n.comparators:
+            for sub in ast.walk(side):
+                if isinstance(sub, ast.Name) and sub.id in bound_names:
+                    return True
+                if isinstance(sub, ast.Call) \
+                        and call_name(sub) == "program_id" and sub.args \
+                        and _int_const(sub.args[0]) == last_axis:
+                    return True
+    return False
+
+
+def _wrapping_call(tree: ast.AST, inner: ast.Call) -> Optional[ast.Call]:
+    """The ``pl.pallas_call(...)(operands)`` outer call, if present."""
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Call) and n.func is inner:
+            return n
+    return None
+
+
+@register("RL010", "Pallas kernel contract mismatch: index-map arity, "
+                   "kernel/operand counts, out_shape vs out_specs or ref "
+                   "twin dtype, or an unmasked ragged tail")
+def check_kernel_contracts(project: Project) -> List[Finding]:
+    """The grid/BlockSpec/scalar-prefetch arithmetic, statically.
+
+    With ``P = num_scalar_prefetch``: index maps take ``len(grid) + P``
+    args, the kernel takes ``P + len(in_specs) + n_out + n_scratch``
+    positional params, the call site passes ``P + len(in_specs)``
+    operands, ``out_shape`` matches ``out_specs``, scalar-prefetch
+    kernels must bound-compare the last grid axis's ``program_id``
+    (ragged-tail mask), and every dotted ``out_shape`` dtype must appear
+    in the package's ``ref.py`` twin. Counts that aren't syntactically
+    evident skip their check."""
+    findings: List[Finding] = []
+    for src in project.under("src/repro"):
+        if RL010_MARKER not in src.text:
+            continue
+        defs = _module_defs(src.tree)
+        ref_text = None
+        pkg = PurePosixPath(src.rel).parent
+        ref_rel = (pkg / "ref.py").as_posix()
+        if project.exists(ref_rel) and src.rel != ref_rel:
+            ref_src = project.get(ref_rel)
+            ref_text = ref_src.text if ref_src is not None else \
+                (project.root / ref_rel).read_text()
+
+        for qual, fn in [(n.name, n) for n in ast.walk(src.tree)
+                         if isinstance(n, ast.FunctionDef)]:
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call) \
+                        or call_name(call) != "pallas_call":
+                    continue
+                p = _plan(call, fn, defs)
+                line = call.lineno
+
+                # 1. index-map arity
+                if p.grid_len is not None:
+                    want = p.grid_len + p.prefetch
+                    for spec in (p.in_specs or []) + (p.out_specs or []):
+                        got = _index_map_arity(spec, defs)
+                        if got is not None and got != want:
+                            findings.append(Finding(
+                                "RL010", src.rel, spec.lineno,
+                                f"BlockSpec index map takes {got} args "
+                                f"but the grid has {p.grid_len} dims + "
+                                f"{p.prefetch} scalar-prefetch refs "
+                                f"(want {want})", qual))
+
+                # 4. out_shape vs out_specs count
+                n_out = None
+                if p.out_specs is not None:
+                    n_out = len(p.out_specs)
+                    if p.out_shape is not None \
+                            and len(p.out_shape) != n_out:
+                        findings.append(Finding(
+                            "RL010", src.rel, line,
+                            f"out_shape declares {len(p.out_shape)} "
+                            f"output(s) but out_specs declares {n_out}",
+                            qual))
+                elif p.out_shape is not None:
+                    n_out = len(p.out_shape)
+
+                # 2. kernel positional-parameter count
+                if p.kernel is not None and n_out is not None \
+                        and p.in_specs is not None \
+                        and p.scratch_n is not None:
+                    want = p.prefetch + len(p.in_specs) + n_out \
+                        + p.scratch_n
+                    got = _positional_count(p.kernel)
+                    if got is not None and got != want:
+                        findings.append(Finding(
+                            "RL010", src.rel, line,
+                            f"kernel '{p.kernel.name}' takes {got} "
+                            f"positional refs but the specs provide "
+                            f"{want} ({p.prefetch} prefetch + "
+                            f"{len(p.in_specs)} in + {n_out} out + "
+                            f"{p.scratch_n} scratch)", qual))
+
+                # 3. call-site operand count
+                outer = _wrapping_call(fn, call)
+                if outer is not None and p.in_specs is not None \
+                        and not any(isinstance(a, ast.Starred)
+                                    for a in outer.args):
+                    want = p.prefetch + len(p.in_specs)
+                    if len(outer.args) != want:
+                        findings.append(Finding(
+                            "RL010", src.rel, outer.lineno,
+                            f"pallas_call invoked with "
+                            f"{len(outer.args)} operand(s) but the "
+                            f"specs expect {want} ({p.prefetch} "
+                            f"prefetch + {len(p.in_specs)} inputs)",
+                            qual))
+
+                # 5. ragged-tail mask for scalar-prefetch kernels
+                if p.prefetch > 0 and p.grid_len is not None \
+                        and p.kernel is not None \
+                        and not _ragged_masked(p.kernel, p.grid_len - 1):
+                    findings.append(Finding(
+                        "RL010", src.rel, line,
+                        f"scalar-prefetch kernel "
+                        f"'{p.kernel.name}' never bound-compares "
+                        f"program_id({p.grid_len - 1}): the padded last "
+                        f"axis's ragged tail is read unmasked", qual))
+
+                # 6. out_shape dtype vs the ref twin
+                if ref_text is not None and p.out_shape is not None:
+                    for entry in p.out_shape:
+                        if not isinstance(entry, ast.Call):
+                            continue
+                        dt = entry.args[1] if len(entry.args) >= 2 \
+                            else next((k.value for k in entry.keywords
+                                       if k.arg == "dtype"), None)
+                        d = dotted(dt) if dt is not None else None
+                        if d is not None and d not in ref_text:
+                            findings.append(Finding(
+                                "RL010", src.rel, entry.lineno,
+                                f"out_shape dtype '{d}' never appears "
+                                f"in the package's ref.py twin: the "
+                                f"bitwise parity test is comparing "
+                                f"casts", qual))
+    return findings

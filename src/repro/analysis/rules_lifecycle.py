@@ -1,0 +1,369 @@
+"""RL008 — resource-lifecycle pairing on every path, exception paths
+included.
+
+The serving stack's refcounted resources follow three pairing shapes,
+and the rule checks each with the cheapest analysis that is sound for
+it:
+
+**Path mode** (CFG + summaries) — acquires whose result is a value the
+acquirer must either release or hand off: ``kv_pool.alloc_prompt`` (a
+page table), a pool ``fork`` (a child table), and any project function
+that *propagates* an acquire by returning it (``start_prefill`` returns
+a ticket carrying ``alloc_prompt``'s table, so its callers inherit the
+obligation — computed, not hand-listed). From the acquire statement,
+every CFG path — normal and exceptional — must reach a discharge before
+leaving the function:
+
+* a **release** call (``free`` / ``abort_ticket``) taking the resource:
+  absorbs the path entirely;
+* an **escape** — stored into ``self.*``/a global, or passed whole to a
+  callee whose summary stores/returns/releases it (ownership moved to a
+  longer-lived frame), or passed to a callee this project doesn't
+  define (assumed to keep it);
+* a ``return``/``yield`` carrying the resource — but only on the
+  statement's *fall-through* edge: ``return self._open_ticket(...,
+  table, ...)`` raising mid-call has not escaped the table, which is
+  exactly the page-leak class PR 7 fixed by hand.
+
+One guard's worth of path-sensitivity rides the walk: an ``if`` arm the
+``None``-ness of the resource proves impossible is skipped, so the
+canonical handler ``except BaseException: if table is not None:
+free(table); raise`` verifies instead of flagging its own guard.
+
+**Sequence mode** — ``prepare_append`` stages pool mutations that
+``commit_append`` lands; the plan is consumed within the step, so the
+contract is lexical: a function calling ``prepare_append`` must call
+``commit_append`` further down the same function (the calls sit in
+separate per-slot loops, which path mode would over-flag).
+
+**Component mode** — ``claim_slot``/``release_slot`` and
+``reserve``/``land`` pair across functions and ticks by design
+(claim at admission, release at retire/cancel). Statically checkable:
+the release side must exist *somewhere* in the project — an acquire
+with no matching release call anywhere is dead pinned memory.
+
+Provider files (``serving/kv_pool.py``, ``core/cache.py``,
+``core/policies.py``) implement the lifecycle and are exempt — the rule
+governs consumers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .callgraph import CallSite, FunctionInfo
+from .cfg import EXIT, RAISED, build_cfg, header_exprs, reaches_terminal
+from .core import Finding, Project, call_name, dotted, register
+from .dataflow import Analysis, analysis
+from .summaries import alias_closure, bare_names
+
+# acquires checked in path mode: trailing call name -> needs pool base?
+PATH_ACQUIRES = {"alloc_prompt": False, "fork": True}
+# discharge calls for path mode: passing the resource here releases it
+RELEASES = ("free", "abort_ticket")
+# lexical pairs: staged call -> the landing call later in the function
+SEQ_PAIRS = {"prepare_append": "commit_append"}
+# cross-function pairs: acquire call name -> release call name that must
+# exist somewhere in the analyzed tree
+COMPONENT_PAIRS = {"claim_slot": "release_slot", "reserve": "land"}
+
+PROVIDER_SUFFIXES = ("serving/kv_pool.py", "core/cache.py",
+                     "core/policies.py")
+
+RL008_PREFIX = "src/repro"
+
+
+def _is_provider(rel: str) -> bool:
+    return rel.endswith(PROVIDER_SUFFIXES)
+
+
+def _acquire_call(expr: ast.AST,
+                  propagated: Set[str]) -> Optional[ast.Call]:
+    """The path-mode acquire Call inside ``expr``, if any."""
+    for n in ast.walk(expr):
+        if not isinstance(n, ast.Call):
+            continue
+        name = call_name(n)
+        if name is None:
+            continue
+        if name in propagated:
+            return n
+        needs_pool = PATH_ACQUIRES.get(name)
+        if needs_pool is None:
+            continue
+        if needs_pool:
+            base = dotted(n.func.value) \
+                if isinstance(n.func, ast.Attribute) else None
+            if base is None or "pool" not in base.lower():
+                continue
+        return n
+    return None
+
+
+def _bound_name(stmt: ast.AST, acq: ast.Call) -> Optional[str]:
+    """The local name the acquire's result is bound to: ``x = acq()`` or
+    ``x, y = acq()`` (first element carries the resource — the repo's
+    tuple-returning acquires put the table first)."""
+    if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1 \
+            or stmt.value is not acq:
+        return None
+    tgt = stmt.targets[0]
+    if isinstance(tgt, ast.Tuple) and tgt.elts:
+        tgt = tgt.elts[0]
+    return tgt.id if isinstance(tgt, ast.Name) else None
+
+
+def _propagated_acquires(an: Analysis) -> Set[str]:
+    """Names of project functions that return a fresh acquire (bare, or
+    bare inside the returned call's arguments) — their callers inherit
+    the release obligation. Fixpoint, so a wrapper of a wrapper
+    propagates too."""
+    out: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for (file, qual), fi in an.graph.functions.items():
+            if not file.startswith(RL008_PREFIX) or _is_provider(file):
+                continue
+            if fi.name in out:
+                continue
+            bound: Set[str] = set()
+            for stmt in ast.walk(fi.node):
+                if isinstance(stmt, ast.Assign):
+                    acq = _acquire_call(stmt.value, out)
+                    if acq is not None:
+                        b = _bound_name(stmt, acq)
+                        if b:
+                            bound.add(b)
+            if not bound:
+                continue
+            for stmt in ast.walk(fi.node):
+                if isinstance(stmt, ast.Return) and stmt.value is not None \
+                        and bare_names(stmt.value) & bound:
+                    out.add(fi.name)
+                    changed = True
+                    break
+    return out
+
+
+def _names_in(expr: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def _classify_discharge(an: Analysis, fi: FunctionInfo, stmt: ast.AST,
+                        aliases: Set[str]) -> Optional[str]:
+    """How ``stmt`` discharges the tracked resource: ``"always"`` (path
+    absorbed), ``"normal"`` (fall-through only; exception edge stays
+    live), or None."""
+    exprs = header_exprs(stmt)
+    if not exprs:
+        return None
+
+    # (a) release call taking the resource — absorbs
+    for e in exprs:
+        for n in ast.walk(e):
+            if isinstance(n, ast.Call) and call_name(n) in RELEASES:
+                args = list(n.args) + [kw.value for kw in n.keywords]
+                if any(_names_in(a) & aliases for a in args):
+                    return "always"
+
+    # (e) rebind of the tracked name — tracking ends
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+        tgt = stmt.targets[0]
+        if isinstance(tgt, ast.Name) and tgt.id in aliases \
+                and not (_names_in(stmt.value) & aliases):
+            return "always"
+
+    # (c) returned/yielded — escapes only if the statement completes
+    if isinstance(stmt, ast.Return) or (isinstance(stmt, ast.Expr)
+                                        and isinstance(stmt.value,
+                                                       ast.Yield)):
+        val = stmt.value if isinstance(stmt, ast.Return) \
+            else stmt.value.value
+        if val is not None and _names_in(val) & aliases:
+            return "normal"
+
+    # (b) stored into self.* / a global container
+    if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        if stmt.value is not None and _names_in(stmt.value) & aliases:
+            for t in targets:
+                root = t
+                while isinstance(root, (ast.Subscript, ast.Attribute)):
+                    root = root.value
+                if isinstance(t, (ast.Subscript, ast.Attribute)) \
+                        and isinstance(root, ast.Name) \
+                        and root.id == "self":
+                    return "always"
+
+    # (d) passed whole to a callee that keeps or releases it
+    for e in exprs:
+        if isinstance(stmt, ast.Return):
+            break       # a raising return escaped nothing — (c) covers it
+        for n in ast.walk(e):
+            if not isinstance(n, ast.Call):
+                continue
+            cname = call_name(n)
+            if cname is None:
+                continue
+            hit = any(isinstance(a, ast.Name) and a.id in aliases
+                      for a in n.args) \
+                or any(isinstance(kw.value, ast.Name)
+                       and kw.value.id in aliases for kw in n.keywords)
+            if not hit:
+                continue
+            base = dotted(n.func.value) \
+                if isinstance(n.func, ast.Attribute) else None
+            site = CallSite(cname, n.lineno, base, n)
+            cands = an.graph.resolve_site(fi.file, fi.qualname, site)
+            if not cands:
+                return "always"         # unknown callee keeps it
+            for c in cands:
+                for i, a in enumerate(n.args):
+                    if isinstance(a, ast.Name) and a.id in aliases:
+                        cp = an._callee_param(c, i, None, base is not None)
+                        if cp is not None and (
+                                an.param_escapes(c, cp)
+                                or an.param_released_by(c, cp, RELEASES)):
+                            return "always"
+                for kw in n.keywords:
+                    if isinstance(kw.value, ast.Name) \
+                            and kw.value.id in aliases and kw.arg:
+                        cp = an._callee_param(c, -1, kw.arg,
+                                              base is not None)
+                        if cp is not None and (
+                                an.param_escapes(c, cp)
+                                or an.param_released_by(c, cp, RELEASES)):
+                            return "always"
+    return None
+
+
+def _none_branch_skips(cfg, aliases: Set[str]) -> Dict[int, int]:
+    """For each ``if`` on the resource's None-ness, the branch entry that
+    is impossible while the resource is live (it was just acquired, so it
+    is not None)."""
+    skips: Dict[int, int] = {}
+    for i, (body, orelse) in cfg.if_branches.items():
+        test = cfg.stmts[i].test
+        skip_none_arm = None
+        if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+                and isinstance(test.comparators[0], ast.Constant) \
+                and test.comparators[0].value is None \
+                and isinstance(test.left, ast.Name) \
+                and test.left.id in aliases:
+            if isinstance(test.ops[0], ast.Is):
+                skip_none_arm = body        # `if r is None:` body arm
+            elif isinstance(test.ops[0], ast.IsNot):
+                skip_none_arm = orelse      # `if r is not None:` else arm
+        elif isinstance(test, ast.Name) and test.id in aliases:
+            skip_none_arm = orelse          # `if r:` else arm
+        elif isinstance(test, ast.UnaryOp) \
+                and isinstance(test.op, ast.Not) \
+                and isinstance(test.operand, ast.Name) \
+                and test.operand.id in aliases:
+            skip_none_arm = body            # `if not r:` body arm
+        if skip_none_arm is not None:
+            skips[i] = skip_none_arm
+    return skips
+
+
+@register("RL008", "resource acquire (alloc_prompt/fork/prepare_append/"
+                   "claim_slot/reserve) not released or handed off on "
+                   "every outgoing path, exception paths included")
+def check_lifecycle(project: Project) -> List[Finding]:
+    """Every refcounted acquire must be *dominated by* its release.
+
+    Path mode walks the acquiring function's CFG (exception edges
+    included) and demands a discharge — a ``free``/``abort_ticket``
+    release, an escape into ``self.*``/a keeping callee, or a completed
+    ``return`` carrying the resource — on every route out of the
+    function. Acquire-returning wrappers (``start_prefill``) propagate
+    the obligation to their callers through the call graph. Sequence
+    mode requires ``commit_append`` lexically after ``prepare_append``
+    in the same function; component mode requires the project to contain
+    the paired release (``release_slot`` for ``claim_slot``, ``land``
+    for ``reserve``) somewhere. Provider files implementing the pools
+    are exempt."""
+    an = analysis(project)
+    findings: List[Finding] = []
+    propagated = _propagated_acquires(an)
+
+    # ---- path mode -------------------------------------------------------
+    for (file, qual), fi in sorted(an.graph.functions.items()):
+        if not file.startswith(RL008_PREFIX) or _is_provider(file):
+            continue
+        cfg = an.cfg(fi)
+        for i, stmt in enumerate(cfg.stmts):
+            acq = None
+            for e in header_exprs(stmt):
+                acq = _acquire_call(e, propagated)
+                if acq is not None:
+                    break
+            if acq is None:
+                continue
+            bound = _bound_name(stmt, acq)
+            if bound is None:
+                continue    # result escapes immediately (returned/stored)
+            aliases = alias_closure(fi.node, {bound})
+            blocked_always: Set[int] = {i}
+            blocked_normal: Set[int] = set()
+            for j, other in enumerate(cfg.stmts):
+                if j == i:
+                    continue
+                kind = _classify_discharge(an, fi, other, aliases)
+                if kind == "always":
+                    blocked_always.add(j)
+                elif kind == "normal":
+                    blocked_normal.add(j)
+            term = reaches_terminal(
+                cfg, set(cfg.succ_normal.get(i, ())), blocked_always,
+                blocked_normal, _none_branch_skips(cfg, aliases))
+            if term is not None:
+                route = "an exception path" if term == RAISED \
+                    else "a fall-through path"
+                findings.append(Finding(
+                    "RL008", file, acq.lineno,
+                    f"'{call_name(acq)}' result '{bound}' may leak on "
+                    f"{route}: no release (free/abort_ticket) or "
+                    f"ownership hand-off dominates every exit", qual))
+
+    # ---- sequence mode ---------------------------------------------------
+    for (file, qual), sites in sorted(an.graph.call_sites.items()):
+        if not file.startswith(RL008_PREFIX) or _is_provider(file):
+            continue
+        for s in sites:
+            landing = SEQ_PAIRS.get(s.name)
+            if landing is None:
+                continue
+            if not any(t.name == landing and t.line > s.line
+                       for t in sites):
+                findings.append(Finding(
+                    "RL008", file, s.line,
+                    f"'{s.name}' staged with no '{landing}' later in the "
+                    f"same function: staged pool mutations never land",
+                    qual))
+
+    # ---- component mode --------------------------------------------------
+    released: Set[str] = set()
+    acq_sites: Dict[str, List[Tuple[str, str, int]]] = {}
+    for (file, qual), sites in sorted(an.graph.call_sites.items()):
+        if not file.startswith(RL008_PREFIX) or _is_provider(file):
+            continue
+        for s in sites:
+            if s.name in COMPONENT_PAIRS:
+                acq_sites.setdefault(s.name, []).append(
+                    (file, qual, s.line))
+            if s.name in COMPONENT_PAIRS.values():
+                released.add(s.name)
+    for acq_name, sites_ in sorted(acq_sites.items()):
+        rel_name = COMPONENT_PAIRS[acq_name]
+        if rel_name in released:
+            continue
+        for file, qual, line in sites_:
+            findings.append(Finding(
+                "RL008", file, line,
+                f"'{acq_name}' is called but '{rel_name}' appears nowhere "
+                f"in the project: acquired resources are never returned",
+                qual))
+    return findings

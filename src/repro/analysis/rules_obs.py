@@ -17,7 +17,8 @@ from typing import List, Set, Tuple
 
 from .core import Finding, Project, call_name, register
 from .callgraph import FunctionInfo
-from .rules_jax import HOT_ENTRIES, HOT_SANCTIONED, HOT_STOP, _graph
+from .dataflow import _graph
+from .rules_jax import HOT_ENTRIES, HOT_SANCTIONED, HOT_STOP
 
 # the TraceRecorder emission surface (NoopRecorder mirrors it); reading
 # the clock (now_ns) and feeding histograms (LogHistogram.observe) are
@@ -27,7 +28,7 @@ EMISSION_CALLS = ("complete", "instant", "counter", "span")
 
 @register("RL007", "repro.obs emission call reachable from the jitted "
                    "call graph or the host hot path outside an _obs_* "
-                   "drain helper")
+                   "drain helper", severity="warning")
 def rl007_emission_outside_drain(project: Project) -> List[Finding]:
     """RL007: a ``repro.obs`` emission call (``.complete()`` /
     ``.instant()`` / ``.counter()`` / ``.span()``) may only run at a

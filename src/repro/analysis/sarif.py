@@ -1,0 +1,78 @@
+"""Minimal SARIF 2.1.0 writer for reprolint findings.
+
+SARIF is the interchange format code-scanning UIs ingest; emitting it
+lets CI annotate PR diffs with findings instead of burying them in a log.
+Only *new* findings are emitted (grandfathered ones are accepted debt,
+not review feedback). The shape is the minimal valid subset:
+
+* ``tool.driver.rules`` — one descriptor per registered rule, in id
+  order; ``results[].ruleIndex`` points into it;
+* ``results[].level`` — the rule's severity (``error``/``warning``/
+  ``note``), reporting metadata only: CI fails on any new finding;
+* ``partialFingerprints`` — the baseline's line-number-free identity,
+  so scanning UIs track a finding across unrelated edits exactly like
+  the baseline does.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from .core import Finding, RULES
+
+__all__ = ["sarif_report"]
+
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
+SARIF_VERSION = "2.1.0"
+
+
+def sarif_report(findings: List[Finding]) -> Dict:
+    """A SARIF 2.1.0 ``log`` dict for the given (new) findings."""
+    rule_ids = sorted(RULES)
+    index = {rid: i for i, rid in enumerate(rule_ids)}
+    rules = [{
+        "id": rid,
+        "shortDescription": {"text": RULES[rid].summary},
+        "defaultConfiguration": {"level": RULES[rid].severity},
+    } for rid in rule_ids]
+
+    results = []
+    for f in sorted(findings, key=lambda f: (f.file, f.line, f.rule,
+                                             f.message)):
+        rule = RULES.get(f.rule)
+        results.append({
+            "ruleId": f.rule,
+            "ruleIndex": index.get(f.rule, -1),
+            "level": rule.severity if rule is not None else "error",
+            "message": {"text": f.message},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": f.file},
+                    "region": {"startLine": f.line},
+                },
+                "logicalLocations": ([{"name": f.symbol}]
+                                     if f.symbol else []),
+            }],
+            "partialFingerprints": {
+                "reprolintKey/v1": "\t".join(f.key()),
+            },
+        })
+
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {"driver": {
+                "name": "reprolint",
+                "informationUri":
+                    "src/repro/analysis/README.md",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }
+
+
+def write_sarif(path, findings: List[Finding]) -> None:
+    path.write_text(json.dumps(sarif_report(findings), indent=2) + "\n")

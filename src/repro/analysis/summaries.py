@@ -1,0 +1,203 @@
+"""Per-function dataflow summaries: how parameters and attributes flow.
+
+A summary answers, for one function, the questions an *interprocedural*
+rule asks at a call site without re-reading the callee's body:
+
+* does parameter ``p`` **escape** — get stored into ``self.*`` / a
+  global, or appear in a returned/yielded value?
+* which callees is ``p`` **passed to** (bare, as a whole object), at
+  which argument position — so escape/release questions recurse through
+  the call graph;
+* which ``self.`` attributes does the function write and read.
+
+Aliasing is intra-function and assignment-shaped only: ``x = p``,
+``x = p.attr``, ``x = p[i]`` (and their tuple-unpack forms) make ``x``
+carry ``p``'s flow; a call result is always a *fresh* value
+(``x = f(p)`` does NOT alias ``x`` to ``p``) — without that cut every
+token derived from a ticket would "escape" the ticket and the lifecycle
+rule could never fire. The transitive closure over calls (escape through
+a callee that stores its own parameter) is taken by
+:class:`repro.analysis.dataflow.Analysis`, which owns the memoized
+fixpoint; this module is purely syntactic.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import call_name, dotted
+
+__all__ = ["PassSite", "FunctionSummary", "summarize", "alias_closure",
+           "bare_names"]
+
+
+@dataclass(frozen=True)
+class PassSite:
+    """Parameter (or one of its aliases) passed whole to another call:
+    callee trailing name, dotted base of the callee expression, and the
+    argument slot it landed in (position, or keyword name)."""
+    callee: str
+    base: Optional[str]
+    pos: int                    # -1 when passed by keyword
+    keyword: Optional[str]
+
+
+@dataclass
+class FunctionSummary:
+    file: str
+    qualname: str
+    node: ast.AST
+    params: List[str] = field(default_factory=list)
+    # params whose alias is stored into self.* / a declared global
+    param_stored: Set[str] = field(default_factory=set)
+    # params whose alias appears in a return/yield value
+    param_returned: Set[str] = field(default_factory=set)
+    param_passed: Dict[str, List[PassSite]] = field(default_factory=dict)
+    attr_writes: Dict[str, List[int]] = field(default_factory=dict)
+    attr_reads: Set[str] = field(default_factory=set)
+
+
+def bare_names(expr: ast.AST) -> Set[str]:
+    """Names appearing *whole* in ``expr`` — as themselves or as the base
+    of a subscript, but NOT as the base of an attribute access: in
+    ``f(ticket.logits)`` the ticket's payload is read, the ticket object
+    itself does not flow."""
+    attr_bases = set()
+    sub_bases = set()
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name):
+            attr_bases.add(id(n.value))
+        elif isinstance(n, ast.Subscript) and isinstance(n.value, ast.Name):
+            sub_bases.add(id(n.value))
+    return {n.id for n in ast.walk(expr)
+            if isinstance(n, ast.Name) and id(n) not in attr_bases}
+
+
+def _alias_pairs(stmt: ast.AST):
+    """(target-name, value-expr) pairs from plain/tuple assignments."""
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+        tgt, val = stmt.targets[0], stmt.value
+        if isinstance(tgt, ast.Name):
+            yield tgt.id, val
+        elif isinstance(tgt, ast.Tuple) and isinstance(val, ast.Tuple) \
+                and len(tgt.elts) == len(val.elts):
+            for t, v in zip(tgt.elts, val.elts):
+                if isinstance(t, ast.Name):
+                    yield t.id, v
+    elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+            and isinstance(stmt.target, ast.Name):
+        yield stmt.target.id, stmt.value
+
+
+def _is_direct_alias(value: ast.AST, of: Set[str]) -> bool:
+    """True iff ``value`` is ``x`` / ``x.attr...`` / ``x[i]...`` for some
+    tracked name ``x`` — calls cut the alias chain."""
+    node = value
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id in of
+
+
+def alias_closure(func: ast.AST, seeds: Set[str]) -> Set[str]:
+    """Flow-insensitive closure of ``seeds`` under direct-alias
+    assignments anywhere in ``func`` (nested defs included — a closure
+    capturing the resource still holds it)."""
+    names = set(seeds)
+    changed = True
+    while changed:
+        changed = False
+        for stmt in ast.walk(func):
+            for tgt, val in _alias_pairs(stmt):
+                if tgt not in names and _is_direct_alias(val, names):
+                    names.add(tgt)
+                    changed = True
+    return names
+
+
+def summarize(file: str, qualname: str, func: ast.AST) -> FunctionSummary:
+    s = FunctionSummary(file, qualname, func)
+    a = func.args
+    s.params = [p.arg for p in a.posonlyargs + a.args] \
+        + [p.arg for p in a.kwonlyargs]
+
+    own_globals: Set[str] = set()
+    for stmt in ast.walk(func):
+        if isinstance(stmt, (ast.Global, ast.Nonlocal)):
+            own_globals.update(stmt.names)
+
+    # self.* attribute effects (writes keep lines — RL009 anchors there)
+    for n in ast.walk(func):
+        if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+            for t in targets:
+                base = t
+                while isinstance(base, ast.Subscript):
+                    base = base.value
+                if isinstance(base, ast.Attribute) \
+                        and isinstance(base.value, ast.Name) \
+                        and base.value.id == "self":
+                    s.attr_writes.setdefault(base.attr, []).append(n.lineno)
+        elif isinstance(n, ast.Attribute) \
+                and isinstance(n.ctx, ast.Load) \
+                and isinstance(n.value, ast.Name) and n.value.id == "self":
+            s.attr_reads.add(n.attr)
+
+    for p in s.params:
+        if p == "self":
+            continue
+        aliases = alias_closure(func, {p})
+        stored = returned = False
+        passed: List[PassSite] = []
+        def touches(expr: Optional[ast.AST]) -> bool:
+            # loose: any alias name anywhere, attr/subscript reads
+            # included — storing or returning a *part* of the object
+            # still hands its ownership out of this frame
+            return expr is not None and any(
+                isinstance(x, ast.Name) and x.id in aliases
+                for x in ast.walk(expr))
+
+        for n in ast.walk(func):
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = n.targets if isinstance(n, ast.Assign) \
+                    else [n.target]
+                if not touches(n.value):
+                    continue
+                for t in targets:
+                    root = t
+                    while isinstance(root, (ast.Subscript, ast.Attribute)):
+                        root = root.value
+                    # escape = stored reachable from outside this frame:
+                    # a self attribute or a declared global — mutating an
+                    # attribute OF the parameter itself is not an escape
+                    if isinstance(root, ast.Name) and isinstance(
+                            t, (ast.Subscript, ast.Attribute)) \
+                            and (root.id == "self"
+                                 or root.id in own_globals):
+                        stored = True
+                    elif isinstance(root, ast.Name) \
+                            and root.id in own_globals:
+                        stored = True
+            elif isinstance(n, (ast.Return, ast.Yield)) \
+                    and touches(n.value):
+                returned = True
+            elif isinstance(n, ast.Call):
+                cname = call_name(n)
+                if cname is None:
+                    continue
+                base = dotted(n.func.value) \
+                    if isinstance(n.func, ast.Attribute) else None
+                for i, arg in enumerate(n.args):
+                    if isinstance(arg, ast.Name) and arg.id in aliases:
+                        passed.append(PassSite(cname, base, i, None))
+                for kw in n.keywords:
+                    if isinstance(kw.value, ast.Name) \
+                            and kw.value.id in aliases and kw.arg:
+                        passed.append(PassSite(cname, base, -1, kw.arg))
+        if stored:
+            s.param_stored.add(p)
+        if returned:
+            s.param_returned.add(p)
+        if passed:
+            s.param_passed[p] = passed
+    return s

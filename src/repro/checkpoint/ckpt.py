@@ -137,7 +137,7 @@ class CheckpointManager:
                 save_checkpoint(self.dir, step, host_tree)
                 self._gc()
             except BaseException as e:  # noqa: BLE001 — surfaced on wait()
-                self._error = e
+                self._error = e  # reprolint: shared[atomic] wait() joins the thread before reading — the join is the happens-before edge
 
         if self.async_save:
             self._thread = threading.Thread(target=work, daemon=True)

@@ -137,7 +137,7 @@ class HostExpertExecutor:
                     xs, self.w3[layer, es])
                 out[small] = np.matmul(h, self.w2[layer, es])
                 self.fused += int(small.size)
-                self.busy_ns += time.perf_counter_ns() - t0
+                self.busy_ns += time.perf_counter_ns() - t0  # reprolint: shared[atomic] telemetry floor — a torn add undercounts one lane's ns, never corrupts dispatch
 
             def one(g: int) -> None:
                 e = int(rep_e[g])
@@ -166,7 +166,7 @@ class HostExpertExecutor:
                     t0 = time.perf_counter_ns()
                     for g in groups:
                         one(g)
-                    self.busy_ns += time.perf_counter_ns() - t0
+                    self.busy_ns += time.perf_counter_ns() - t0  # reprolint: shared[atomic] telemetry floor — workers race this add; GIL keeps it a lost-update, not corruption
 
                 if eff > 1:
                     live = [bk for bk in buckets if bk]
@@ -179,7 +179,7 @@ class HostExpertExecutor:
                 t0 = time.perf_counter_ns()
                 for g in big:
                     one(g)
-                self.busy_ns += time.perf_counter_ns() - t0
+                self.busy_ns += time.perf_counter_ns() - t0  # reprolint: shared[atomic] telemetry floor — submitting-thread write racing the worker lane's adds
         self.calls += 1
         self.groups += int(todo.size)
         return out.astype(xbuf.dtype)

@@ -84,6 +84,16 @@ def main() -> None:
     ap.add_argument("--host-threads", type=int, default=8,
                     help="host executor threads (also the cost model's "
                          "OMP thread count)")
+    ap.add_argument("--host-fuse-small", type=int, default=4,
+                    help="batch same-step CPU-miss groups with at most "
+                         "this many valid tokens into one stacked numpy "
+                         "matmul instead of one pool task each (0 = "
+                         "never fuse)")
+    ap.add_argument("--no-prefetch-rank-votes", action="store_false",
+                    dest="prefetch_rank_votes",
+                    help="disable vote-count ranking of speculative "
+                         "prefetch reservations (default: experts many "
+                         "rows predict claim cache ways first)")
     ap.add_argument("--host-backend", default="callback",
                     choices=["callback", "jax"],
                     help="host lane: real numpy thread pool (callback) or "
@@ -163,9 +173,11 @@ def main() -> None:
                          admit_chunks_per_tick=args.admit_chunks_per_tick,
                          prefetch=prefetch,
                          prefetch_min_prob=args.prefetch_min_prob,
+                         prefetch_rank_votes=args.prefetch_rank_votes,
                          host_compute=args.host_compute,
                          host_threads=args.host_threads,
                          host_backend=args.host_backend,
+                         host_fuse_small=args.host_fuse_small,
                          kv_paged=args.kv_paged,
                          page_size=args.page_size,
                          kv_pages=args.kv_pages,

@@ -681,6 +681,22 @@ class CollaborativeEngine:
             self._slot_tables[slot] = None
             self._slot_pages[slot] = self.num_pages
 
+    def abort_ticket(self, ticket: "PrefillTicket") -> None:
+        """Release an open ticket's page table after a failed admission —
+        the exception-path twin of :meth:`bind_slot`. Idempotent and
+        double-free safe: the ticket's table is taken exactly once, any
+        slot already claiming it (a segment-streamed admission claims
+        before draining) is unbound first, and dense tickets are a
+        no-op."""
+        table, ticket.table = ticket.table, None
+        if table is None or self.kv_pool is None:
+            return
+        for i, t in enumerate(self._slot_tables):
+            if t is table:
+                self._slot_tables[i] = None
+                self._slot_pages[i] = self.num_pages
+        self.kv_pool.free(table)
+
     def fork_slot(self, batch_state: Params, src: int, dst: int,
                   total_tokens: int) -> Params:
         """Clone slot ``src``'s sequence into free slot ``dst`` sharing
@@ -1054,7 +1070,11 @@ class CollaborativeEngine:
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         ticket = self.start_prefill(prompt, chunk)
-        self.advance_prefill(ticket, ticket.n_chunks)
+        try:
+            self.advance_prefill(ticket, ticket.n_chunks)
+        except BaseException:
+            self.abort_ticket(ticket)
+            raise
         return ticket.logits, ticket.state
 
     def sample_first(self, ticket: "PrefillTicket",
@@ -1085,8 +1105,12 @@ class CollaborativeEngine:
         primitives directly instead."""
         self._require_dense("prefill_request")
         ticket = self.start_prefill(prompt)
-        self.advance_prefill(ticket, ticket.n_chunks)
-        tok = self.sample_first(ticket, sampling, key)
+        try:
+            self.advance_prefill(ticket, ticket.n_chunks)
+            tok = self.sample_first(ticket, sampling, key)
+        except BaseException:
+            self.abort_ticket(ticket)
+            raise
         return tok, ticket.state
 
     # -- vectorized per-slot sampling --------------------------------------

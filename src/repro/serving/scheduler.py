@@ -56,6 +56,7 @@ compiles exactly once per (T, capacity) geometry.
 """
 from __future__ import annotations
 
+import os
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, Iterator, List, Optional, \
@@ -185,6 +186,11 @@ class ContinuousBatchingScheduler:
         # never loses a token or a terminal done=True
         self._pending_events: List[StreamEvent] = []
         self._pending_done: List[Request] = []
+        # REPRO_DEBUG_INVARIANTS=1: audit the page pool's refcount/free-
+        # list/prefix-index invariants after every tick (tests set this;
+        # production leaves it off — the audit walks the whole pool)
+        self._debug_invariants = \
+            os.environ.get("REPRO_DEBUG_INVARIANTS") == "1"
 
     def _split(self):
         self._key, sub = jax.random.split(self._key)
@@ -450,9 +456,17 @@ class ContinuousBatchingScheduler:
                     self.slots[t] = req
                     self._tickets[t] = ticket
                     continue
-                first_tok = self.engine.sample_first(
-                    ticket, req.sampling, key=jax.random.fold_in(base, 0))
-                self.state = self.engine.bind_slot(self.state, ticket, t)
+                try:
+                    first_tok = self.engine.sample_first(
+                        ticket, req.sampling,
+                        key=jax.random.fold_in(base, 0))
+                    self.state = self.engine.bind_slot(self.state, ticket, t)
+                except BaseException:
+                    # the ticket's pages are allocated but not yet bound
+                    # to the slot: release them or a failed admission
+                    # leaks the table
+                    self.engine.abort_ticket(ticket)
+                    raise
                 # claim the slot BEFORE the first-token callback fires so
                 # an on_token handler that calls cancel() finds the
                 # request live (cancel then frees the slot right here)
@@ -555,6 +569,8 @@ class ContinuousBatchingScheduler:
                 self._append(req, int(toks[t]), events)
                 self._next[t, 0] = toks[t]
         self._obs_tick(t0, t_adm0, t_adm1, admitted, warming, decoded)
+        if self._debug_invariants and self.engine.kv_pool is not None:
+            self.engine.kv_pool.check_invariants()
         return finished, events
 
     # -- trace drain helpers (the ONLY emission sites; see RL007) ----------

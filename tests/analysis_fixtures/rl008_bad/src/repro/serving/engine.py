@@ -1,0 +1,35 @@
+"""RL008 bad fixture: lifecycle acquires that leak on some path."""
+
+
+class Engine:
+    def leak_on_raise(self):
+        # acquire, then a may-raise call BEFORE the hand-off: the
+        # exception edge leaves the function with the table live
+        table, shared = self.kv_pool.alloc_prompt(self.prompt, 8)
+        self.audit()
+        self._tables[0] = table
+
+    def leak_every_path(self):
+        # acquired and then simply dropped: the fall-through exit leaks
+        table, shared = self.kv_pool.alloc_prompt(self.prompt, 8)
+        return 1
+
+    def sequence_leak(self, slot):
+        # staged pool mutation with no commit_append later in the
+        # function: the plan is built and never lands
+        plan = self.kv_pool.prepare_append(slot)
+        self.log(plan)
+
+    def open_ticket(self):
+        # propagating wrapper: returns the fresh acquire, so callers
+        # inherit the obligation; its own paths are clean (the return
+        # either completes, handing the table off, or raises before the
+        # acquire completes)
+        table, shared = self.kv_pool.alloc_prompt(self.prompt, 8)
+        return table
+
+    def caller_leaks(self):
+        # inherits open_ticket's obligation and drops it: the may-raise
+        # audit() and the bare return both leave the table live
+        table = self.open_ticket()
+        self.audit()

@@ -1,0 +1,11 @@
+"""RL008 bad fixture: component-mode acquire with no release anywhere.
+
+``claim_slot`` is called but ``release_slot`` appears nowhere in the
+project — claimed slots are never returned.
+"""
+
+
+class Scheduler:
+    def admit(self, ticket, slot):
+        self.engine.claim_slot(ticket, slot)
+        self.slots[slot] = ticket

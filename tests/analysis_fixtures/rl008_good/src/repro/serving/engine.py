@@ -1,0 +1,46 @@
+"""RL008 good fixture: every acquire is released or handed off on every
+path, exception paths included."""
+
+
+class Engine:
+    def guarded(self):
+        # the canonical admission pattern: hand off through a wrapper,
+        # release in the handler behind the None-guard (the guard's
+        # else-arm is pruned by the rule's None-ness path-sensitivity)
+        table, shared = self.kv_pool.alloc_prompt(self.prompt, 8)
+        try:
+            return self.open_ticket(table)
+        except BaseException:
+            if table is not None:
+                self.kv_pool.free(table)
+            raise
+
+    def finally_release(self):
+        # a finally-block release discharges the normal AND the
+        # exceptional route out of the audit
+        table, shared = self.kv_pool.alloc_prompt(self.prompt, 8)
+        try:
+            self.audit(table.pages)
+        finally:
+            self.kv_pool.free(table)
+
+    def open_ticket(self, table):
+        # keeps the resource: stores it into self before anything can
+        # raise, so callers' hand-off completes atomically
+        self._tables[0] = table
+        return table
+
+    def caller_stores(self):
+        # inherits no live obligation: the wrapper's result is stored
+        # into self immediately
+        table = self.alloc_wrap()
+        self._tables[1] = table
+
+    def alloc_wrap(self):
+        table, shared = self.kv_pool.alloc_prompt(self.prompt, 8)
+        return table
+
+    def sequence_lands(self, slot):
+        plan = self.kv_pool.prepare_append(slot)
+        self.log(plan)
+        self.kv_pool.commit_append(plan)

@@ -1,0 +1,16 @@
+"""Provider stub (exempt from RL008 — it implements the lifecycle)."""
+
+
+class KVPagePool:
+    def alloc_prompt(self, prompt, total):
+        table = object()
+        return table, 0
+
+    def prepare_append(self, slot):
+        return [slot]
+
+    def commit_append(self, plan):
+        pass
+
+    def free(self, table):
+        pass

@@ -1,0 +1,12 @@
+"""RL008 good fixture: claim/release pair split across functions — the
+component-mode contract (the release exists somewhere in the project)."""
+
+
+class Scheduler:
+    def admit(self, ticket, slot):
+        self.engine.claim_slot(ticket, slot)
+        self.slots[slot] = ticket
+
+    def retire(self, slot):
+        self.engine.release_slot(slot)
+        self.slots[slot] = None

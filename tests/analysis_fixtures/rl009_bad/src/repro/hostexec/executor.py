@@ -1,0 +1,18 @@
+"""RL009 bad fixture: pool-shared attributes written without discipline."""
+
+
+class Executor:
+    def __init__(self, pool):
+        self._pool = pool
+        self.done = 0
+        self.busy_ns = 0
+
+    def run(self, items):
+        def work(g):
+            self.done += 1
+            self.busy_ns += g
+        list(self._pool.map(work, items))
+        self.busy_ns += 1
+
+    def report(self):
+        return self.done, self.busy_ns

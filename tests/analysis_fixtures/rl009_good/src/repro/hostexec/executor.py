@@ -1,0 +1,21 @@
+"""RL009 good fixture: the same shape, disciplined both ways — a lock
+around one shared write, the documented-race annotation on the others."""
+
+
+class Executor:
+    def __init__(self, pool, lock):
+        self._pool = pool
+        self._lock = lock
+        self.done = 0
+        self.busy_ns = 0
+
+    def run(self, items):
+        def work(g):
+            with self._lock:
+                self.done += 1
+            self.busy_ns += g  # reprolint: shared[atomic] telemetry floor — a torn add undercounts, never corrupts
+        list(self._pool.map(work, items))
+        self.busy_ns += 1  # reprolint: shared[atomic] telemetry floor — races the workers' adds by design
+
+    def report(self):
+        return self.done, self.busy_ns

@@ -1,0 +1,45 @@
+"""RL010 bad fixture: every contract-arithmetic failure mode."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def dense_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run_dense(x):
+    # index map takes 3 args vs a 2-dim grid with 0 prefetch;
+    # out_shape declares 1 output vs 2 out_specs; the kernel takes 2
+    # refs vs 1 in + 2 out; bfloat16 never appears in ref.py
+    return pl.pallas_call(
+        dense_kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j, k: (i, j))],
+        out_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+                   pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.bfloat16),
+    )(x)
+
+
+def paged_kernel(s_ref, x_ref, o_ref):
+    # scalar-prefetch kernel with NO bound compare on the last grid
+    # axis's program_id: the padded tail is read unmasked
+    o_ref[...] = x_ref[...]
+
+
+def run_paged(s, x, y):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(2, 3),
+        in_specs=[pl.BlockSpec((8,), lambda p, i, j: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda p, i, j: (i,)),
+        scratch_shapes=[],
+    )
+    # 3 operands vs 1 prefetch + 1 input
+    return pl.pallas_call(
+        paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+    )(s, x, y)

@@ -1,0 +1,11 @@
+"""Reference twin for the demo kernels (float32 only — the bad kernel's
+bfloat16 out_shape has no counterpart here)."""
+import jax.numpy as jnp
+
+
+def dense_ref(x):
+    return x.astype(jnp.float32)
+
+
+def paged_ref(s, x):
+    return x.astype(jnp.float32)

@@ -1,0 +1,41 @@
+"""RL010 good fixture: contract arithmetic that adds up, a masked
+ragged tail, and the SMEM no-index-map idiom (exempt from arity)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def dense_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run_dense(x):
+    return pl.pallas_call(
+        dense_kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+    )(x)
+
+
+def paged_kernel(s_ref, n_ref, x_ref, m_ref, o_ref):
+    live = pl.program_id(1) < n_ref[0]
+    o_ref[...] = jnp.where(live, x_ref[...] + m_ref[0], 0.0)
+
+
+def run_paged(s, n, x, m):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(2, 3),
+        in_specs=[pl.BlockSpec((8,), lambda p, q, i, j: (i,)),
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((8,), lambda p, q, i, j: (i,)),
+        scratch_shapes=[],
+    )
+    return pl.pallas_call(
+        paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+    )(s, n, x, m)

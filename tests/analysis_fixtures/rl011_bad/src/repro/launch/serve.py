@@ -1,0 +1,14 @@
+"""RL011 bad fixture: a parsed-but-never-read CLI flag."""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--dead-flag", type=int, default=0)
+    args = ap.parse_args()
+    print(args.page_size)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""RL011 bad fixture: an EngineConfig field no surface mentions."""
+from dataclasses import dataclass
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 4
+    page_size: int = 16
+    secret_knob: int = 3

@@ -1,0 +1,14 @@
+"""RL011 good fixture: every flag consumed, every field wired."""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    args = ap.parse_args()
+    print(dict(max_batch=args.max_batch, page_size=args.page_size))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""RL011 good fixture: every field reachable from a surface."""
+from dataclasses import dataclass
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 4
+    page_size: int = 16

@@ -306,3 +306,100 @@ def test_obs_overhead_artifact_shape(tmp_path, monkeypatch):
     assert set(stats["engine"]) == ENGINE_KEYS
     # the executor pool-utilization channel rides in the engine export
     assert {"host_busy_us", "host_queue_peak"} <= set(stats["engine"])
+
+
+# -- reprolint CI artifacts: REPROLINT.json / REPROLINT.sarif ----------------
+
+REPROLINT_FIXTURE = (pathlib.Path(__file__).resolve().parent
+                     / "analysis_fixtures" / "rl011_bad")
+FINDING_KEYS = {"rule", "file", "line", "message", "symbol", "severity"}
+
+
+def test_reprolint_json_artifact_schema(tmp_path, capsys):
+    """REPROLINT.json: {"new", "grandfathered", "stale_baseline"} with each
+    finding dict carrying location, identity, and severity — the shape the
+    CI failure annotations parse."""
+    from repro.analysis.cli import main as reprolint
+
+    out = tmp_path / "REPROLINT.json"
+    assert reprolint(["--root", str(REPROLINT_FIXTURE), "--rules", "RL011",
+                      "--json", str(out)]) == 1
+    capsys.readouterr()
+    doc = json.loads(out.read_text())
+    assert set(doc) == {"new", "grandfathered", "stale_baseline"}
+    assert doc["grandfathered"] == [] and doc["stale_baseline"] == []
+    assert len(doc["new"]) == 2
+    for f in doc["new"]:
+        assert set(f) == FINDING_KEYS
+        assert f["rule"] == "RL011" and f["severity"] == "warning"
+        assert isinstance(f["line"], int) and f["line"] > 0
+        assert f["file"].startswith("src/repro/")
+    assert json.loads(json.dumps(doc)) == doc
+
+
+def test_reprolint_sarif_artifact_schema(tmp_path, capsys):
+    """REPROLINT.sarif: minimal valid SARIF 2.1.0 — versioned log, one run,
+    a rule descriptor per registered rule, results indexing into them with
+    the baseline's line-number-free key as the fingerprint."""
+    from repro.analysis.cli import main as reprolint
+    from repro.analysis.core import RULES
+    from repro.analysis.sarif import SARIF_SCHEMA
+
+    out = tmp_path / "REPROLINT.sarif"
+    assert reprolint(["--root", str(REPROLINT_FIXTURE), "--rules", "RL011",
+                      "--sarif", str(out)]) == 1
+    capsys.readouterr()
+    log = json.loads(out.read_text())
+    assert set(log) == {"$schema", "version", "runs"}
+    assert log["$schema"] == SARIF_SCHEMA
+    assert log["version"] == "2.1.0"
+    (run,) = log["runs"]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "reprolint"
+    assert [r["id"] for r in driver["rules"]] == sorted(RULES)
+    for r in driver["rules"]:
+        assert set(r) == {"id", "shortDescription", "defaultConfiguration"}
+        assert r["defaultConfiguration"]["level"] in ("error", "warning",
+                                                      "note")
+    assert len(run["results"]) == 2
+    for res in run["results"]:
+        assert set(res) == {"ruleId", "ruleIndex", "level", "message",
+                            "locations", "partialFingerprints"}
+        assert driver["rules"][res["ruleIndex"]]["id"] == res["ruleId"]
+        (loc,) = res["locations"]
+        region = loc["physicalLocation"]["region"]
+        assert region["startLine"] > 0
+        key = res["partialFingerprints"]["reprolintKey/v1"].split("\t")
+        assert key[0] == res["ruleId"]
+        assert key[1] == loc["physicalLocation"]["artifactLocation"]["uri"]
+
+
+def test_reprolint_baseline_is_byte_stable(tmp_path):
+    """--update-baseline determinism: shuffled, duplicated findings with
+    control characters in messages serialize to identical bytes, and the
+    sanitized keys still match on re-read."""
+    from repro.analysis.baseline import (load_baseline, save_baseline,
+                                         split_findings)
+    from repro.analysis.core import Finding
+
+    def mk(rule, file, line, msg, sym):
+        return Finding(rule=rule, file=file, line=line, message=msg,
+                       symbol=sym)
+
+    findings = [
+        mk("RL008", "src/repro/a.py", 10, "leak\ton a\npath", "A.f"),
+        mk("RL009", "src/repro/b.py", 20, "unlocked write", "B"),
+        mk("RL008", "src/repro/a.py", 99, "leak\ton a\npath", "A.f"),
+    ]  # third is a line-moved duplicate of the first: same identity
+    p1, p2 = tmp_path / "b1", tmp_path / "b2"
+    save_baseline(p1, findings)
+    save_baseline(p2, list(reversed(findings)))
+    assert p1.read_bytes() == p2.read_bytes()
+
+    baseline = load_baseline(p1)
+    assert len(baseline) == 2                    # deduped, sanitized
+    assert all("\t" not in part and "\n" not in part
+               for key in baseline for part in key)
+    new, old, stale = split_findings(findings, baseline)
+    assert new == [] and stale == []             # control chars still match
+    assert len(old) == 3

@@ -185,3 +185,30 @@ def test_engine_config_validation(setup):
     with pytest.raises(ValueError, match="kv_pages"):
         EngineConfig(cache=ccfg, kv_paged=True, capacity=64, page_size=8,
                      kv_pages=4)
+
+
+def test_debug_invariants_env_checks_pool_each_tick(setup, monkeypatch):
+    """REPRO_DEBUG_INVARIANTS=1 makes the scheduler run the pool's
+    ref-count/free-list audit after every tick — the cheap way to catch a
+    page-accounting regression at the step it happens instead of at drain.
+    The flag is sampled at construction; without it the hook stays cold."""
+    cfg, params = setup
+    monkeypatch.setenv("REPRO_DEBUG_INVARIANTS", "1")
+    eng = _engine(cfg, params, slots=2, kv_paged=True, page_size=8)
+    sched = ContinuousBatchingScheduler(eng)
+    assert sched._debug_invariants
+    calls = []
+    orig = eng.kv_pool.check_invariants
+    monkeypatch.setattr(eng.kv_pool, "check_invariants",
+                        lambda: (calls.append(1), orig())[-1])
+    for p in _prompts(cfg, 3, seed=9):
+        sched.submit(p, max_new_tokens=4)
+    outs = sched.run()
+    assert len(outs) == 3
+    assert len(calls) >= 3            # at least one audit per decode tick
+    assert eng.kv_pool.pages_in_use == 0
+
+    monkeypatch.delenv("REPRO_DEBUG_INVARIANTS")
+    cold = ContinuousBatchingScheduler(
+        _engine(cfg, params, slots=2, kv_paged=True, page_size=8))
+    assert not cold._debug_invariants
